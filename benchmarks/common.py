@@ -1,0 +1,44 @@
+"""Shared benchmark utilities: timing, CSV emission, layer-dim sources."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def time_jit(fn: Callable, *args, reps: int = 5, warmup: int = 2) -> float:
+    """Median wall seconds per call of a jitted fn on this CPU."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    times = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))
+
+
+def emit(name: str, seconds: float, derived: str = "") -> None:
+    """CSV row: name,us_per_call,derived — the contract of benchmarks.run."""
+    print(f"{name},{seconds * 1e6:.1f},{derived}")
+
+
+def yolov3_20_gemms(input_hw=(608, 608)):
+    """GEMM dims of the first-20-layer YOLOv3 slice (the paper's hw-sweep
+    workload)."""
+    from repro.configs import yolov3
+    from repro.models.cnn import conv_layer_dims
+
+    return conv_layer_dims(yolov3.LAYERS_20, *input_hw)
+
+
+def vgg16_gemms(input_hw=(224, 224)):
+    from repro.configs import vgg16
+    from repro.models.cnn import conv_layer_dims
+
+    return conv_layer_dims(vgg16.LAYERS, *input_hw)

@@ -1,0 +1,63 @@
+"""Beyond-paper: the (arch x shape x mesh) roofline table from dry-run JSONs.
+
+Reads results/dryrun/*.json (written by launch/dryrun.py) and emits one row
+per cell: the three roofline terms, dominant bound, roofline fraction, and
+useful-FLOPs ratio.  ``--markdown`` prints the EXPERIMENTS.md table.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+from benchmarks.common import emit
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+
+def load_cells(results_dir=None, tag=None):
+    cells = []
+    for path in sorted(glob.glob(os.path.join(results_dir or RESULTS, "*.json"))):
+        r = json.load(open(path))
+        parts = os.path.basename(path)[:-5].split("__")
+        r["_tag"] = parts[3] if len(parts) > 3 else ""
+        if tag is not None and r["_tag"] != tag:
+            continue
+        cells.append(r)
+    return cells
+
+
+def run(markdown: bool = False) -> None:
+    cells = load_cells(tag="")
+    if markdown:
+        print("| arch | shape | mesh | compute_s | memory_s | collective_s |"
+              " dominant | frac | useful | GiB/dev |")
+        print("|---|---|---|---|---|---|---|---|---|---|")
+    for r in cells:
+        name = f"{r['arch']}/{r['shape']}/{r.get('mesh', '-')}"
+        if r.get("skipped"):
+            if markdown:
+                print(f"| {r['arch']} | {r['shape']} | {r.get('mesh','-')} |"
+                      f" skipped: {r['reason']} |||||||")
+            else:
+                emit(f"lm/{name}", 0.0, f"skipped:{r['reason']}")
+            continue
+        if "error" in r:
+            emit(f"lm/{name}", 0.0, f"error:{r['error'][:60]}")
+            continue
+        rl = r["roofline"]
+        if markdown:
+            print(f"| {r['arch']} | {r['shape']} | {r['mesh']} |"
+                  f" {rl['compute_s']:.4f} | {rl['memory_s']:.4f} |"
+                  f" {rl['collective_s']:.4f} | {rl['dominant']} |"
+                  f" {rl['roofline_frac']:.3f} | {rl['useful_flops_ratio']:.2f} |"
+                  f" {r['memory']['total_per_device_gib']:.1f} |")
+        else:
+            emit(f"lm/{name}", rl["compute_s"],
+                 f"dominant={rl['dominant']};frac={rl['roofline_frac']:.3f};"
+                 f"useful={rl['useful_flops_ratio']:.2f}")
+
+
+if __name__ == "__main__":
+    run(markdown="--markdown" in sys.argv)

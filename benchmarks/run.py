@@ -1,0 +1,53 @@
+"""Benchmark driver: one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (see benchmarks/common.emit).
+Sections:
+  breakdown          paper §II.B   (GEMM share of inference time)
+  table2_blocksizes  paper Table II (BLIS block tuning, VMEM model)
+  table3_veclen      paper Fig 6    (vector-length scaling)
+  fig_cache_sweep    paper Figs 7-10 (cache x veclen co-design, both algos)
+  table4_ai          paper Table IV (per-layer AI + %peak)
+  winograd_vs_im2col paper §VII     (2.4x / 1.35x / 1.5x claims)
+  lm_roofline        beyond-paper   (assigned-arch dry-run roofline table)
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (
+        breakdown,
+        fig_cache_sweep,
+        lm_roofline,
+        table2_blocksizes,
+        table3_veclen,
+        table4_ai,
+        winograd_vs_im2col,
+    )
+
+    sections = [
+        ("breakdown", breakdown.run),
+        ("table2_blocksizes", table2_blocksizes.run),
+        ("table3_veclen", table3_veclen.run),
+        ("fig_cache_sweep", fig_cache_sweep.run),
+        ("table4_ai", table4_ai.run),
+        ("winograd_vs_im2col", winograd_vs_im2col.run),
+        ("lm_roofline", lm_roofline.run),
+    ]
+    failures = 0
+    for name, fn in sections:
+        print(f"# --- {name} ---")
+        try:
+            fn()
+        except Exception:
+            failures += 1
+            print(f"{name},0.0,ERROR")
+            traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Paper Table IV: per-layer arithmetic intensity + sustained %-of-peak.
+
+Uses the paper's own published (M, N, K) per YOLOv3 layer; computes AI with
+the paper's formula (must match their AI column exactly) and the attainable
+%-of-peak under the v5e roofline via the co-design model.  The paper's
+A64FX % column is included in the derived field for comparison — the
+*ordering* (higher AI -> higher %) must agree even though the machines
+differ.
+"""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.configs.yolov3 import TABLE_IV
+from repro.core.codesign import layer_roofline
+from repro.core.conv_spec import ConvSpec, arithmetic_intensity
+from repro.core.vmem_model import GemmShape, autotune_gemm
+from repro.hw import V5E
+
+
+def run() -> None:
+    ours, papers = [], []
+    for name, m, n, k, ai_paper, pct_paper in TABLE_IV:
+        ai = arithmetic_intensity(m, n, k)
+        _, est = autotune_gemm(GemmShape(m, n, k))
+        ai_crit = V5E.peak_flops_fp32 / V5E.hbm_bandwidth
+        pct = 100.0 * min(1.0, ai / ai_crit) * est.mxu_utilization
+        ours.append(pct)
+        papers.append(pct_paper)
+        emit(f"table4/{name}", est.total_s,
+             f"M={m};N={n};K={k};AI={ai:.1f};paper_AI={ai_paper};"
+             f"v5e_pct_peak={pct:.0f};a64fx_pct_peak={pct_paper}")
+    # rank correlation between our %peak and the paper's (monotone agreement)
+    import numpy as np
+
+    r = np.corrcoef(np.argsort(np.argsort(ours)),
+                    np.argsort(np.argsort(papers)))[0, 1]
+    emit("table4/rank_correlation_vs_paper", 0.0, f"spearman={r:.2f}")
+
+
+if __name__ == "__main__":
+    run()

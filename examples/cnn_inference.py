@@ -1,0 +1,50 @@
+"""End-to-end CNN inference (the paper's workload): YOLOv3-tiny + VGG16
+with per-layer algorithm selection, timed per algorithm path.
+
+  PYTHONPATH=src python examples/cnn_inference.py [--input 416]
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import vgg16, yolov3
+from repro.data import image_batch
+from repro.models.cnn import cnn_forward, conv_layer_dims, init_cnn
+
+
+def bench(name, layers, hw):
+    params = init_cnn(jax.random.PRNGKey(0), layers)
+    x = image_batch(0, 1, *hw)
+    for impl in ("jax", "xla"):
+        fn = jax.jit(lambda p, xx: cnn_forward(p, layers, xx, impl=impl))
+        out = fn(params, x)
+        jax.block_until_ready(out)
+        t0 = time.perf_counter()
+        out = fn(params, x)
+        jax.block_until_ready(out)
+        dt = time.perf_counter() - t0
+        print(f"  {name:12s} impl={impl:4s} out={tuple(out.shape)} {dt*1e3:.1f} ms")
+    dims = conv_layer_dims(layers, *hw)
+    algos = {}
+    for d in dims:
+        key = ("winograd" if d["kernel"] == 3 and d["stride"] == 1 else
+               "direct" if d["kernel"] == 1 else "im2col")
+        algos[key] = algos.get(key, 0) + 1
+    print(f"  {name:12s} conv layers by algorithm: {algos}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--input", type=int, default=224)
+    args = ap.parse_args()
+    hw = (args.input, args.input)
+    print("== YOLOv3-tiny ==")
+    bench("yolov3-tiny", yolov3.TINY_LAYERS, hw)
+    print("== VGG16 ==")
+    bench("vgg16", vgg16.LAYERS, hw)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""End-to-end driver: train a ~100M-param LM for a few hundred steps with
+checkpointing + resume (deliverable (b)).
+
+  PYTHONPATH=src python examples/train_lm.py --steps 300
+
+Uses a scaled llama3.2 config (~100M params) on the synthetic markov
+stream; prints loss every 20 steps (should fall well below ln(vocab)).
+"""
+import argparse
+import dataclasses
+
+from repro import configs
+from repro.configs.base import ShapeSpec
+from repro.optim import AdamWConfig, warmup_cosine
+from repro.train import TrainRunConfig, train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--out", default="/tmp/repro_train_lm")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=256)
+    args = ap.parse_args()
+
+    # ~100M params: llama3.2 family, 8 layers, d=512, vocab 32k.
+    cfg = dataclasses.replace(
+        configs.get_config("llama3.2-1b"),
+        name="llama-100m",
+        num_layers=8,
+        d_model=512,
+        num_heads=8,
+        num_kv_heads=4,
+        d_ff=2048,
+        vocab_size=32000,
+        dtype="float32",
+    )
+    print(f"model: {cfg.param_count()/1e6:.1f}M params")
+    shape = ShapeSpec("train", args.seq_len, args.batch, "train")
+    opt = AdamWConfig(lr=warmup_cosine(3e-4, 50, args.steps))
+    run = TrainRunConfig(steps=args.steps, checkpoint_every=100,
+                         log_every=20, out_dir=args.out)
+    metrics = train(cfg, shape, opt, run)
+    print("final:", metrics)
+
+
+if __name__ == "__main__":
+    main()

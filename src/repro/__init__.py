@@ -1,0 +1,7 @@
+"""repro: TPU-native co-design framework for CNN inference kernels +
+multi-pod JAX training/serving substrate.
+
+Reproduces and extends "Accelerating CNN inference on long vector
+architectures via co-design" (Gupta et al., 2022).
+"""
+__version__ = "1.0.0"

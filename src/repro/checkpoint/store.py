@@ -1,0 +1,183 @@
+"""Fault-tolerant checkpointing: atomic npz shards + JSON manifest.
+
+Write protocol (crash-safe at every point):
+  1. serialize pytrees to   <dir>/tmp.step_N/arrays.npz + manifest.json
+  2. fsync, then atomic rename to <dir>/step_N
+  3. update <dir>/LATEST (write tmp + rename)
+Restore scans LATEST, falls back to the newest complete step dir, and
+verifies the manifest before loading — a torn write can never be loaded.
+``keep_last`` old steps are garbage-collected after a successful write.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+MANIFEST = "manifest.json"
+
+
+_NPZ_NATIVE = set("biufc")  # numpy kinds npz can serialize directly
+
+
+def _flatten(tree) -> Dict[str, Tuple[np.ndarray, str]]:
+    """Returns key -> (array-as-saved, original dtype string).  Dtypes numpy
+    can't serialize (bfloat16, float8 from ml_dtypes) are stored as uint8
+    views and reconstructed from the manifest on restore."""
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        raw = np.asarray(leaf)
+        if raw.ndim:  # ascontiguousarray promotes 0-d to (1,): skip scalars
+            raw = np.ascontiguousarray(raw)
+        dtype_str = str(raw.dtype)
+        if raw.dtype.kind not in _NPZ_NATIVE:
+            raw = raw.reshape(-1).view(np.uint8)
+        flat[key] = (raw, dtype_str)
+    return flat
+
+
+def _unflatten(template, flat: Dict[str, np.ndarray], dtypes: Dict[str, str]):
+    import ml_dtypes  # noqa: F401  (registers bfloat16 et al. with numpy)
+
+    paths_leaves, tdef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for path, leaf in paths_leaves:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        arr = flat[key]
+        dtype = np.dtype(dtypes.get(key, str(arr.dtype)))
+        if arr.dtype == np.uint8 and dtype.kind not in _NPZ_NATIVE:
+            arr = arr.view(dtype)
+        assert arr.size == int(np.prod(leaf.shape) or 1), (
+            f"{key}: {arr.shape} vs {leaf.shape}"
+        )
+        leaves.append(arr.reshape(tuple(leaf.shape)).astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(tdef, leaves)
+
+
+class CheckpointStore:
+    def __init__(self, directory: str, keep_last: int = 3):
+        self.dir = directory
+        self.keep_last = keep_last
+        os.makedirs(directory, exist_ok=True)
+
+    # -- write ---------------------------------------------------------------
+
+    def save(self, step: int, trees: Dict[str, Any],
+             extra: Optional[Dict] = None) -> str:
+        """trees: named pytrees, e.g. {'params': ..., 'opt_state': ...}."""
+        tmp = os.path.join(self.dir, f"tmp.step_{step}")
+        final = os.path.join(self.dir, f"step_{step}")
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+
+        arrays = {}
+        manifest = {"step": step, "trees": {}, "dtypes": {}, "extra": extra or {}}
+        for name, tree in trees.items():
+            flat = _flatten(tree)
+            manifest["trees"][name] = sorted(flat)
+            for k, (v, dtype_str) in flat.items():
+                arrays[f"{name}::{k}"] = v
+                manifest["dtypes"][f"{name}::{k}"] = dtype_str
+        np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+        with open(os.path.join(tmp, MANIFEST), "w") as f:
+            json.dump(manifest, f)
+            f.flush()
+            os.fsync(f.fileno())
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+
+        latest_tmp = os.path.join(self.dir, "LATEST.tmp")
+        with open(latest_tmp, "w") as f:
+            f.write(str(step))
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(latest_tmp, os.path.join(self.dir, "LATEST"))
+        self._gc()
+        return final
+
+    def _gc(self):
+        steps = sorted(self.all_steps())
+        for s in steps[: -self.keep_last] if self.keep_last else []:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s}"), ignore_errors=True)
+
+    # -- read ----------------------------------------------------------------
+
+    def all_steps(self):
+        out = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_"):
+                if os.path.exists(os.path.join(self.dir, name, MANIFEST)):
+                    out.append(int(name.split("_", 1)[1]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        path = os.path.join(self.dir, "LATEST")
+        if os.path.exists(path):
+            try:
+                step = int(open(path).read().strip())
+                if os.path.exists(os.path.join(self.dir, f"step_{step}", MANIFEST)):
+                    return step
+            except ValueError:
+                pass
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, templates: Dict[str, Any],
+                step: Optional[int] = None) -> Tuple[int, Dict[str, Any]]:
+        """Restore named pytrees into the given abstract/concrete templates."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {self.dir}")
+        d = os.path.join(self.dir, f"step_{step}")
+        manifest = json.load(open(os.path.join(d, MANIFEST)))
+        data = np.load(os.path.join(d, "arrays.npz"))
+        dtypes = manifest.get("dtypes", {})
+        out = {}
+        for name, template in templates.items():
+            flat = {k: data[f"{name}::{k}"] for k in manifest["trees"][name]}
+            dts = {k: dtypes.get(f"{name}::{k}", "") for k in flat}
+            out[name] = _unflatten(template, flat, dts)
+        return step, out
+
+
+class AsyncCheckpointWriter:
+    """Snapshot-to-host then write on a background thread; ``wait()`` joins.
+
+    The training loop never blocks on disk: device->host transfer happens
+    synchronously (cheap, required for consistency), serialization +
+    fsync + rename run off-thread.
+    """
+
+    def __init__(self, store: CheckpointStore):
+        self.store = store
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    def save(self, step: int, trees: Dict[str, Any], extra=None):
+        self.wait()
+        host_trees = jax.tree.map(lambda x: np.asarray(x), trees)
+
+        def _write():
+            try:
+                self.store.save(step, host_trees, extra)
+            except BaseException as e:  # surfaced on next wait()
+                self._error = e
+
+        self._thread = threading.Thread(target=_write, daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err

@@ -1,0 +1,135 @@
+"""Architecture registry, reduced smoke variants, and input_specs.
+
+``get_config(name)`` returns the exact assigned full-size config;
+``smoke_config(name)`` a structurally-identical reduced variant for CPU
+tests; ``input_specs(cfg, shape)`` the ShapeDtypeStruct stand-ins for every
+model input of a (arch x shape) cell — weak-type-correct, shardable, no
+device allocation (the dry-run lowers against these).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SHAPES, ModelConfig, ShapeSpec, cell_is_runnable
+
+ARCHS = (
+    "hubert-xlarge",
+    "granite-34b",
+    "qwen1.5-0.5b",
+    "llama3.2-1b",
+    "gemma2-27b",
+    "arctic-480b",
+    "granite-moe-1b-a400m",
+    "internvl2-2b",
+    "recurrentgemma-9b",
+    "xlstm-125m",
+)
+
+_MODULES = {
+    "hubert-xlarge": "hubert_xlarge",
+    "granite-34b": "granite_34b",
+    "qwen1.5-0.5b": "qwen15_05b",
+    "llama3.2-1b": "llama32_1b",
+    "gemma2-27b": "gemma2_27b",
+    "arctic-480b": "arctic_480b",
+    "granite-moe-1b-a400m": "granite_moe_1b",
+    "internvl2-2b": "internvl2_2b",
+    "recurrentgemma-9b": "recurrentgemma_9b",
+    "xlstm-125m": "xlstm_125m",
+}
+
+
+def get_config(name: str) -> ModelConfig:
+    import importlib
+
+    mod = importlib.import_module(f"repro.configs.{_MODULES[name]}")
+    return mod.CONFIG
+
+
+def smoke_config(name: str, seq_len: int = 32) -> ModelConfig:
+    """Reduced config of the same family: small width/layers/experts/vocab,
+    same block pattern and feature flags."""
+    cfg = get_config(name)
+    pat = cfg.layer_pattern
+    num_layers = min(cfg.num_layers, 2 * len(pat) + 1)
+    heads = 4
+    kv = max(1, round(heads * cfg.num_kv_heads / cfg.num_heads))
+    return dataclasses.replace(
+        cfg,
+        name=cfg.name + "-smoke",
+        num_layers=num_layers,
+        d_model=64,
+        num_heads=heads,
+        num_kv_heads=kv,
+        head_dim=16 if cfg.head_dim else 0,
+        d_ff=min(cfg.d_ff, 128),
+        vocab_size=128,
+        num_experts=min(cfg.num_experts, 8),
+        top_k=min(cfg.top_k, 4) if cfg.top_k else 0,
+        moe_dense_ff=min(cfg.moe_dense_ff, 64),
+        d_rnn=64 if cfg.d_rnn else 0,
+        frontend_dim=16 if cfg.frontend_dim else 0,
+        num_patches=4 if cfg.num_patches else 0,
+        local_window=min(cfg.local_window, seq_len // 2),
+        attn_chunked_threshold=cfg.attn_chunked_threshold,
+        dtype="float32",
+    )
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for one (arch x shape) cell.
+
+    train/prefill: full-sequence inputs.  decode: one new token; the KV/state
+    cache specs are derived separately via ``jax.eval_shape`` on init_cache
+    (see launch/dryrun.py) so no memory is allocated.
+    """
+    b, s = shape.global_batch, shape.seq_len
+    f32 = jnp.float32
+    i32 = jnp.int32
+
+    if shape.kind == "decode":
+        return {"tokens": jax.ShapeDtypeStruct((b, 1), i32)}
+
+    specs: Dict[str, jax.ShapeDtypeStruct] = {}
+    if cfg.frontend == "audio_frames":
+        specs["frames"] = jax.ShapeDtypeStruct((b, s, cfg.frontend_dim), f32)
+        if shape.kind == "train":
+            specs["targets"] = jax.ShapeDtypeStruct((b, s), i32)
+            specs["mask"] = jax.ShapeDtypeStruct((b, s), jnp.bool_)
+        return specs
+
+    s_text = s - cfg.num_patches if cfg.frontend == "vision_patches" else s
+    specs["tokens"] = jax.ShapeDtypeStruct((b, s_text), i32)
+    if cfg.frontend == "vision_patches":
+        specs["patch_embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.num_patches, cfg.frontend_dim), f32
+        )
+    if shape.kind == "train":
+        specs["labels"] = jax.ShapeDtypeStruct((b, s_text), i32)
+    return specs
+
+
+def all_cells():
+    """Every (arch, shape) pair with its runnability verdict."""
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        for shape in SHAPES.values():
+            ok, reason = cell_is_runnable(cfg, shape)
+            yield arch, shape.name, ok, reason
+
+
+__all__ = [
+    "ARCHS",
+    "SHAPES",
+    "ModelConfig",
+    "ShapeSpec",
+    "get_config",
+    "smoke_config",
+    "input_specs",
+    "all_cells",
+    "cell_is_runnable",
+]

@@ -1,0 +1,87 @@
+"""YOLOv3 layer tables (the paper's object-detection network).
+
+- LAYERS_20: the first 20 Darknet-53 layers (15 conv + shortcuts), the
+  exact slice the paper uses for its gem5 hardware sweeps (§VI.B).
+- TINY_LAYERS: full YOLOv3-tiny (13 conv), used for the 14x-speedup
+  reproduction (§VI.A) and the quickstart example.
+- TABLE_IV: the paper's published per-layer GEMM dims (M, N, K, AI, %peak)
+  for YOLOv3 at 608x608 — the oracle for benchmarks/table4_ai.py.
+"""
+from repro.models.cnn import CNNLayer
+
+C = CNNLayer
+
+
+def _c(ch, k=3, s=1):
+    return C("conv", out_channels=ch, kernel=k, stride=s, batch_norm=True,
+             activation="leaky")
+
+
+# First 20 layers of Darknet-53 (conv + residual shortcuts).
+LAYERS_20 = (
+    _c(32, 3, 1),            # 0
+    _c(64, 3, 2),            # 1
+    _c(32, 1, 1),            # 2
+    _c(64, 3, 1),            # 3
+    C("shortcut", from_layers=(1,)),   # 4
+    _c(128, 3, 2),           # 5
+    _c(64, 1, 1),            # 6
+    _c(128, 3, 1),           # 7
+    C("shortcut", from_layers=(5,)),   # 8
+    _c(64, 1, 1),            # 9
+    _c(128, 3, 1),           # 10
+    C("shortcut", from_layers=(8,)),   # 11
+    _c(256, 3, 2),           # 12
+    _c(128, 1, 1),           # 13
+    _c(256, 3, 1),           # 14
+    C("shortcut", from_layers=(12,)),  # 15
+    _c(128, 1, 1),           # 16
+    _c(256, 3, 1),           # 17
+    C("shortcut", from_layers=(15,)),  # 18
+    _c(128, 1, 1),           # 19
+)
+
+# Full YOLOv3-tiny.
+TINY_LAYERS = (
+    _c(16), C("maxpool", size=2, stride=2),
+    _c(32), C("maxpool", size=2, stride=2),
+    _c(64), C("maxpool", size=2, stride=2),
+    _c(128), C("maxpool", size=2, stride=2),
+    _c(256), C("maxpool", size=2, stride=2),          # idx 8 = route source
+    _c(512), C("maxpool", size=2, stride=1),
+    _c(1024),                                          # 12
+    _c(256, 1, 1),                                     # 13 = route source
+    _c(512),                                           # 14
+    C("conv", out_channels=255, kernel=1, batch_norm=False,
+      activation="linear"),                            # 15 detection head 1
+    C("route", from_layers=(13,)),                     # 16
+    _c(128, 1, 1),                                     # 17
+    C("upsample", size=2),                             # 18
+    C("route", from_layers=(18, 8)),                   # 19
+    _c(256),                                           # 20
+    C("conv", out_channels=255, kernel=1, batch_norm=False,
+      activation="linear"),                            # 21 detection head 2
+)
+
+INPUT_HW = (608, 608)
+TINY_INPUT_HW = (416, 416)
+NAME = "yolov3"
+
+# Paper Table IV: the 14 discrete YOLOv3 conv-layer GEMMs (M, N, K) with the
+# paper's measured AI and % of A64FX single-core peak.
+TABLE_IV = (
+    ("L1", 32, 369664, 27, 7.32, 46),
+    ("L2", 64, 92416, 288, 26, 72),
+    ("L3", 32, 92416, 64, 11, 50),
+    ("L5", 128, 23104, 576, 52, 77),
+    ("L6", 64, 23104, 128, 21, 70),
+    ("L10", 256, 5776, 1152, 101, 81),
+    ("L11", 128, 5776, 256, 42, 75),
+    ("L38", 256, 1444, 512, 76, 82),
+    ("L44", 1024, 361, 4608, 126, 83),
+    ("L45", 512, 361, 1024, 88, 78),
+    ("L59", 255, 361, 1024, 65, 75),
+    ("L61", 256, 1444, 768, 85, 91),
+    ("L62", 512, 1444, 2304, 162, 83),
+    ("L75", 255, 5776, 256, 63, 75),
+)

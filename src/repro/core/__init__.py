@@ -1,0 +1,25 @@
+"""Core library: the paper's contribution as composable JAX modules.
+
+- conv_spec:  ConvSpec + the per-layer algorithm selector ("no one-size-fits-all")
+- im2col:     im2col + conv-as-GEMM (paper §IV.A)
+- winograd:   F(6x6,3x3) with inter-tile channel parallelism (paper §IV.B)
+- conv2d:     public dispatching conv entry point
+- vmem_model: analytical TPU memory-hierarchy model (the gem5 analogue)
+- codesign:   vector-length / cache-size / lanes co-design sweeps (paper §V/§VI)
+"""
+from repro.core.conv_spec import ConvAlgorithm, ConvSpec, select_algorithm
+from repro.core.conv2d import conv2d, conv2d_reference
+from repro.core.im2col import conv2d_im2col, im2col
+from repro.core.winograd import conv2d_winograd, transform_weights
+
+__all__ = [
+    "ConvAlgorithm",
+    "ConvSpec",
+    "select_algorithm",
+    "conv2d",
+    "conv2d_reference",
+    "conv2d_im2col",
+    "im2col",
+    "conv2d_winograd",
+    "transform_weights",
+]

@@ -1,0 +1,60 @@
+"""Public convolution API with per-layer algorithm dispatch.
+
+``conv2d`` is the single entry point used by the model zoo (models/cnn.py)
+and the examples.  It consults the paper's selector (core/conv_spec.py) and
+routes to direct-GEMM / im2col+GEMM / Winograd, optionally through the
+Pallas kernels (kernels/) when ``impl='pallas'``.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.core.conv_spec import ConvAlgorithm, ConvSpec, select_algorithm
+from repro.core.im2col import conv2d_direct_1x1, conv2d_im2col
+from repro.core.winograd import conv2d_winograd
+
+
+def conv2d(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    spec: ConvSpec,
+    impl: str = "jax",
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """Convolve ``x`` (B,H,W,C) with ``w`` (kh,kw,C,O) per ``spec``.
+
+    impl: 'jax' (pure jnp, the reference path) or 'pallas' (TPU kernels;
+    ``interpret=True`` executes them on CPU for validation).
+    """
+    if spec.algorithm is ConvAlgorithm.AUTO_COST:
+        from repro.core.codesign import select_algorithm_by_cost
+
+        algo = select_algorithm_by_cost(spec, x.shape[1], x.shape[2])
+    else:
+        algo = select_algorithm(spec)
+    if impl == "pallas":
+        # Imported lazily: kernels are optional at import time.
+        from repro.kernels import conv_ops
+
+        return conv_ops.conv2d_pallas(x, w, spec, algo, interpret=interpret)
+    if algo is ConvAlgorithm.DIRECT:
+        return conv2d_direct_1x1(x, w, spec)
+    if algo is ConvAlgorithm.WINOGRAD:
+        return conv2d_winograd(x, w, spec)
+    return conv2d_im2col(x, w, spec)
+
+
+def conv2d_reference(x: jnp.ndarray, w: jnp.ndarray, spec: ConvSpec) -> jnp.ndarray:
+    """XLA's own convolution — the oracle every algorithm is tested against."""
+    import jax
+
+    return jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=spec.stride,
+        padding=[(spec.padding[0], spec.padding[0]), (spec.padding[1], spec.padding[1])],
+        rhs_dilation=spec.dilation,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )

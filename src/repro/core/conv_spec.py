@@ -1,0 +1,96 @@
+"""Convolution specification and per-layer algorithm selection.
+
+This encodes the paper's central "no one-size-fits-all convolution" finding
+(§II.c, §VII): 1x1 kernels run as a direct GEMM, 3x3 stride-1 kernels run
+Winograd F(6x6,3x3), everything else falls back to im2col+GEMM.  The selector
+is a first-class, overridable feature of the framework: every conv layer
+carries a ConvSpec and the dispatcher in core/conv2d.py consults it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Optional, Tuple
+
+
+class ConvAlgorithm(enum.Enum):
+    """Convolution algorithm choices studied by the paper."""
+
+    AUTO = "auto"
+    AUTO_COST = "auto_cost"      # roofline-model-driven selection (beyond
+                                 # paper: v5e eligibility also requires the
+                                 # layer be activation-dominated; see
+                                 # EXPERIMENTS.md §Perf CNN section)
+    DIRECT = "direct"            # 1x1 → plain GEMM (no patch expansion)
+    IM2COL_GEMM = "im2col_gemm"  # generic path (paper §IV.A)
+    WINOGRAD = "winograd"        # F(6x6,3x3), 8x8 tiles (paper §IV.B)
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvSpec:
+    """Static description of one convolutional layer."""
+
+    in_channels: int
+    out_channels: int
+    kernel_size: Tuple[int, int] = (3, 3)
+    stride: Tuple[int, int] = (1, 1)
+    padding: Tuple[int, int] = (1, 1)   # symmetric (ph, pw)
+    dilation: Tuple[int, int] = (1, 1)
+    algorithm: ConvAlgorithm = ConvAlgorithm.AUTO
+
+    @property
+    def kh(self) -> int:
+        return self.kernel_size[0]
+
+    @property
+    def kw(self) -> int:
+        return self.kernel_size[1]
+
+    def out_hw(self, h: int, w: int) -> Tuple[int, int]:
+        """Output spatial dims for an (h, w) input."""
+        ph, pw = self.padding
+        sh, sw = self.stride
+        dh, dw = self.dilation
+        eff_kh = (self.kh - 1) * dh + 1
+        eff_kw = (self.kw - 1) * dw + 1
+        oh = (h + 2 * ph - eff_kh) // sh + 1
+        ow = (w + 2 * pw - eff_kw) // sw + 1
+        return oh, ow
+
+    def gemm_dims(self, h: int, w: int) -> Tuple[int, int, int]:
+        """(M, N, K) of the im2col GEMM for an (h, w) input.
+
+        Matches the paper's formulation: M = n_filters, K = kh*kw*c,
+        N = oh*ow (Table IV uses exactly these).
+        """
+        oh, ow = self.out_hw(h, w)
+        return self.out_channels, oh * ow, self.kh * self.kw * self.in_channels
+
+
+def select_algorithm(spec: ConvSpec) -> ConvAlgorithm:
+    """The paper's per-layer selection rule (§VII.A, §II.c).
+
+    - 1x1, stride 1: the im2col matrix equals the input — run a direct GEMM.
+    - 3x3, stride 1, no dilation: Winograd F(6,3) is 2.4x faster (paper §VII).
+    - 3x3 stride 2: the paper measured Winograd 1.4x *slower* → im2col+GEMM.
+    - everything else: im2col+GEMM.
+    """
+    if spec.algorithm is not ConvAlgorithm.AUTO:
+        return spec.algorithm
+    if spec.kernel_size == (1, 1) and spec.stride == (1, 1):
+        return ConvAlgorithm.DIRECT
+    if (
+        spec.kernel_size == (3, 3)
+        and spec.stride == (1, 1)
+        and spec.dilation == (1, 1)
+    ):
+        return ConvAlgorithm.WINOGRAD
+    return ConvAlgorithm.IM2COL_GEMM
+
+
+def arithmetic_intensity(m: int, n: int, k: int, bytes_per_elem: int = 4) -> float:
+    """AI of a GEMM as defined in the paper (§VI.C):
+
+    AI = 2*M*N*K / (bytes * (M*N + K*N + M*K)).
+    """
+    return (2.0 * m * n * k) / (bytes_per_elem * (m * n + k * n + m * k))

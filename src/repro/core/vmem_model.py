@@ -1,0 +1,174 @@
+"""Analytical TPU memory-hierarchy model for blocked GEMM and Winograd.
+
+This module is the repo's gem5 analogue.  The paper sweeps vector length,
+vector lanes and L2 size in a cycle-accurate simulator; we sweep the TPU
+equivalents — block *width* (lane dim), on-chip parallelism, and VMEM budget —
+in a first-order analytical model grounded in the v5e constants (repro/hw.py).
+
+Model for a Pallas GEMM with grid (N/bn, M/bm, K/bk), K-innermost
+accumulation in a VMEM scratch (our kernels/gemm):
+
+  VMEM working set = 2*(bm*bk + bk*bn)*dtype + bm*bn*4   (double-buffered
+                     A/B blocks + fp32 accumulator)
+  HBM traffic      = M*K*(N/bn) + K*N*(M/bm) + 2*M*N     (A re-read per
+                     column-panel, B re-read per row-panel, C written once;
+                     this is exactly the BLIS traffic equation the paper's
+                     6-loop blocking minimizes)
+  compute time     = 2*Mp*Np*Kp / peak    (padded to HW granularity — the
+                     TPU analogue of partially-filled vectors)
+  startup          = grid_steps * per-step overhead  (the paper's "vector
+                     start-up time" analogue)
+  time             = max(compute, memory) + startup
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Iterable, List, Optional, Tuple
+
+from repro.hw import V5E, ChipSpec
+
+
+def _ceil_to(x: int, q: int) -> int:
+    return -(-x // q) * q
+
+
+@dataclasses.dataclass(frozen=True)
+class GemmShape:
+    m: int
+    n: int
+    k: int
+
+    @property
+    def flops(self) -> int:
+        return 2 * self.m * self.n * self.k
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockConfig:
+    bm: int
+    bn: int
+    bk: int
+
+    def vmem_bytes(self, dtype_bytes: int = 4, double_buffer: bool = True) -> int:
+        buf = 2 if double_buffer else 1
+        return (
+            buf * (self.bm * self.bk + self.bk * self.bn) * dtype_bytes
+            + self.bm * self.bn * 4
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class GemmEstimate:
+    compute_s: float
+    memory_s: float
+    startup_s: float
+    vmem_bytes: int
+    hbm_bytes: int
+    mxu_utilization: float
+
+    @property
+    def total_s(self) -> float:
+        return max(self.compute_s, self.memory_s) + self.startup_s
+
+    @property
+    def bound(self) -> str:
+        return "compute" if self.compute_s >= self.memory_s else "memory"
+
+
+def predict_gemm(
+    shape: GemmShape,
+    block: BlockConfig,
+    hw: ChipSpec = V5E,
+    dtype_bytes: int = 4,
+    lanes: int = 1,
+) -> GemmEstimate:
+    """First-order time prediction for one blocked GEMM on one chip.
+
+    ``lanes`` models extra on-chip parallelism (the paper's vector-lane
+    sweep): peak compute scales, per-step overhead does not shrink — exactly
+    the start-up-latency trade-off the paper observes (§VI.B.c).
+    """
+    mp = _ceil_to(shape.m, max(block.bm, hw.sublanes))
+    np_ = _ceil_to(shape.n, max(block.bn, hw.lane_width))
+    kp = _ceil_to(shape.k, block.bk)
+    peak = (hw.peak_flops_fp32 if dtype_bytes == 4 else hw.peak_flops_bf16) * lanes
+    compute_s = 2.0 * mp * np_ * kp / peak
+    grid = (mp // block.bm) * (np_ // block.bn) * (kp // block.bk)
+    traffic = dtype_bytes * (
+        shape.m * shape.k * (np_ // block.bn)
+        + shape.k * shape.n * (mp // block.bm)
+        + 2 * shape.m * shape.n
+    )
+    return GemmEstimate(
+        compute_s=compute_s,
+        memory_s=traffic / hw.hbm_bandwidth,
+        startup_s=grid * hw.grid_step_overhead_s,
+        vmem_bytes=block.vmem_bytes(dtype_bytes),
+        hbm_bytes=traffic,
+        mxu_utilization=shape.flops / (2.0 * mp * np_ * kp),
+    )
+
+
+def candidate_blocks(
+    vmem_budget: int,
+    hw: ChipSpec = V5E,
+    dtype_bytes: int = 4,
+    bms: Iterable[int] = (8, 16, 32, 64, 128, 256, 512),
+    bns: Iterable[int] = (128, 256, 512, 1024, 2048),
+    bks: Iterable[int] = (128, 256, 512, 1024, 2048),
+) -> List[BlockConfig]:
+    """HW-aligned block configs whose working set fits the VMEM budget."""
+    out = []
+    for bm, bn, bk in itertools.product(bms, bns, bks):
+        cfg = BlockConfig(bm, bn, bk)
+        if cfg.vmem_bytes(dtype_bytes) <= vmem_budget:
+            out.append(cfg)
+    return out
+
+
+def autotune_gemm(
+    shape: GemmShape,
+    hw: ChipSpec = V5E,
+    vmem_budget: Optional[int] = None,
+    dtype_bytes: int = 4,
+    lanes: int = 1,
+) -> Tuple[BlockConfig, GemmEstimate]:
+    """Pick the predicted-fastest block config under a VMEM budget.
+
+    This is the BLIS 'block size tuning' step (paper Table II) with VMEM in
+    the role of L2.
+    """
+    budget = vmem_budget if vmem_budget is not None else hw.vmem_bytes
+    best: Tuple[Optional[BlockConfig], Optional[GemmEstimate]] = (None, None)
+    for cfg in candidate_blocks(budget, hw, dtype_bytes):
+        # Don't bother with blocks bigger than the (padded) problem.
+        if cfg.bm > _ceil_to(shape.m, hw.sublanes) * 2:
+            continue
+        if cfg.bn > _ceil_to(shape.n, hw.lane_width) * 2:
+            continue
+        if cfg.bk > _ceil_to(shape.k, 128) * 2:
+            continue
+        est = predict_gemm(shape, cfg, hw, dtype_bytes, lanes)
+        if best[1] is None or est.total_s < best[1].total_s:
+            best = (cfg, est)
+    assert best[0] is not None, "no feasible block config under VMEM budget"
+    return best  # type: ignore[return-value]
+
+
+def winograd_traffic_bytes(
+    oh: int, ow: int, cin: int, cout: int, batch: int = 1, dtype_bytes: int = 4
+) -> int:
+    """HBM traffic of the winograd pipeline (input/V/M/output + U once).
+
+    Winograd's working set per stage is smaller than im2col's K-panel —
+    the reason the paper finds it needs less cache (§VII.B).
+    """
+    nth, ntw = -(-oh // 6), -(-ow // 6)
+    tiles = batch * nth * ntw
+    x_bytes = tiles * 64 * cin            # overlapping 8x8 reads
+    v_bytes = 2 * tiles * 64 * cin        # V write + read
+    u_bytes = 64 * cin * cout             # pre-transformed weights, read once
+    m_bytes = 2 * tiles * 64 * cout       # M write + read
+    y_bytes = tiles * 36 * cout           # output write
+    return dtype_bytes * (x_bytes + v_bytes + u_bytes + m_bytes + y_bytes)

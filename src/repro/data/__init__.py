@@ -1,0 +1,2 @@
+from repro.data.tokens import batch_for, markov_tokens
+from repro.data.images import image_batch

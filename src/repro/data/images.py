@@ -1,0 +1,19 @@
+"""Synthetic image pipeline for the CNN examples/benchmarks."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def image_batch(step: int, batch: int, h: int, w: int, channels: int = 3,
+                seed: int = 0) -> jnp.ndarray:
+    key = jax.random.fold_in(jax.random.PRNGKey(seed), step)
+    # Smooth structured images (sum of low-frequency waves + noise).
+    k1, k2 = jax.random.split(key)
+    yy = jnp.linspace(0, 6.28, h)[None, :, None, None]
+    xx = jnp.linspace(0, 6.28, w)[None, None, :, None]
+    phase = jax.random.uniform(k1, (batch, 1, 1, channels), maxval=6.28)
+    img = jnp.sin(yy + phase) * jnp.cos(2 * xx - phase)
+    return (img + 0.1 * jax.random.normal(k2, (batch, h, w, channels))).astype(
+        jnp.float32
+    )

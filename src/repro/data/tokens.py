@@ -1,0 +1,69 @@
+"""Deterministic, shardable synthetic data pipeline.
+
+Batches are pure functions of (seed, step): every host can regenerate any
+step's data independently — exactly the property elastic restart needs (no
+data-loader state in checkpoints beyond the step counter).
+
+The token stream has learnable structure (a noisy affine Markov chain over
+the vocab) so end-to-end training demonstrably reduces loss.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeSpec
+
+
+def _key(seed: int, step: int, tag: int = 0):
+    return jax.random.fold_in(jax.random.fold_in(jax.random.PRNGKey(seed), step), tag)
+
+
+def markov_tokens(key, batch: int, seq: int, vocab: int,
+                  noise: float = 0.2) -> jnp.ndarray:
+    """tokens[t+1] = (a*tokens[t] + c) % vocab with prob 1-noise."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    a, c = 7, 31
+    t0 = jax.random.randint(k1, (batch,), 0, vocab)
+    flips = jax.random.bernoulli(k2, noise, (batch, seq))
+    rand = jax.random.randint(k3, (batch, seq), 0, vocab)
+
+    def step(tok, inp):
+        flip, rnd = inp
+        nxt = jnp.where(flip, rnd, (a * tok + c) % vocab)
+        return nxt, nxt
+
+    _, toks = jax.lax.scan(step, t0, (flips.T, rand.T))
+    return toks.T.astype(jnp.int32)  # (batch, seq)
+
+
+def batch_for(cfg: ModelConfig, shape: ShapeSpec, step: int,
+              seed: int = 0) -> Dict[str, jnp.ndarray]:
+    """Materialize one global batch matching configs.input_specs."""
+    b, s = shape.global_batch, shape.seq_len
+
+    if shape.kind == "decode":
+        return {"tokens": jax.random.randint(_key(seed, step), (b, 1), 0,
+                                             cfg.vocab_size, jnp.int32)}
+
+    if cfg.frontend == "audio_frames":
+        k1, k2, k3 = jax.random.split(_key(seed, step), 3)
+        out = {"frames": jax.random.normal(k1, (b, s, cfg.frontend_dim), jnp.float32)}
+        if shape.kind == "train":
+            out["targets"] = jax.random.randint(k2, (b, s), 0, cfg.vocab_size,
+                                                jnp.int32)
+            out["mask"] = jax.random.bernoulli(k3, 0.08, (b, s))
+        return out
+
+    s_text = s - cfg.num_patches if cfg.frontend == "vision_patches" else s
+    stream = markov_tokens(_key(seed, step), b, s_text + 1, cfg.vocab_size)
+    out = {"tokens": stream[:, :-1]}
+    if cfg.frontend == "vision_patches":
+        out["patch_embeds"] = jax.random.normal(
+            _key(seed, step, 1), (b, cfg.num_patches, cfg.frontend_dim), jnp.float32
+        )
+    if shape.kind == "train":
+        out["labels"] = stream[:, 1:]
+    return out

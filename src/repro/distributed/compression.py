@@ -1,0 +1,74 @@
+"""int8 error-feedback gradient compression for the DP all-reduce.
+
+The classic bandwidth trick for data-parallel training over slow links
+(here: the cross-pod DCN hop of the multi-pod mesh): quantize grads to
+int8 (per-tensor block scales), exchange the int8 payload + scales
+(all_gather — 4x less wire traffic than fp32 ring all-reduce), sum the
+dequantized shards locally, and carry the quantization residual into the
+next step (error feedback keeps the scheme unbiased over time).
+
+Used inside shard_map over the DP axis; convergence is validated in
+tests/test_distributed.py on a toy problem.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x: jnp.ndarray, block: int = 256) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    flat = x.reshape(-1)
+    pad = (-flat.shape[0]) % block
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, block)
+    scale = jnp.max(jnp.abs(blocks), axis=1) / 127.0
+    q = jnp.clip(jnp.round(blocks / jnp.maximum(scale, 1e-12)[:, None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray, shape) -> jnp.ndarray:
+    flat = (q.astype(jnp.float32) * scale[:, None]).reshape(-1)
+    n = 1
+    for s in shape:
+        n *= s
+    return flat[:n].reshape(shape)
+
+
+def compressed_allreduce_mean(
+    grad: jnp.ndarray,
+    error: jnp.ndarray,
+    axis_name: str,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Error-feedback int8 mean-all-reduce over ``axis_name``.
+
+    Returns (averaged_grad, new_error).  Call inside shard_map/psum scope.
+    """
+    n = jax.lax.psum(1, axis_name)
+    corrected = grad + error
+    q, scale = quantize_int8(corrected)
+    local_deq = dequantize_int8(q, scale, grad.shape)
+    new_error = corrected - local_deq
+    # The wire payload is the int8 tensor + fp32 block scales.
+    q_all = jax.lax.all_gather(q, axis_name)          # (n, blocks, 256) int8
+    s_all = jax.lax.all_gather(scale, axis_name)      # (n, blocks) fp32
+    summed = jnp.einsum(
+        "nbk,nb->bk", q_all.astype(jnp.float32), s_all
+    ).reshape(-1)
+    size = 1
+    for s in grad.shape:
+        size *= s
+    mean = summed[:size].reshape(grad.shape) / n
+    return mean, new_error
+
+
+def compression_ratio(shape, block: int = 256) -> float:
+    """Wire bytes fp32 / wire bytes (int8 + scales)."""
+    n = 1
+    for s in shape:
+        n *= s
+    blocks = -(-n // block)
+    return (4.0 * n) / (1.0 * blocks * block + 4.0 * blocks)

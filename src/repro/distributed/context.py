@@ -1,0 +1,119 @@
+"""Process-wide mesh context for mesh-agnostic models.
+
+Models annotate activations with *named* axis hints via ``shard_hint``;
+the hints only take effect when a launcher (dryrun/train/serve) has
+installed a mesh with ``use_mesh``.  Axis names absent from the installed
+mesh are dropped, so the same model code runs on 1 CPU device, a
+single-pod (data, model) mesh, or the multi-pod (pod, data, model) mesh.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Sequence, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+def set_mesh(mesh: Optional[Mesh]) -> None:
+    _state.mesh = mesh
+
+
+def get_mesh() -> Optional[Mesh]:
+    return getattr(_state, "mesh", None)
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Mesh):
+    prev = get_mesh()
+    set_mesh(mesh)
+    try:
+        with mesh:
+            yield mesh
+    finally:
+        set_mesh(prev)
+
+
+AxisHint = Union[None, str, Sequence[str]]
+
+
+def _resolve(axis: AxisHint, names) -> Union[None, str, tuple]:
+    if axis is None:
+        return None
+    if isinstance(axis, str):
+        return axis if axis in names else None
+    present = tuple(a for a in axis if a in names)
+    return present if len(present) > 1 else (present[0] if present else None)
+
+
+def set_axis_mode(mode: str) -> None:
+    """'default', 'dp_only', or 'dp_seq'.
+
+    dp_only: pure data parallelism — the TP axis joins the batch axes and
+    model-dim hints are dropped (small archs, batch >= device count).
+    dp_seq: data x sequence (context) parallelism — batch over the DP axes,
+    the sequence dim over the freed 'model' axis (small-arch prefill, where
+    batch < device count would leave the model axis idle)."""
+    _state.axis_mode = mode
+
+
+def get_axis_mode() -> str:
+    return getattr(_state, "axis_mode", "default")
+
+
+def largest_divisible_subset(dim: int, axes, sizes) -> tuple:
+    """Longest prefix-preferring subset of ``axes`` whose size product
+    divides ``dim`` (greedy: keep an axis if divisibility still holds)."""
+    kept = []
+    prod = 1
+    for a in axes:
+        if dim % (prod * sizes[a]) == 0:
+            kept.append(a)
+            prod *= sizes[a]
+    return tuple(kept)
+
+
+def shard_hint(x: jax.Array, *axes: AxisHint) -> jax.Array:
+    """Constrain ``x``'s sharding if a mesh is installed; no-op otherwise.
+
+    Each positional arg names the mesh axis (or tuple of axes) for the
+    corresponding array dim; trailing dims default to unsharded.  Axis
+    groups shrink to their largest subset that divides the dim (so batch=32
+    over 256 devices still shards 16-way instead of replicating).
+    """
+    mesh = get_mesh()
+    if mesh is None:
+        return x
+    mode = get_axis_mode()
+    if mode == "dp_only":
+        axes = tuple(
+            (("pod", "data", "model") if (a == BATCH or a == ("pod", "data"))
+             else None if a == MODEL else a)
+            for a in axes
+        )
+    elif mode == "dp_seq":
+        axes = tuple(None if a == MODEL else a for a in axes)
+        # Sequence dim (dim 1 of activation hints) rides the model axis.
+        if len(axes) >= 3 and axes[1] is None:
+            axes = axes[:1] + ("model",) + axes[2:]
+    names = set(mesh.axis_names)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    fixed = []
+    for dim, entry in zip(x.shape, axes):
+        entry = _resolve(entry, names)
+        if entry is None:
+            fixed.append(None)
+            continue
+        ax = (entry,) if isinstance(entry, str) else tuple(entry)
+        kept = largest_divisible_subset(dim, ax, sizes)
+        fixed.append(kept if len(kept) > 1 else (kept[0] if kept else None))
+    spec = P(*fixed)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# Conventional axis groupings used across the model zoo.
+BATCH = ("pod", "data")   # DP axes
+MODEL = "model"           # TP axis

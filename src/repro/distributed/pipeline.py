@@ -1,0 +1,103 @@
+"""Pipeline parallelism: GPipe-style microbatch schedule via shard_map +
+lax.ppermute over a 'stage' mesh axis.
+
+Opt-in layer: the default dry-run mesh uses (pod, data, model), but the
+launcher can dedicate an axis (typically 'pod' or part of 'data') as the
+stage axis for deep models.  Each stage holds its slice of the stacked
+layer params; activations flow stage->stage by collective-permute, with
+the classic (n_micro + n_stages - 1)-tick bubble schedule.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+
+def gpipe_spmd(stage_fn: Callable, axis_name: str, n_stages: int,
+               n_micro: int) -> Callable:
+    """Build the per-device SPMD body running inside shard_map.
+
+    stage_fn(stage_params, x) -> y: one stage's compute on one microbatch.
+    The wrapped fn takes (stage_params, microbatches (n_micro, mb, ...)) and
+    returns the pipeline output (n_micro, mb, ...), valid on the LAST stage
+    (earlier stages return zeros — callers read the last stage's shard).
+    """
+
+    def run(stage_params, micro):
+        stage = jax.lax.axis_index(axis_name)
+        mb_shape = micro.shape[1:]
+        total = n_micro + n_stages - 1
+        perm = [(i, i + 1) for i in range(n_stages - 1)]
+
+        def tick(carry, t):
+            recv, outs = carry
+            # Stage 0 injects microbatch t (when in range); others consume recv.
+            idx = jnp.clip(t, 0, n_micro - 1)
+            x_in = jnp.where(stage == 0, micro[idx], recv)
+            y = stage_fn(stage_params, x_in)
+            # Collect at the last stage: output for microbatch t-(S-1).
+            out_idx = jnp.clip(t - (n_stages - 1), 0, n_micro - 1)
+            valid = (stage == n_stages - 1) & (t - (n_stages - 1) >= 0)
+            cur = jax.lax.dynamic_index_in_dim(outs, out_idx, 0,
+                                               keepdims=False)
+            outs = jax.lax.dynamic_update_index_in_dim(
+                outs, jnp.where(valid, y, cur), out_idx, 0
+            )
+            recv_next = jax.lax.ppermute(y, axis_name, perm)
+            return (recv_next, outs), None
+
+        # Mark the carries as device-varying over the stage axis (each stage
+        # holds different values), required under shard_map's vma tracking.
+        outs0 = jax.lax.pvary(
+            jnp.zeros((n_micro,) + mb_shape, micro.dtype), (axis_name,)
+        )
+        recv0 = jax.lax.pvary(jnp.zeros(mb_shape, micro.dtype), (axis_name,))
+        (_, outs), _ = jax.lax.scan(tick, (recv0, outs0), jnp.arange(total))
+        return outs
+
+    return run
+
+
+def pipeline_forward(
+    mesh: Mesh,
+    stage_fn: Callable,
+    stacked_params,
+    x: jnp.ndarray,
+    n_micro: int,
+    stage_axis: str = "stage",
+) -> jnp.ndarray:
+    """Run x (batch, ...) through n_stages pipeline stages on ``mesh``.
+
+    stacked_params: pytree with leading dim n_stages (stage s's params live
+    on stage s's devices via sharding on ``stage_axis``).
+    """
+    n_stages = mesh.shape[stage_axis]
+    assert x.shape[0] % n_micro == 0
+    micro = x.reshape(n_micro, x.shape[0] // n_micro, *x.shape[1:])
+
+    def spmd(params, mb):
+        # Inside shard_map the stacked dim is 1 per device; drop it.
+        local = jax.tree.map(lambda p: p[0], params)
+        run = gpipe_spmd(stage_fn, stage_axis, n_stages, n_micro)
+        out = run(local, mb)
+        # Broadcast the last stage's result to all stages so the output
+        # spec can be replicated over the stage axis.
+        last = jax.lax.psum(
+            jnp.where(jax.lax.axis_index(stage_axis) == n_stages - 1, out, 0.0),
+            stage_axis,
+        )
+        return last
+
+    fn = shard_map(
+        spmd,
+        mesh=mesh,
+        in_specs=(P(stage_axis), P()),
+        out_specs=P(),
+    )
+    out = fn(stacked_params, micro)
+    return out.reshape(x.shape[0], *out.shape[2:])

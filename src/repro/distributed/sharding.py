@@ -1,0 +1,227 @@
+"""Partition rules: param-path regex -> PartitionSpec, plus ZeRO sharding
+of optimizer state across the DP axes.
+
+Megatron-style TP on the 'model' axis:
+  - column-parallel up-projections (wq/wk/wv, w_gate, w_up) shard the output
+    feature dim; row-parallel down-projections (wo, w_down) shard the input
+    dim -> one psum per block.
+  - vocab-parallel embeddings/head shard the vocab dim.
+  - MoE expert banks shard experts over the DP axes (EP) x features over
+    'model' (TP) — the arctic-480b memory plan (DESIGN.md §5).
+Optimizer moments additionally shard over ('pod','data') where divisible
+(ZeRO): see ``zero_spec``.
+"""
+from __future__ import annotations
+
+import re
+from typing import Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+DP = ("pod", "data")
+TP = "model"
+
+# (regex over the flattened param path, spec builder).  Paths look like
+# 'period/0:attn/mixer/wq' or 'tail/1:local/mlp/w_down'.
+_RULES: Sequence[Tuple[str, Tuple]] = (
+    (r"embed/table$",            (TP, None)),        # vocab-parallel
+    (r"head$",                   (None, TP)),
+    (r"frontend_proj$",          (None, TP)),
+    (r"mixer/w[qkv]$",           (None, TP)),        # column-parallel
+    (r"mixer/b[qkv]$",           (TP,)),
+    (r"mixer/wo$",               (TP, None)),        # row-parallel
+    (r"(mlp|dense_mlp)/w_(gate|up)$", (None, TP)),
+    (r"(mlp|dense_mlp)/b_up$",   (TP,)),
+    (r"(mlp|dense_mlp)/w_down$", (TP, None)),
+    (r"(mlp|dense_mlp)/b_down$", (None,)),
+    (r"moe/router$",             (None, None)),
+    (r"moe/w_(gate|up)$",        (DP, None, TP)),    # EP x TP
+    (r"moe/w_down$",             (DP, TP, None)),
+    (r"mixer/w_(y|gate)$",       (None, TP)),        # rglru branches
+    (r"mixer/w_out$",            (TP, None)),
+    (r"mixer/conv_w$",           (None, TP)),
+    (r"mixer/conv_b$",           (TP,)),
+    (r"mixer/w_[ax]$",           (None, TP)),
+    (r"mixer/b_[ax]$",           (TP,)),
+    (r"mixer/lam$",              (TP,)),
+    (r"mixer/w_up$",             (None, TP)),        # mlstm up (d, 2d)
+    (r"mixer/w_down$",           (TP, None)),
+    (r"mixer/w_[if]$",           (None, None)),      # tiny per-head gates
+    (r"mixer/b_[if]$",           (None,)),
+    (r"mixer/w_in$",             (None, TP)),        # slstm
+    (r"mixer/b_in$",             (TP,)),
+    (r"mixer/r$",                (None, None, None)),
+    (r"mixer/out_norm$",         (None,)),
+    (r"(norm1|norm2|post_norm1|post_norm2|final_norm)$", (None,)),
+)
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+
+
+def spec_for_path(path_str: str, stacked: bool) -> P:
+    """PartitionSpec for one param; ``stacked`` prepends the scan dim."""
+    for pat, spec in _RULES:
+        if re.search(pat, path_str):
+            full = ((None,) + tuple(spec)) if stacked else tuple(spec)
+            return P(*full)
+    return P()  # replicate by default (scalars, unmatched leaves)
+
+
+def _filter_axes(spec: P, mesh: Mesh) -> P:
+    names = set(mesh.axis_names)
+
+    def fix(entry):
+        if entry is None:
+            return None
+        if isinstance(entry, str):
+            return entry if entry in names else None
+        kept = tuple(a for a in entry if a in names)
+        return kept if len(kept) > 1 else (kept[0] if kept else None)
+
+    return P(*(fix(e) for e in spec))
+
+
+def _divisible(shape, spec: P, mesh: Mesh) -> bool:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    for dim, entry in zip(shape, spec):
+        if entry is None:
+            continue
+        axes = (entry,) if isinstance(entry, str) else tuple(entry)
+        need = int(np.prod([sizes[a] for a in axes]))
+        if dim % need != 0:
+            return False
+    return True
+
+
+def param_sharding(params, mesh: Mesh):
+    """NamedSharding pytree for a param pytree (stacked 'period' subtrees
+    get the leading scan dim unsharded)."""
+
+    def one(path, leaf):
+        ps = _path_str(path)
+        stacked = ps.startswith("period/")
+        spec = _filter_axes(spec_for_path(ps, stacked), mesh)
+        if not _divisible(leaf.shape, spec, mesh):
+            spec = P()  # fall back to replication rather than mis-shard
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def zero_spec(shape, spec: P, mesh: Mesh, dp_axes=DP) -> P:
+    """Add ZeRO: shard the first free, divisible dim of an optimizer-moment
+    tensor over the DP axes (on top of its param's TP sharding)."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dp = tuple(a for a in dp_axes if a in sizes)
+    if not dp:
+        return spec
+    dp_size = int(np.prod([sizes[a] for a in dp]))
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    # Already DP-sharded somewhere (e.g. MoE expert banks)?  Nothing to add.
+    used = set()
+    for e in entries:
+        for a in ((e,) if isinstance(e, str) else (e or ())):
+            used.add(a)
+    if used & set(dp):
+        return spec
+    for i, (dim, entry) in enumerate(zip(shape, entries)):
+        if entry is None and dim % dp_size == 0:
+            entries[i] = dp if len(dp) > 1 else dp[0]
+            return P(*entries)
+        if entry is not None:
+            axes = (entry,) if isinstance(entry, str) else tuple(entry)
+            tp_size = int(np.prod([sizes[a] for a in axes]))
+            if dim % (tp_size * dp_size) == 0:
+                entries[i] = tuple(dp) + axes
+                return P(*entries)
+    return spec  # nothing divisible: leave as the param spec
+
+
+def opt_state_sharding(opt_state, params, mesh: Mesh, dp_axes=DP, psh=None):
+    """Sharding for AdamWState: step replicated; moments = param spec + ZeRO
+    over ``dp_axes``.
+
+    int8 QTensor moments are always (-1, 256)-blocked, so their block dim
+    shards across DP x TP uniformly.
+    """
+    from repro.optim.quantized_state import QTensor
+
+    psh = psh if psh is not None else param_sharding(params, mesh)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    all_ax = tuple(a for a in ("pod", "data", "model") if a in sizes)
+    total = int(np.prod([sizes[a] for a in all_ax]))
+
+    def build(m_leaf, sh_leaf):
+        if isinstance(m_leaf, QTensor):
+            nblocks = m_leaf.q.shape[0]
+            ax = all_ax if (total and nblocks % total == 0) else ()
+            entry = ax if len(ax) > 1 else (ax[0] if ax else None)
+            return QTensor(
+                NamedSharding(mesh, P(entry, None)),
+                NamedSharding(mesh, P(entry)),
+                m_leaf.shape,
+            )
+        spec = zero_spec(m_leaf.shape, sh_leaf.spec, mesh, dp_axes=dp_axes)
+        if not _divisible(m_leaf.shape, spec, mesh):
+            spec = sh_leaf.spec
+        return NamedSharding(mesh, spec)
+
+    from repro.optim.adamw import AdamWState
+
+    is_q = lambda x: isinstance(x, QTensor)
+    return AdamWState(
+        step=NamedSharding(mesh, P()),
+        m=jax.tree_util.tree_map(build, opt_state.m, psh, is_leaf=is_q),
+        v=jax.tree_util.tree_map(build, opt_state.v, psh, is_leaf=is_q),
+    )
+
+
+def batch_sharding(batch, mesh: Mesh):
+    """Inputs shard their leading (batch) dim over the largest subset of
+    the DP axes that divides it."""
+    from repro.distributed.context import largest_divisible_subset
+
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dp = tuple(a for a in DP if a in sizes)
+
+    def one(leaf):
+        if leaf.ndim < 1 or not dp:
+            return NamedSharding(mesh, P())
+        kept = largest_divisible_subset(leaf.shape[0], dp, sizes)
+        if not kept:
+            return NamedSharding(mesh, P())
+        entry = kept if len(kept) > 1 else kept[0]
+        return NamedSharding(mesh, P(*((entry,) + (None,) * (leaf.ndim - 1))))
+
+    return jax.tree_util.tree_map(one, batch)
+
+
+def cache_sharding(cache, mesh: Mesh):
+    """KV/state caches shard batch over DP; kv-heads over model when divisible."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dp = tuple(a for a in DP if a in sizes)
+    spec_dp = dp if len(dp) > 1 else (dp[0] if dp else None)
+    dp_size = int(np.prod([sizes[a] for a in dp])) if dp else 1
+    tp = sizes.get(TP, 1)
+
+    def one(path, leaf):
+        ps = _path_str(path)
+        stacked = ps.startswith("period/")
+        shape = leaf.shape
+        core = shape[1:] if stacked else shape
+        spec = [None] * len(core)
+        # batch dim first; kv-head dim for 4D kv tensors.
+        if len(core) >= 1 and core[0] % max(dp_size, 1) == 0 and dp and core[0] > 1:
+            spec[0] = spec_dp
+        if len(core) == 4 and core[2] % tp == 0:
+            spec[2] = TP  # (B, S, KV, hd)
+        if len(core) == 4 and "c" in ps.rsplit("/", 1)[-1] and core[1] % tp == 0:
+            spec = [spec[0], TP, None, None]  # mlstm C (B,H,hd,hd)
+        full = ([None] + spec) if stacked else spec
+        return NamedSharding(mesh, P(*full))
+
+    return jax.tree_util.tree_map_with_path(one, cache)

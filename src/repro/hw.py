@@ -1,0 +1,48 @@
+"""Target-hardware constants (TPU v5e) used by the co-design model, the
+roofline analysis, and the benchmarks.
+
+This container is CPU-only; v5e is the *target*.  All performance reporting
+derives from these constants + compiled-artifact statistics (see
+roofline/analysis.py), playing the role gem5 plays in the paper.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ChipSpec:
+    name: str = "tpu_v5e"
+    peak_flops_bf16: float = 197e12      # FLOP/s per chip (given)
+    peak_flops_fp32: float = 98.5e12     # MXU fp32 ~ half of bf16
+    hbm_bandwidth: float = 819e9         # B/s per chip (given)
+    hbm_bytes: int = 16 * 1024**3        # 16 GiB HBM
+    ici_link_bandwidth: float = 50e9     # B/s per link (given)
+    ici_links: int = 4                   # 2D torus on v5e: 4 links/chip
+    vmem_bytes: int = 16 * 1024**2       # ~16 MiB VMEM per core (sweepable)
+    mxu_dim: int = 128                   # systolic array is 128x128
+    sublanes: int = 8                    # VREG second-minor granularity
+    lane_width: int = 128                # VREG minor (lane) granularity
+    grid_step_overhead_s: float = 0.3e-6 # per-grid-step issue/DMA overhead
+
+
+V5E = ChipSpec()
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshSpec:
+    """A logical device mesh + its physical wiring for collective modeling."""
+
+    shape: tuple
+    axes: tuple
+
+    @property
+    def num_chips(self) -> int:
+        n = 1
+        for s in self.shape:
+            n *= s
+        return n
+
+
+SINGLE_POD = MeshSpec(shape=(16, 16), axes=("data", "model"))
+MULTI_POD = MeshSpec(shape=(2, 16, 16), axes=("pod", "data", "model"))

@@ -1,0 +1,50 @@
+"""Kernel-level dispatcher used by core.conv2d(impl='pallas').
+
+Routes per the paper's selector: 1x1 -> blocked GEMM (direct), 3x3 stride-1
+-> Winograd kernels, everything else -> fused im2col+GEMM kernel.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.core.conv_spec import ConvAlgorithm, ConvSpec
+
+
+def conv2d_pallas(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    spec: ConvSpec,
+    algo: ConvAlgorithm,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """x (B,H,W,C), w (kh,kw,C,O) -> (B,OH,OW,O) via Pallas kernels."""
+    import jax
+
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+
+    if algo is ConvAlgorithm.DIRECT:
+        from repro.kernels.gemm import blocked_matmul
+
+        b, h, ww, c = x.shape
+        sh, sw = spec.stride
+        if (sh, sw) != (1, 1):
+            x = x[:, ::sh, ::sw, :]
+        oh, ow = x.shape[1], x.shape[2]
+        out = blocked_matmul(
+            x.reshape(b * oh * ow, c),
+            w.reshape(c, spec.out_channels),
+            interpret=interpret,
+        )
+        return out.reshape(b, oh, ow, spec.out_channels)
+
+    if algo is ConvAlgorithm.WINOGRAD:
+        from repro.kernels.winograd import conv2d_winograd_pallas
+
+        return conv2d_winograd_pallas(x, w, spec, interpret=interpret)
+
+    from repro.kernels.im2col_gemm import conv2d_pallas_im2col
+
+    return conv2d_pallas_im2col(x, w, spec, interpret=interpret)

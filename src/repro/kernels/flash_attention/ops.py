@@ -1,0 +1,54 @@
+"""Jitted wrapper: pads sequence to block multiples, flattens heads."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+
+
+def _ceil_to(x: int, q: int) -> int:
+    return -(-x // q) * q
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "logit_cap", "bq", "bk", "interpret"),
+)
+def flash_attention(
+    q: jnp.ndarray,  # (B, S, H, hd)
+    k: jnp.ndarray,  # (B, Sk, H, hd)  (kv heads already broadcast)
+    v: jnp.ndarray,
+    causal: bool = True,
+    window: int = 0,
+    logit_cap: float = 0.0,
+    bq: int = 256,
+    bk: int = 256,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    b, s, h, hd = q.shape
+    sk = k.shape[1]
+    bq = min(bq, _ceil_to(s, 8))
+    bk = min(bk, _ceil_to(sk, 8))
+    sp, skp = _ceil_to(s, bq), _ceil_to(sk, bk)
+    # Padding: query pad rows produce garbage rows we slice off; key pad
+    # columns are masked out because their positions exceed every real
+    # query position under the causal mask, or are handled by -inf rows
+    # having zero weight after the window mask.  For the non-causal,
+    # no-window case we mask pads via a window the size of the real Sk.
+    if not causal and window <= 0 and skp != sk:
+        window = sk + s  # wide enough to keep all real keys, drop none
+    qf = jnp.pad(q, ((0, 0), (0, sp - s), (0, 0), (0, 0)))
+    kf = jnp.pad(k, ((0, 0), (0, skp - sk), (0, 0), (0, 0)))
+    vf = jnp.pad(v, ((0, 0), (0, skp - sk), (0, 0), (0, 0)))
+    qf = qf.transpose(0, 2, 1, 3).reshape(b * h, sp, hd)
+    kf = kf.transpose(0, 2, 1, 3).reshape(b * h, skp, hd)
+    vf = vf.transpose(0, 2, 1, 3).reshape(b * h, skp, hd)
+    out = flash_attention_pallas(
+        qf, kf, vf, bq=bq, bk=bk, causal=causal, window=window,
+        logit_cap=logit_cap, interpret=interpret,
+    )
+    out = out.reshape(b, h, sp, hd).transpose(0, 2, 1, 3)
+    return out[:, :s]

@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the flash-attention kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.3819763e38
+
+
+def attention_ref(q, k, v, causal=True, window=0, logit_cap=0.0):
+    """q (BH, S, hd), k/v (BH, Sk, hd) -> (BH, S, hd), fp32 softmax."""
+    bh, s, hd = q.shape
+    sk = k.shape[1]
+    scores = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / jnp.sqrt(jnp.float32(hd))
+    if logit_cap > 0:
+        scores = jnp.tanh(scores / logit_cap) * logit_cap
+    qp = jnp.arange(s)[:, None]
+    kp = jnp.arange(sk)[None, :]
+    mask = jnp.ones((s, sk), bool)
+    if causal:
+        mask &= kp <= qp
+    if window > 0:
+        mask &= kp > qp - window
+    scores = jnp.where(mask[None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", probs.astype(v.dtype), v,
+                      preferred_element_type=jnp.float32).astype(q.dtype)

@@ -1,0 +1,4 @@
+from repro.kernels.gemm.ops import blocked_matmul, default_block
+from repro.kernels.gemm.ref import matmul_ref
+
+__all__ = ["blocked_matmul", "default_block", "matmul_ref"]

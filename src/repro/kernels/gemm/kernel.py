@@ -1,0 +1,98 @@
+"""Blocked GEMM Pallas kernels — the paper's 3-loop / 6-loop GEMMs on TPU.
+
+The 6-loop BLIS mapping (paper Fig. 3 -> TPU):
+  - j1/i1/k1 cache-blocking loops  -> the pallas grid (nm, nn, nk)
+  - packing of A/B panels          -> implicit HBM->VMEM block copies
+                                      (hardware-tiled, contiguous)
+  - prefetch into L1/L2            -> Pallas software pipelining
+                                      (next block DMA overlaps compute)
+  - micro-kernel (vfmacc chain)    -> one MXU `jnp.dot` per block step,
+                                      fp32 accumulation in VMEM scratch
+  - unroll factor / vector length  -> block shape (bm, bn)
+
+The 3-loop variant (paper Fig. 2) streams the full K panel per output
+block: no K-grid, no accumulator scratch.  The co-design study
+(core/codesign.py) decides which wins for a given shape + VMEM budget —
+reproducing the paper's "optimizations are not portable" finding.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _matmul_kernel_6loop(a_ref, b_ref, c_ref, acc_ref):
+    """Grid (nm, nn, nk), K innermost: accumulate A@B blocks in VMEM."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
+    def _done():
+        c_ref[...] = acc_ref[...].astype(c_ref.dtype)
+
+
+def _matmul_kernel_3loop(a_ref, b_ref, c_ref):
+    """Grid (nm, nn): one full-K panel per output block (paper Fig. 2)."""
+    c_ref[...] = jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    ).astype(c_ref.dtype)
+
+
+def matmul_pallas(
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    bm: int,
+    bn: int,
+    bk: int,
+    variant: str = "6loop",
+    out_dtype=None,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Blocked matmul; dims must already be padded to block multiples."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2 and m % bm == 0 and n % bn == 0 and k % bk == 0
+    out_dtype = out_dtype or a.dtype
+    out_shape = jax.ShapeDtypeStruct((m, n), out_dtype)
+
+    if variant == "3loop":
+        return pl.pallas_call(
+            _matmul_kernel_3loop,
+            grid=(m // bm, n // bn),
+            in_specs=[
+                pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+                pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+            ],
+            out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            out_shape=out_shape,
+            compiler_params=pltpu.CompilerParams(
+                dimension_semantics=("parallel", "parallel")
+            ),
+            interpret=interpret,
+        )(a, b)
+
+    return pl.pallas_call(
+        _matmul_kernel_6loop,
+        grid=(m // bm, n // bn, k // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=out_shape,
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")
+        ),
+        interpret=interpret,
+    )(a, b)

@@ -1,0 +1,69 @@
+"""Jitted public wrapper around the blocked GEMM kernels.
+
+Handles HW-alignment padding (the TPU analogue of the paper's loop-tail /
+`vsetvl` handling: we pad to block multiples instead of predicating) and
+block autotuning via the co-design model when no block is given.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.vmem_model import BlockConfig, GemmShape, autotune_gemm
+from repro.hw import V5E
+from repro.kernels.gemm.kernel import matmul_pallas
+
+
+def _ceil_to(x: int, q: int) -> int:
+    return -(-x // q) * q
+
+
+def default_block(m: int, n: int, k: int, dtype_bytes: int = 4) -> BlockConfig:
+    """Autotuned block for this shape under the v5e VMEM budget, clamped to
+    the (padded) problem so tiny test shapes don't over-pad."""
+    cfg, _ = autotune_gemm(GemmShape(m, n, k), V5E, dtype_bytes=dtype_bytes)
+    bm = min(cfg.bm, _ceil_to(m, 8))
+    bn = min(cfg.bn, _ceil_to(n, 128))
+    bk = min(cfg.bk, _ceil_to(k, 128))
+    return BlockConfig(bm, bn, bk)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block", "variant", "interpret", "out_dtype"),
+)
+def blocked_matmul(
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    block: Optional[Tuple[int, int, int]] = None,
+    variant: str = "6loop",
+    out_dtype=None,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """C = A @ B with BLIS-like VMEM blocking.
+
+    Args:
+      a: (M, K); b: (K, N).
+      block: (bm, bn, bk) or None to autotune (co-design model).
+      variant: '6loop' (K-blocked, VMEM accumulation) or '3loop' (full-K
+        panel per output block).
+    """
+    m, k = a.shape
+    _, n = b.shape
+    if block is None:
+        cfg = default_block(m, n, k, jnp.dtype(a.dtype).itemsize)
+        bm, bn, bk = cfg.bm, cfg.bn, cfg.bk
+    else:
+        bm, bn, bk = block
+    mp, np_, kp = _ceil_to(m, bm), _ceil_to(n, bn), _ceil_to(k, bk)
+    a_p = jnp.pad(a, ((0, mp - m), (0, kp - k))) if (mp, kp) != (m, k) else a
+    b_p = jnp.pad(b, ((0, kp - k), (0, np_ - n))) if (kp, np_) != (k, n) else b
+    if variant == "3loop":
+        bk = kp
+    out = matmul_pallas(
+        a_p, b_p, bm, bn, bk, variant=variant, out_dtype=out_dtype, interpret=interpret
+    )
+    return out[:m, :n]

@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for the blocked GEMM kernels."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def matmul_ref(a: jnp.ndarray, b: jnp.ndarray, out_dtype=None) -> jnp.ndarray:
+    """fp32-accumulated matmul, the semantics the kernels must match."""
+    out = jnp.dot(a, b, preferred_element_type=jnp.float32)
+    return out.astype(out_dtype or a.dtype)

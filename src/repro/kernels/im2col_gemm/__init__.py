@@ -1,0 +1,4 @@
+from repro.kernels.im2col_gemm.ops import conv2d_pallas_im2col, pick_blocks
+from repro.kernels.im2col_gemm.ref import conv2d_ref
+
+__all__ = ["conv2d_pallas_im2col", "pick_blocks", "conv2d_ref"]

@@ -1,0 +1,86 @@
+"""Jitted wrapper for the fused im2col+GEMM conv kernel.
+
+Pads input/weights to HW-aligned block multiples, picks block sizes from the
+co-design model (channel blocks sized so the input slab + accumulator fit
+the VMEM budget), runs the kernel, crops the output.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.conv_spec import ConvSpec
+from repro.hw import V5E
+from repro.kernels.im2col_gemm.kernel import conv2d_im2col_gemm_pallas
+
+
+def _ceil_to(x: int, q: int) -> int:
+    return -(-x // q) * q
+
+
+def pick_blocks(
+    hp: int, wp: int, c: int, o: int, oh: int, ow: int, dtype_bytes: int = 4
+) -> Tuple[int, int, int]:
+    """(toh, bc, bo): biggest channel slab + row tile fitting the VMEM budget.
+
+    This is the conv-kernel instance of the paper's block-size tuning
+    (Table II): the input slab (Hp*Wp*bc) plays the role of the packed B
+    panel, the accumulator (toh*OW*bo) the role of the C block.
+    """
+    budget = V5E.vmem_bytes
+    bc = min(_ceil_to(c, 8), 128)
+    # Shrink the channel slab until it takes at most ~2/3 of VMEM (x2 for
+    # double buffering).
+    while bc > 8 and 2 * hp * wp * bc * dtype_bytes > 2 * budget // 3:
+        bc //= 2
+    bo = min(_ceil_to(o, 128), 256)
+    toh = min(oh, 64)
+    while toh > 8 and toh * ow * bo * 4 > budget // 3:
+        toh //= 2
+    return max(toh, 1), max(bc, 8), bo
+
+
+@functools.partial(
+    jax.jit, static_argnames=("spec", "blocks", "interpret", "out_dtype")
+)
+def conv2d_pallas_im2col(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    spec: ConvSpec,
+    blocks: Optional[Tuple[int, int, int]] = None,
+    out_dtype=None,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Fused-conv entry point: x (B,H,W,C), w (kh,kw,C,O) -> (B,OH,OW,O)."""
+    b, h, ww, c = x.shape
+    kh, kw, _, o = w.shape
+    sh, sw = spec.stride
+    ph, pw = spec.padding
+    oh, ow = spec.out_hw(h, ww)
+
+    toh, bc, bo = blocks or pick_blocks(
+        h + 2 * ph, ww + 2 * pw, c, o, oh, ow, jnp.dtype(x.dtype).itemsize
+    )
+    toh = min(toh, oh)
+    ohp = _ceil_to(oh, toh)
+    cp, op = _ceil_to(c, bc), _ceil_to(o, bo)
+    need_h = (ohp - 1) * sh + kh
+    need_w = (ow - 1) * sw + kw
+    x_p = jnp.pad(
+        x,
+        (
+            (0, 0),
+            (ph, max(need_h - h - ph, 0)),
+            (pw, max(need_w - ww - pw, 0)),
+            (0, cp - c),
+        ),
+    )
+    w_p = jnp.pad(w, ((0, 0), (0, 0), (0, cp - c), (0, op - o)))
+    out = conv2d_im2col_gemm_pallas(
+        x_p, w_p, sh, sw, oh, ow, toh, bc, bo,
+        out_dtype=out_dtype, interpret=interpret,
+    )
+    return out[:, :oh, :, :o]

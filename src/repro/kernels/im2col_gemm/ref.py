@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the fused im2col+GEMM conv kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.conv_spec import ConvSpec
+from repro.core.im2col import conv2d_im2col
+
+
+def conv2d_ref(x: jnp.ndarray, w: jnp.ndarray, spec: ConvSpec) -> jnp.ndarray:
+    """The unfused reference: explicit im2col then GEMM (core/im2col.py)."""
+    return conv2d_im2col(x, w, spec)

@@ -1,0 +1,3 @@
+from repro.kernels.winograd.ops import conv2d_winograd_pallas, pick_blocks
+
+__all__ = ["conv2d_winograd_pallas", "pick_blocks"]

@@ -1,0 +1,128 @@
+"""Winograd F(6x6,3x3) Pallas kernels with inter-tile channel parallelism.
+
+TPU realization of the paper's §IV.B scheme.  The paper packs one 8x8 tile
+from each of VL/16 channels along the vector register; here every transform
+operand keeps a trailing (tiles, channels) block so the 128-lane axis is
+filled by channels and the 8 sublanes by tiles — the same inter-tile
+parallelization, expressed through BlockSpec tiling instead of `svcntw`.
+
+Three kernels, mirroring the paper's decomposition:
+  input_transform:   V = B^T d B     (per tile x channel)
+  tuple_multiply:    M[p] = V[p] @ U[p]  batched GEMM over the 64 positions
+                     (the paper's "increase the number of blocks for GEMM")
+  output_transform:  Y = A^T M A     (per tile x out-channel)
+The weight transform U = G g G^T runs offline (ops.py), as in the paper.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.winograd import AT, BT
+
+
+def _input_transform_kernel(bt_ref, d_ref, v_ref):
+    """d (bt, 8, 8, bc) -> V (8, 8, bt, bc): channels stay minormost."""
+    bt_mat = bt_ref[...]
+    d = d_ref[...].astype(jnp.float32)
+    # V[a,b,t,c] = sum_ij BT[a,i] d[t,i,j,c] BT[b,j]
+    v = jnp.einsum("ai,bj,tijc->abtc", bt_mat, bt_mat, d)
+    v_ref[...] = v.astype(v_ref.dtype)
+
+
+def _tuple_multiply_kernel(v_ref, u_ref, m_ref, acc_ref):
+    """Grid (64, nt, no, nc): per-position GEMM with K(=cin) accumulation."""
+
+    @pl.when(pl.program_id(3) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        v_ref[0], u_ref[0], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(pl.program_id(3) == pl.num_programs(3) - 1)
+    def _done():
+        m_ref[...] = acc_ref[...].astype(m_ref.dtype)[None]
+
+
+def _output_transform_kernel(at_ref, m_ref, y_ref):
+    """M (8, 8, bt, bo) -> Y (bt, 6, 6, bo)."""
+    at_mat = at_ref[...]
+    m = m_ref[...].astype(jnp.float32)
+    y = jnp.einsum("xa,yb,abto->txyo", at_mat, at_mat, m)
+    y_ref[...] = y.astype(y_ref.dtype)
+
+
+def input_transform_pallas(
+    tiles: jnp.ndarray, bt: int, bc: int, interpret: bool = False
+) -> jnp.ndarray:
+    """(T, 8, 8, C) -> (8, 8, T, C); T % bt == 0, C % bc == 0."""
+    t, _, _, c = tiles.shape
+    return pl.pallas_call(
+        _input_transform_kernel,
+        grid=(t // bt, c // bc),
+        in_specs=[
+            pl.BlockSpec((8, 8), lambda i, j: (0, 0)),
+            pl.BlockSpec((bt, 8, 8, bc), lambda i, j: (i, 0, 0, j)),
+        ],
+        out_specs=pl.BlockSpec((8, 8, bt, bc), lambda i, j: (0, 0, i, j)),
+        out_shape=jax.ShapeDtypeStruct((8, 8, t, c), tiles.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel")
+        ),
+        interpret=interpret,
+    )(jnp.asarray(BT, jnp.float32), tiles)
+
+
+def tuple_multiply_pallas(
+    v: jnp.ndarray,  # (64, T, C)
+    u: jnp.ndarray,  # (64, C, O)
+    bt: int,
+    bc: int,
+    bo: int,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Batched per-position GEMM -> M (64, T, O)."""
+    p, t, c = v.shape
+    _, _, o = u.shape
+    return pl.pallas_call(
+        _tuple_multiply_kernel,
+        grid=(p, t // bt, o // bo, c // bc),
+        in_specs=[
+            pl.BlockSpec((1, bt, bc), lambda pp, i, j, k: (pp, i, k)),
+            pl.BlockSpec((1, bc, bo), lambda pp, i, j, k: (pp, k, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bt, bo), lambda pp, i, j, k: (pp, i, j)),
+        out_shape=jax.ShapeDtypeStruct((p, t, o), v.dtype),
+        scratch_shapes=[pltpu.VMEM((bt, bo), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel", "arbitrary")
+        ),
+        interpret=interpret,
+    )(v, u)
+
+
+def output_transform_pallas(
+    m: jnp.ndarray, bt: int, bo: int, interpret: bool = False
+) -> jnp.ndarray:
+    """(8, 8, T, O) -> (T, 6, 6, O)."""
+    _, _, t, o = m.shape
+    return pl.pallas_call(
+        _output_transform_kernel,
+        grid=(t // bt, o // bo),
+        in_specs=[
+            pl.BlockSpec((6, 8), lambda i, j: (0, 0)),
+            pl.BlockSpec((8, 8, bt, bo), lambda i, j: (0, 0, i, j)),
+        ],
+        out_specs=pl.BlockSpec((bt, 6, 6, bo), lambda i, j: (i, 0, 0, j)),
+        out_shape=jax.ShapeDtypeStruct((t, 6, 6, o), m.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel")
+        ),
+        interpret=interpret,
+    )(jnp.asarray(AT, jnp.float32), m)

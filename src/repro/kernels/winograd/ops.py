@@ -1,0 +1,84 @@
+"""Jitted end-to-end Winograd conv on the Pallas kernels.
+
+Pipeline (paper §IV.B):  tile -> input transform -> tuple multiply ->
+output transform -> untile.  The overlapping 8x8 tile extraction and the
+offline weight transform are plain XLA data-movement ops; the three
+compute stages run as Pallas kernels with channels-on-lanes blocking.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.conv_spec import ConvSpec
+from repro.core.winograd import OUT_TILE, TILE, _tile_input, transform_weights
+from repro.hw import V5E
+
+
+def _ceil_to(x: int, q: int) -> int:
+    return -(-x // q) * q
+
+
+def pick_blocks(t: int, c: int, o: int) -> Tuple[int, int, int]:
+    """(bt, bc, bo) aligned to (sublane, lane) granularity, VMEM-bounded."""
+    bt = min(_ceil_to(t, 8), 256)
+    bc = min(_ceil_to(c, 128), 512)
+    bo = min(_ceil_to(o, 128), 512)
+    # input-transform block: bt*8*8*bc*4 bytes x2 buffers must fit VMEM.
+    while bt > 8 and 2 * bt * 64 * bc * 4 > V5E.vmem_bytes // 2:
+        bt //= 2
+    return bt, bc, bo
+
+
+@functools.partial(
+    jax.jit, static_argnames=("spec", "blocks", "interpret", "pretransformed")
+)
+def conv2d_winograd_pallas(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    spec: ConvSpec,
+    blocks: Optional[Tuple[int, int, int]] = None,
+    pretransformed: bool = False,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """x (B,H,W,C), w (3,3,C,O) [or (8,8,C,O) pretransformed] -> (B,OH,OW,O)."""
+    from repro.kernels.winograd.kernel import (
+        input_transform_pallas,
+        output_transform_pallas,
+        tuple_multiply_pallas,
+    )
+
+    assert spec.kernel_size == (3, 3) and spec.stride == (1, 1)
+    b, h, ww, c = x.shape
+    o = w.shape[-1]
+    oh, ow = spec.out_hw(h, ww)
+    ph, pw = spec.padding
+    if ph or pw:
+        x = jnp.pad(x, ((0, 0), (ph, ph), (pw, pw), (0, 0)))
+
+    tiles, nth, ntw = _tile_input(x, oh, ow)  # (B, nTH, nTW, 8, 8, C)
+    t = b * nth * ntw
+    tiles = tiles.reshape(t, TILE, TILE, c)
+
+    bt, bc, bo = blocks or pick_blocks(t, c, o)
+    tp, cp, op = _ceil_to(t, bt), _ceil_to(c, bc), _ceil_to(o, bo)
+    tiles = jnp.pad(tiles, ((0, tp - t), (0, 0), (0, 0), (0, cp - c)))
+
+    u = w if pretransformed else transform_weights(w, x.dtype)  # (8,8,C,O)
+    u = jnp.pad(u, ((0, 0), (0, 0), (0, cp - c), (0, op - o)))
+
+    v = input_transform_pallas(tiles, bt, bc, interpret=interpret)
+    v = v.reshape(TILE * TILE, tp, cp)
+    m = tuple_multiply_pallas(
+        v, u.reshape(TILE * TILE, cp, op), bt, bc, bo, interpret=interpret
+    )
+    y = output_transform_pallas(
+        m.reshape(TILE, TILE, tp, op), bt, bo, interpret=interpret
+    )  # (tp, 6, 6, op)
+
+    y = y[:t, :, :, :o].reshape(b, nth, ntw, OUT_TILE, OUT_TILE, o)
+    y = y.transpose(0, 1, 3, 2, 4, 5).reshape(b, nth * OUT_TILE, ntw * OUT_TILE, o)
+    return y[:, :oh, :ow, :]

@@ -1,0 +1,351 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+MUST run as its own process: the two lines below force 512 host platform
+devices BEFORE jax initializes (smoke tests and benches must see 1 device,
+so this is never set globally).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --all
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma2-27b \
+      --shape train_4k --mesh multi --overrides '{"remat":"dots"}' --tag rematdots
+
+Per cell this lowers the right step function (train_step / prefill_step /
+serve_step) against ShapeDtypeStruct inputs with full production
+shardings, compiles it, prints memory_analysis + cost_analysis, parses
+collective wire bytes out of the optimized HLO, applies the scan-body
+trip-count correction, and writes results/dryrun/<cell>.json (+ .hlo.gz).
+"""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# ruff: noqa: E402
+import argparse
+import dataclasses
+import gzip
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.configs.base import SHAPES, cell_is_runnable
+from repro.distributed import sharding as shd
+from repro.distributed.context import use_mesh
+from repro.launch.mesh import make_production_mesh
+from repro.models import transformer as tf
+from repro.optim import AdamWConfig, adamw, constant
+from repro.roofline import analysis as ra
+from repro.train import step as step_lib
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+
+
+def _moment_dtype(cfg) -> str:
+    """Memory plan for >5B-param archs: bf16 Adam moments.
+
+    int8 block-quantized moments were the original plan but REFUTED at
+    scale: the flat-block dequant reshape defeats SPMD sharding propagation
+    and XLA replicates the fp32 dequantized tensors (EXPERIMENTS.md §Perf,
+    arctic hillclimb).  bf16 moments shard exactly like their params.
+    int8 remains available (and tested) for single-host training.
+    """
+    return "bfloat16" if cfg.param_count() > 5e9 else "float32"
+
+
+def _abstract(fn, *args):
+    return jax.eval_shape(fn, *args)
+
+
+def _loss_dummy_positions(s):
+    return jnp.arange(s)
+
+
+def build_cell(arch: str, shape_name: str, multi_pod: bool,
+               overrides: dict, body_correction: bool = True) -> dict:
+    shape = SHAPES[shape_name]
+    cfg = configs.get_config(arch)
+    run_overrides = dict(overrides)
+    grad_accum = int(run_overrides.pop("grad_accum", 1))
+    moment_dtype = run_overrides.pop("moment_dtype", _moment_dtype(cfg))
+    sharding_mode = run_overrides.pop("sharding_mode", "default")
+    if run_overrides:
+        cfg = dataclasses.replace(cfg, **run_overrides)
+
+    ok, reason = cell_is_runnable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "skipped": True,
+                "reason": reason}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    opt_cfg = AdamWConfig(lr=constant(1e-4), moment_dtype=moment_dtype)
+
+    t0 = time.monotonic()
+    params_abs = _abstract(lambda: tf.init_params(cfg, jax.random.PRNGKey(0)))
+    batch_abs = configs.input_specs(cfg, shape)
+    if sharding_mode in ("dp_only", "dp_seq"):
+        # Params replicated; batch over the largest divisible axis subset;
+        # dp_seq also shards the sequence dim over 'model' (context
+        # parallelism); ZeRO moments over every axis.
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        from repro.distributed.context import largest_divisible_subset
+
+        p_sh = jax.tree.map(lambda _: NamedSharding(mesh, P()), params_abs)
+        batch_axes = (tuple(mesh.axis_names) if sharding_mode == "dp_only"
+                      else tuple(a for a in mesh.axis_names if a != "model"))
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+        def batch_one(leaf):
+            if leaf.ndim < 1:
+                return NamedSharding(mesh, P())
+            kept = largest_divisible_subset(leaf.shape[0], batch_axes, sizes)
+            entry = kept if len(kept) > 1 else (kept[0] if kept else None)
+            rest = [None] * (leaf.ndim - 1)
+            if (sharding_mode == "dp_seq" and leaf.ndim >= 2
+                    and leaf.shape[1] % sizes.get("model", 1) == 0):
+                rest[0] = "model"  # sequence/context parallel
+            return NamedSharding(mesh, P(entry, *rest))
+
+        b_sh = jax.tree.map(batch_one, batch_abs)
+    else:
+        p_sh = shd.param_sharding(params_abs, mesh)
+        b_sh = shd.batch_sharding(batch_abs, mesh)
+
+    from repro.distributed.context import set_axis_mode
+
+    set_axis_mode(sharding_mode if sharding_mode in ("dp_only", "dp_seq")
+                  else "default")
+    try:
+        return _lower_and_analyze(
+            arch, shape, shape_name, cfg, mesh, chips, multi_pod, opt_cfg,
+            params_abs, p_sh, batch_abs, b_sh, sharding_mode, grad_accum,
+            moment_dtype, overrides, body_correction, t0,
+        )
+    finally:
+        set_axis_mode("default")
+
+
+def _lower_and_analyze(arch, shape, shape_name, cfg, mesh, chips, multi_pod,
+                       opt_cfg, params_abs, p_sh, batch_abs, b_sh,
+                       sharding_mode, grad_accum, moment_dtype, overrides,
+                       body_correction, t0):
+    with use_mesh(mesh):
+        if shape.kind == "train":
+            opt_abs = _abstract(lambda p: adamw.init(opt_cfg, p), params_abs)
+            zero_axes = (tuple(mesh.axis_names)
+                         if sharding_mode in ("dp_only", "dp_seq") else shd.DP)
+            o_sh = shd.opt_state_sharding(opt_abs, params_abs, mesh,
+                                          dp_axes=zero_axes, psh=p_sh)
+            fn = step_lib.make_train_step(cfg, opt_cfg, grad_accum)
+            lowered = jax.jit(
+                fn, in_shardings=(p_sh, o_sh, b_sh),
+                out_shardings=(p_sh, o_sh, None),
+            ).lower(params_abs, opt_abs, batch_abs)
+        elif shape.kind == "prefill":
+            fn = step_lib.make_prefill_step(cfg)
+            lowered = jax.jit(fn, in_shardings=(p_sh, b_sh)).lower(
+                params_abs, batch_abs
+            )
+        else:  # decode
+            cache_abs = _abstract(
+                lambda: tf.init_cache(cfg, shape.global_batch, shape.seq_len)
+            )
+            c_sh = shd.cache_sharding(cache_abs, mesh)
+            tok_sh = shd.batch_sharding(batch_abs, mesh)["tokens"]
+            pos_abs = jax.ShapeDtypeStruct((), jnp.int32)
+            fn = step_lib.make_serve_step(cfg)
+            lowered = jax.jit(
+                fn,
+                in_shardings=(p_sh, c_sh, tok_sh, None),
+                out_shardings=(None, c_sh),
+            ).lower(params_abs, cache_abs, batch_abs["tokens"], pos_abs)
+
+        lower_s = time.monotonic() - t0
+        t1 = time.monotonic()
+        compiled = lowered.compile()
+        compile_s = time.monotonic() - t1
+
+        stats = ra.extract_stats(compiled)
+        mem = compiled.memory_analysis()
+
+        # Scan-body trip-count correction (XLA counts while bodies once).
+        n_periods, pat, tail = tf._period_split(cfg)
+        body = None
+        if body_correction and n_periods > 1:
+            body = _body_stats(cfg, shape, mesh, params_abs, p_sh, grad_accum)
+            stats = stats + body.scale(n_periods - 1)
+
+    report = ra.roofline(stats, chips, ra.model_flops_for(cfg, shape),
+                         dtype=cfg.dtype)
+    result = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": chips,
+        "skipped": False,
+        "lower_s": round(lower_s, 2),
+        "compile_s": round(compile_s, 2),
+        "moment_dtype": moment_dtype if shape.kind == "train" else None,
+        "overrides": overrides,
+        "memory": {
+            "argument_bytes": int(mem.argument_size_in_bytes),
+            "output_bytes": int(mem.output_size_in_bytes),
+            "temp_bytes": int(mem.temp_size_in_bytes),
+            "total_per_device_gib": round(
+                (mem.argument_size_in_bytes + mem.temp_size_in_bytes)
+                / 2**30, 3,
+            ),
+        },
+        "scan_correction_periods": n_periods if n_periods > 1 else 0,
+        "roofline": report.as_dict(),
+    }
+    return result
+
+
+def _body_stats(cfg, shape, mesh, params_abs, p_sh, grad_accum) -> ra.CellStats:
+    """Compile one scan-period body under the same shardings and extract its
+    per-device stats; the caller scales by (n_periods - 1)."""
+    n_periods, pat, tail = tf._period_split(cfg)
+    drop = lambda t: jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape[1:], s.dtype), t
+    )
+    pp_abs = drop(params_abs["period"])
+
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    def drop_sh(t):
+        return jax.tree.map(
+            lambda ns: NamedSharding(mesh, P(*ns.spec[1:])), t,
+            is_leaf=lambda x: isinstance(x, NamedSharding),
+        )
+
+    pp_sh = drop_sh(p_sh["period"])
+    b = shape.global_batch
+    s = shape.seq_len if shape.kind != "decode" else 1
+    if cfg.frontend == "vision_patches" and shape.kind != "decode":
+        s = shape.seq_len  # patches already included in seq budget
+    from repro.distributed.context import get_axis_mode, largest_divisible_subset
+
+    x_abs = jax.ShapeDtypeStruct((b, s, cfg.d_model), jnp.dtype(cfg.dtype))
+    mode = get_axis_mode()
+    if mode == "dp_only":
+        dp = tuple(mesh.axis_names)
+    elif mode == "dp_seq":
+        dp = tuple(a for a in mesh.axis_names if a != "model")
+    else:
+        dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    kept = largest_divisible_subset(b, dp, sizes)
+    entry = kept if len(kept) > 1 else (kept[0] if kept else None)
+    seq_entry = ("model" if mode == "dp_seq"
+                 and s % sizes.get("model", 1) == 0 else None)
+    x_sh = NamedSharding(mesh, P(entry, seq_entry, None))
+    positions = jnp.arange(s)
+
+    def fwd_once(pp, x):
+        for j, bt in enumerate(pat):
+            x, _, _ = tf._apply_layer(cfg, pp[f"{j}:{bt}"], x, bt,
+                                      positions, None, None)
+        return x
+
+    if shape.kind == "train":
+        wrapped = tf._remat_wrap(cfg, fwd_once)
+
+        def body(pp, x):
+            def scalar(pp_, x_):
+                return wrapped(pp_, x_).astype(jnp.float32).sum()
+
+            return jax.grad(scalar, argnums=(0, 1))(pp, x)
+
+    elif shape.kind == "prefill":
+        body = fwd_once
+    else:
+        cache_abs = _abstract(
+            lambda: tf.init_cache(cfg, shape.global_batch, shape.seq_len)
+        )
+        cc_abs = drop(cache_abs["period"]) if "period" in cache_abs else None
+        cc_sh = drop_sh(shd.cache_sharding(cache_abs, mesh)["period"])
+
+        def body(pp, cc, x):
+            ncc = {}
+            for j, bt in enumerate(pat):
+                key = f"{j}:{bt}"
+                x, nc, _ = tf._apply_layer(cfg, pp[key], x, bt, None,
+                                           cc[key], jnp.int32(0))
+                ncc[key] = nc
+            return x, ncc
+
+        compiled = jax.jit(body, in_shardings=(pp_sh, cc_sh, x_sh)).lower(
+            pp_abs, cc_abs, x_abs
+        ).compile()
+        return ra.extract_stats(compiled)
+
+    compiled = jax.jit(body, in_shardings=(pp_sh, x_sh)).lower(
+        pp_abs, x_abs
+    ).compile()
+    return ra.extract_stats(compiled)
+
+
+def run_cell(arch, shape_name, mesh_kind, overrides, tag, out_dir,
+             skip_existing=False, save_hlo=False):
+    multi = mesh_kind == "multi"
+    name = f"{arch}__{shape_name}__{'multi' if multi else 'single'}"
+    if tag:
+        name += f"__{tag}"
+    out_path = os.path.join(out_dir, name + ".json")
+    if skip_existing and os.path.exists(out_path):
+        print(f"[skip existing] {name}")
+        return
+    print(f"[cell] {name} ...", flush=True)
+    t0 = time.monotonic()
+    try:
+        result = build_cell(arch, shape_name, multi, overrides)
+    except Exception as e:
+        result = {"arch": arch, "shape": shape_name, "skipped": False,
+                  "error": f"{type(e).__name__}: {e}",
+                  "traceback": traceback.format_exc()}
+    result["wall_s"] = round(time.monotonic() - t0, 2)
+    os.makedirs(out_dir, exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump(result, f, indent=1)
+    status = ("SKIP: " + result["reason"]) if result.get("skipped") else (
+        "ERROR: " + result["error"] if "error" in result else
+        f"ok compile={result['compile_s']}s dominant="
+        f"{result['roofline']['dominant']} "
+        f"frac={result['roofline']['roofline_frac']:.3f}"
+    )
+    print(f"[done] {name}: {status} ({result['wall_s']}s)", flush=True)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--overrides", default="{}")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--out", default=os.path.abspath(RESULTS_DIR))
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    overrides = json.loads(args.overrides)
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    if args.all:
+        cells = [(a, s) for a in configs.ARCHS for s in SHAPES]
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all required"
+        cells = [(args.arch, args.shape)]
+    for arch, shape_name in cells:
+        for mk in meshes:
+            run_cell(arch, shape_name, mk, overrides, args.tag, args.out,
+                     skip_existing=args.skip_existing)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,25 @@
+"""Production meshes.  Functions, not module constants: importing this
+module never touches jax device state."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """(16,16)=(data,model) single pod; (2,16,16)=(pod,data,model) for two
+    pods = 512 chips."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def make_mesh_for(devices: int, model_parallel: int = 1):
+    """Generic helper for tests/examples on whatever devices exist."""
+    assert devices % model_parallel == 0
+    return jax.make_mesh(
+        (devices // model_parallel, model_parallel),
+        ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2,
+    )

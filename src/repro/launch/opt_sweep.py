@@ -1,0 +1,76 @@
+"""Optimized full sweep: the validated beyond-paper configuration per arch,
+applied to every runnable cell (tag 'opt'), for the §Perf before/after table.
+
+Validated recipe (EXPERIMENTS.md §Perf hillclimbs):
+  - bf16 Adam moments for >5B archs (int8's flat-block dequant reshape
+    defeats SPMD sharding propagation -> replication; bf16 shards like
+    params)                                             [confirmed, 29x mem]
+  - chunked-vocab cross-entropy for vocab >= 49k        [confirmed]
+  - DP-only sharding for <2.5B-param archs (per-layer TP collectives
+    dominate small models)                              [confirmed, 11x coll]
+  - masked scatter-add MoE dispatch with DP sharding    [confirmed]
+  - grad_accum=8 on big-model train cells (HBM fit)     [confirmed]
+  - remat stays 'full' ('dots' refuted: more resident bytes, no compute win)
+"""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# ruff: noqa: E402
+import argparse
+
+from repro import configs
+from repro.configs.base import SHAPES
+from repro.launch.dryrun import RESULTS_DIR, run_cell
+
+SMALL = 2.5e9
+
+
+def overrides_for(arch: str, shape_name: str, chips: int = 256) -> dict:
+    cfg = configs.get_config(arch)
+    shape = SHAPES[shape_name]
+    o: dict = {}
+    big = cfg.param_count() > 5e9
+    small = cfg.param_count() < SMALL
+    kind = shape.kind
+    if kind == "train":
+        o["moment_dtype"] = "bfloat16" if big else "float32"
+        if cfg.vocab_size >= 49152:
+            o["loss_vocab_chunk"] = 1024
+        if big:
+            o["grad_accum"] = 8
+    if cfg.num_experts:
+        o["moe_sharded_dispatch"] = True
+    if small and not cfg.num_experts:
+        # Small dense archs drop TP where it pays (measured, both meshes):
+        #  - train with batch covering every chip -> pure DP (11x less
+        #    collective on llama3.2-1b);
+        #  - prefill -> data x sequence(context) parallelism (1.3-3.5x);
+        #  - decode and batch<chips train keep default TP (dp variants
+        #    REFUTED there: replicated weight reads dominate decode, and
+        #    dp_seq's backward gathers regressed qwen train multi 0.6x).
+        if kind == "train" and shape.global_batch % chips == 0:
+            o["sharding_mode"] = "dp_only"
+        elif kind == "prefill":
+            o["sharding_mode"] = "dp_seq"
+    return o
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default=os.path.abspath(RESULTS_DIR))
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    for arch in configs.ARCHS:
+        for shape_name in SHAPES:
+            for mk in meshes:
+                o = overrides_for(arch, shape_name,
+                                  chips=512 if mk == "multi" else 256)
+                run_cell(arch, shape_name, mk, o, "opt", args.out,
+                         skip_existing=args.skip_existing)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""Training launcher: run any assigned arch (full or smoke-scaled) through
+the fault-tolerant loop on whatever devices exist.
+
+  PYTHONPATH=src python -m repro.launch.train --arch llama3.2-1b --smoke \
+      --steps 200 --seq-len 128 --batch 16 --out /tmp/run1
+
+On a real cluster each host runs this same entry point under
+jax.distributed; here it drives the identical code path on local devices.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+
+import jax
+
+from repro import configs
+from repro.configs.base import ShapeSpec
+from repro.optim import AdamWConfig, warmup_cosine
+from repro.train import TrainRunConfig, train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced smoke config (CPU-friendly)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--warmup", type=int, default=20)
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--checkpoint-every", type=int, default=50)
+    ap.add_argument("--out", default="/tmp/repro_train")
+    ap.add_argument("--moment-dtype", default="float32",
+                    choices=["float32", "bfloat16", "int8"])
+    ap.add_argument("--remat", default=None, choices=[None, "none", "full", "dots"])
+    args = ap.parse_args()
+
+    cfg = (configs.smoke_config(args.arch, seq_len=args.seq_len)
+           if args.smoke else configs.get_config(args.arch))
+    if args.remat:
+        cfg = dataclasses.replace(cfg, remat=args.remat)
+    shape = ShapeSpec("cli", args.seq_len, args.batch, "train")
+    opt = AdamWConfig(
+        lr=warmup_cosine(args.lr, args.warmup, args.steps),
+        moment_dtype=args.moment_dtype,
+    )
+    run = TrainRunConfig(
+        steps=args.steps,
+        checkpoint_every=args.checkpoint_every,
+        out_dir=args.out,
+        grad_accum=args.grad_accum,
+    )
+    print(f"[train] {cfg.name}: {cfg.param_count()/1e6:.1f}M params, "
+          f"{jax.device_count()} device(s)")
+    metrics = train(cfg, shape, opt, run)
+    print(json.dumps(metrics, indent=1))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""Model zoo: heterogeneous transformer stacks (all 10 assigned archs) and
+Darknet-style CNNs built on the core conv dispatcher."""

@@ -1,0 +1,257 @@
+"""Grouped-query attention: naive, chunked (online-softmax), and decode paths.
+
+Supports the assigned-arch feature matrix: GQA/MQA (any kv<=heads), RoPE,
+QKV bias (qwen1.5), attention logit softcap (gemma2), local sliding windows
+(gemma2 alternating, recurrentgemma), encoder (bidirectional) mode (hubert),
+and ring-buffer KV caches for decode.
+
+The chunked path is the sub-quadratic-memory prefill implementation: an
+online-softmax double scan over (q-chunk, kv-chunk) — the pure-JAX analogue
+of flash attention, required for prefill_32k cells.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.context import BATCH, MODEL
+from repro.models.layers import apply_rope, maybe_shard, normal_init, softcap
+
+NEG_INF = -2.3819763e38  # matches XLA's finite mask value
+
+
+def init_attention(rng, d_model, num_heads, num_kv_heads, head_dim, qkv_bias, dtype):
+    ks = jax.random.split(rng, 4)
+    p = {
+        "wq": normal_init(ks[0], (d_model, num_heads * head_dim), dtype=dtype),
+        "wk": normal_init(ks[1], (d_model, num_kv_heads * head_dim), dtype=dtype),
+        "wv": normal_init(ks[2], (d_model, num_kv_heads * head_dim), dtype=dtype),
+        "wo": normal_init(ks[3], (num_heads * head_dim, d_model), dtype=dtype),
+    }
+    if qkv_bias:
+        p["bq"] = jnp.zeros((num_heads * head_dim,), dtype)
+        p["bk"] = jnp.zeros((num_kv_heads * head_dim,), dtype)
+        p["bv"] = jnp.zeros((num_kv_heads * head_dim,), dtype)
+    return p
+
+
+def _qkv(params, x, num_heads, num_kv_heads, head_dim):
+    b, s, _ = x.shape
+    q = x @ params["wq"]
+    k = x @ params["wk"]
+    v = x @ params["wv"]
+    if "bq" in params:
+        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    q = q.reshape(b, s, num_heads, head_dim)
+    k = k.reshape(b, s, num_kv_heads, head_dim)
+    v = v.reshape(b, s, num_kv_heads, head_dim)
+    return q, k, v
+
+
+def _mask(q_pos, k_pos, causal: bool, window: int):
+    """(..., Sq, Sk) boolean validity mask from absolute positions."""
+    m = jnp.ones(jnp.broadcast_shapes(q_pos[..., :, None].shape,
+                                      k_pos[..., None, :].shape), bool)
+    if causal:
+        m &= k_pos[..., None, :] <= q_pos[..., :, None]
+    if window > 0:
+        m &= k_pos[..., None, :] > q_pos[..., :, None] - window
+    return m
+
+
+def _sdpa(q, k, v, mask, logit_cap: float):
+    """q (B,Sq,KV,G,hd), k/v (B,Sk,KV,hd), mask (B?,Sq,Sk) -> (B,Sq,KV,G,hd)."""
+    hd = q.shape[-1]
+    scores = jnp.einsum(
+        "bqkgd,bskd->bkgqs", q, k, preferred_element_type=jnp.float32
+    ) / jnp.sqrt(jnp.float32(hd))
+    scores = softcap(scores, logit_cap)
+    if mask.ndim == 2:
+        mask = mask[None]
+    scores = jnp.where(mask[:, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum(
+        "bkgqs,bskd->bqkgd", probs.astype(v.dtype), v,
+        preferred_element_type=jnp.float32,
+    ).astype(q.dtype)
+
+
+def attention_naive(q, k, v, q_pos, k_pos, causal, window, logit_cap):
+    mask = _mask(q_pos, k_pos, causal, window)
+    return _sdpa(q, k, v, mask, logit_cap)
+
+
+def _largest_divisor(s: int, cap: int) -> int:
+    d = min(cap, s)
+    while s % d:
+        d -= 1
+    return d
+
+
+def attention_chunked(
+    q, k, v, q_pos, k_pos, causal, window, logit_cap,
+    q_chunk: int = 512, kv_chunk: int = 1024,
+):
+    """Online-softmax double scan; O(Sq*kv_chunk) live memory.
+
+    q (B,S,KV,G,hd): S must divide by q_chunk; Sk by kv_chunk (callers pad).
+    """
+    b, sq, kv_h, g, hd = q.shape
+    sk = k.shape[1]
+    nq, nk = sq // q_chunk, sk // kv_chunk
+
+    qc = q.reshape(b, nq, q_chunk, kv_h, g, hd).transpose(1, 0, 2, 3, 4, 5)
+    qp = q_pos.reshape(nq, q_chunk) if q_pos.ndim == 1 else None
+    kc = k.reshape(b, nk, kv_chunk, kv_h, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, nk, kv_chunk, kv_h, hd).transpose(1, 0, 2, 3, 4)
+    kp = k_pos.reshape(nk, kv_chunk)
+
+    def q_step(_, qi):
+        q_blk, qpos_blk = qi  # (B,qc,KV,G,hd), (qc,)
+
+        def kv_step(carry, ki):
+            acc, m_prev, l_prev = carry
+            k_blk, v_blk, kpos_blk = ki
+            s = jnp.einsum(
+                "bqkgd,bskd->bkgqs", q_blk, k_blk,
+                preferred_element_type=jnp.float32,
+            ) / jnp.sqrt(jnp.float32(hd))
+            s = softcap(s, logit_cap)
+            msk = _mask(qpos_blk, kpos_blk, causal, window)  # (qc, kc)
+            s = jnp.where(msk[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m_prev, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m_prev - m_new)
+            l_new = l_prev * alpha + p.sum(-1)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bkgqs,bskd->bkgqd", p.astype(v_blk.dtype), v_blk,
+                preferred_element_type=jnp.float32,
+            )
+            return (acc, m_new, l_new), None
+
+        acc0 = jnp.zeros((b, kv_h, g, q_chunk, hd), jnp.float32)
+        m0 = jnp.full((b, kv_h, g, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, kv_h, g, q_chunk), jnp.float32)
+        (acc, _, l), _ = jax.lax.scan(kv_step, (acc0, m0, l0), (kc, vc, kp))
+        out = acc / jnp.maximum(l[..., None], 1e-37)
+        return None, out.transpose(0, 3, 1, 2, 4).astype(q.dtype)
+
+    _, outs = jax.lax.scan(q_step, None, (qc, qp))  # (nq,B,qc,KV,G,hd)
+    return outs.transpose(1, 0, 2, 3, 4, 5).reshape(b, sq, kv_h, g, hd)
+
+
+def attention_block(
+    params: Dict,
+    x: jnp.ndarray,
+    *,
+    num_heads: int,
+    num_kv_heads: int,
+    head_dim: int,
+    causal: bool,
+    window: int,
+    logit_cap: float,
+    rope_theta: float,
+    positions: Optional[jnp.ndarray] = None,
+    chunked_threshold: int = 8192,
+    cache: Optional[Dict] = None,
+    cache_pos: Optional[jnp.ndarray] = None,
+    fill_capacity: Optional[int] = None,
+) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    """Full attention sub-block: qkv -> rope -> sdpa -> out-proj.
+
+    Training/prefill: cache is None; decode: x is (B, 1, d) and ``cache``
+    holds {'k','v','slot_pos'} ring buffers, ``cache_pos`` the absolute
+    position of the new token.  ``fill_capacity``: prefill mode — also
+    return a cache of the given capacity filled with this call's K/V.
+    """
+    b, s, _ = x.shape
+    g = num_heads // num_kv_heads
+    q, k, v = _qkv(params, x, num_heads, num_kv_heads, head_dim)
+
+    if cache is not None:
+        pos = cache_pos  # scalar int32
+        q = apply_rope(q, jnp.full((b, 1), pos), rope_theta)
+        k = apply_rope(k, jnp.full((b, 1), pos), rope_theta)
+        cap = cache["k"].shape[1]
+        slot = pos % cap
+        new_cache = {
+            "k": jax.lax.dynamic_update_slice(cache["k"], k, (0, slot, 0, 0)),
+            "v": jax.lax.dynamic_update_slice(cache["v"], v, (0, slot, 0, 0)),
+            "slot_pos": jax.lax.dynamic_update_slice(
+                cache["slot_pos"], pos[None].astype(jnp.int32), (slot,)
+            ),
+        }
+        qh = q.reshape(b, 1, num_kv_heads, g, head_dim)
+        k_pos = new_cache["slot_pos"]
+        valid = (k_pos >= 0) & (k_pos <= pos)
+        if window > 0:
+            valid &= k_pos > pos - window
+        mask = valid[None, None, :]  # (1, Sq=1, Sk)
+        out = _sdpa(qh, new_cache["k"], new_cache["v"], mask, logit_cap)
+        out = out.reshape(b, 1, num_heads * head_dim)
+        return out @ params["wo"], new_cache
+
+    if positions is None:
+        positions = jnp.arange(s)
+    q = apply_rope(q, positions[None].repeat(b, 0), rope_theta)
+    k = apply_rope(k, positions[None].repeat(b, 0), rope_theta)
+    qh = q.reshape(b, s, num_kv_heads, g, head_dim)
+    qh = _shard_heads(qh, num_kv_heads, g)
+    if s >= chunked_threshold:
+        qc = _largest_divisor(s, 512)
+        kc = _largest_divisor(s, 1024)
+        out = attention_chunked(qh, k, v, positions, positions, causal,
+                                window, logit_cap, q_chunk=qc, kv_chunk=kc)
+    else:
+        out = attention_naive(qh, k, v, positions, positions, causal, window, logit_cap)
+    out = out.reshape(b, s, num_heads * head_dim)
+
+    new_cache = None
+    if fill_capacity is not None:
+        cap = fill_capacity if window <= 0 else min(window, fill_capacity)
+        if s >= cap:
+            # Keep the last ``cap`` positions (ring layout: slot = pos % cap).
+            keep_k, keep_v = k[:, s - cap:], v[:, s - cap:]
+            keep_pos = positions[s - cap:]
+        else:
+            pad = cap - s
+            keep_k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            keep_v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            keep_pos = jnp.pad(positions, (0, pad), constant_values=-1)
+        slots = jnp.where(keep_pos >= 0, keep_pos % cap, jnp.arange(cap) % cap)
+        new_cache = {
+            "k": jnp.zeros_like(keep_k).at[:, slots].set(keep_k),
+            "v": jnp.zeros_like(keep_v).at[:, slots].set(keep_v),
+            "slot_pos": jnp.full((cap,), -1, jnp.int32).at[slots].set(
+                keep_pos.astype(jnp.int32)
+            ),
+        }
+    return out @ params["wo"], new_cache
+
+
+def _shard_heads(qh, num_kv_heads: int, g: int):
+    """TP hint for (B,S,KV,G,hd): shard whichever of KV / G divides the
+    model axis — MQA archs (kv=1) shard query groups instead of kv heads,
+    avoiding SPMD involuntary full rematerialization."""
+    from repro.distributed.context import get_mesh
+
+    mesh = get_mesh()
+    if mesh is None or "model" not in mesh.axis_names:
+        return qh
+    tp = mesh.shape["model"]
+    if num_kv_heads % tp == 0:
+        return maybe_shard(qh, BATCH, None, MODEL, None, None)
+    if g % tp == 0:
+        return maybe_shard(qh, BATCH, None, None, MODEL, None)
+    return maybe_shard(qh, BATCH, None, None, None, None)
+
+
+def init_kv_cache(batch, capacity, num_kv_heads, head_dim, dtype):
+    return {
+        "k": jnp.zeros((batch, capacity, num_kv_heads, head_dim), dtype),
+        "v": jnp.zeros((batch, capacity, num_kv_heads, head_dim), dtype),
+        "slot_pos": jnp.full((capacity,), -1, jnp.int32),
+    }

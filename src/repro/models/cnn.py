@@ -1,0 +1,189 @@
+"""Darknet-style CNNs (the paper's evaluation vehicle) on the core conv
+dispatcher.
+
+Re-implements the convolutional-layer kernel set the paper vectorizes
+(§II.B): im2col+GEMM / Winograd (via core/conv2d.py), plus fill_cpu,
+copy_cpu, normalize_cpu, add_bias, scale_bias, activate_array — here as
+fused jnp ops.  Layer tables for VGG16 / YOLOv3(-tiny) live in configs/.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.conv_spec import ConvSpec
+from repro.core.conv2d import conv2d
+from repro.models.layers import normal_init
+
+
+@dataclasses.dataclass(frozen=True)
+class CNNLayer:
+    kind: str                      # conv | maxpool | upsample | shortcut | route | avgpool | fc
+    out_channels: int = 0
+    kernel: int = 3
+    stride: int = 1
+    pad: Optional[int] = None      # None -> same-ish (kernel//2)
+    batch_norm: bool = True
+    activation: str = "leaky"      # leaky | relu | linear
+    from_layers: Tuple[int, ...] = ()  # shortcut/route sources (indices)
+    size: int = 2                  # pool size / upsample factor
+
+
+def _conv_spec(layer: CNNLayer, in_ch: int) -> ConvSpec:
+    pad = layer.pad if layer.pad is not None else layer.kernel // 2
+    return ConvSpec(
+        in_channels=in_ch,
+        out_channels=layer.out_channels,
+        kernel_size=(layer.kernel, layer.kernel),
+        stride=(layer.stride, layer.stride),
+        padding=(pad, pad),
+    )
+
+
+# --- The Darknet per-layer kernels (paper §II.B), vectorized -----------------
+
+
+def activate_array(x: jnp.ndarray, kind: str) -> jnp.ndarray:
+    if kind == "leaky":
+        return jnp.where(x > 0, x, 0.1 * x)
+    if kind == "relu":
+        return jnp.maximum(x, 0)
+    return x
+
+
+def normalize(x, mean, var, eps=1e-5):
+    return (x - mean) * jax.lax.rsqrt(var + eps)
+
+
+def scale_bias(x, scales):
+    return x * scales
+
+
+def add_bias(x, bias):
+    return x + bias
+
+
+def batchnorm_inference(x, p):
+    """normalize + scale_bias + add_bias, exactly Darknet's inference path."""
+    return add_bias(scale_bias(normalize(x, p["mean"], p["var"]), p["gamma"]), p["beta"])
+
+
+# --- Model init / forward ----------------------------------------------------
+
+
+def init_cnn(rng, layers: Sequence[CNNLayer], in_channels: int = 3,
+             dtype=jnp.float32, num_classes: int = 0) -> List[Dict]:
+    params: List[Dict] = []
+    ch: List[int] = []
+    cur = in_channels
+    keys = jax.random.split(rng, len(layers) + 1)
+    for i, l in enumerate(layers):
+        p: Dict = {}
+        if l.kind == "conv":
+            spec = _conv_spec(l, cur)
+            p["w"] = normal_init(
+                keys[i], (l.kernel, l.kernel, cur, l.out_channels),
+                scale=1.0 / (l.kernel * max(cur, 1) ** 0.5), dtype=dtype,
+            )
+            if l.batch_norm:
+                p["bn"] = {
+                    "gamma": jnp.ones((l.out_channels,), dtype),
+                    "beta": jnp.zeros((l.out_channels,), dtype),
+                    "mean": jnp.zeros((l.out_channels,), dtype),
+                    "var": jnp.ones((l.out_channels,), dtype),
+                }
+            else:
+                p["b"] = jnp.zeros((l.out_channels,), dtype)
+            cur = l.out_channels
+        elif l.kind == "route":
+            cur = sum(ch[j] for j in l.from_layers)
+        elif l.kind == "fc":
+            p["w"] = normal_init(keys[i], (cur, l.out_channels),
+                                 scale=1.0 / cur ** 0.5, dtype=dtype)
+            p["b"] = jnp.zeros((l.out_channels,), dtype)
+            cur = l.out_channels
+        params.append(p)
+        ch.append(cur)
+    return params
+
+
+def cnn_forward(
+    params: Sequence[Dict],
+    layers: Sequence[CNNLayer],
+    x: jnp.ndarray,
+    impl: str = "jax",
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """x (B,H,W,C) NHWC.  ``impl``: 'jax' | 'pallas' | 'xla' (lax.conv)."""
+    outputs: List[jnp.ndarray] = []
+    cur = x
+    in_ch = x.shape[-1]
+    for i, l in enumerate(layers):
+        p = params[i]
+        if l.kind == "conv":
+            spec = _conv_spec(l, cur.shape[-1])
+            if impl == "xla":
+                from repro.core.conv2d import conv2d_reference
+
+                cur = conv2d_reference(cur, p["w"], spec)
+            else:
+                cur = conv2d(cur, p["w"], spec, impl=impl, interpret=interpret)
+            if l.batch_norm:
+                cur = batchnorm_inference(cur, p["bn"])
+            else:
+                cur = add_bias(cur, p["b"])
+            cur = activate_array(cur, l.activation)
+        elif l.kind == "maxpool":
+            cur = jax.lax.reduce_window(
+                cur, -jnp.inf, jax.lax.max,
+                (1, l.size, l.size, 1),
+                (1, l.stride, l.stride, 1), "SAME",
+            )
+        elif l.kind == "avgpool":
+            cur = cur.mean(axis=(1, 2))
+        elif l.kind == "upsample":
+            cur = jnp.repeat(jnp.repeat(cur, l.size, axis=1), l.size, axis=2)
+        elif l.kind == "shortcut":
+            cur = cur + outputs[l.from_layers[0]]
+        elif l.kind == "route":
+            cur = jnp.concatenate([outputs[j] for j in l.from_layers], axis=-1)
+        elif l.kind == "fc":
+            if cur.ndim == 4:
+                # Global-average pool into the classifier (keeps FC weights
+                # input-resolution independent, as Darknet's avgpool does).
+                cur = cur.mean(axis=(1, 2))
+            cur = activate_array(cur @ p["w"] + p["b"], l.activation)
+        outputs.append(cur)
+    return cur
+
+
+def conv_layer_dims(layers: Sequence[CNNLayer], h: int, w: int, in_ch: int = 3):
+    """Per-conv-layer (M, N, K) GEMM dims — drives the Table IV benchmark."""
+    dims = []
+    ch: List[int] = []
+    cur_ch, cur_h, cur_w = in_ch, h, w
+    for l in layers:
+        if l.kind == "conv":
+            spec = _conv_spec(l, cur_ch)
+            m, n, k = spec.gemm_dims(cur_h, cur_w)
+            oh, ow = spec.out_hw(cur_h, cur_w)
+            dims.append({
+                "layer": len(ch), "M": m, "N": n, "K": k,
+                "kernel": l.kernel, "stride": l.stride,
+                "h": cur_h, "w": cur_w, "cin": cur_ch, "cout": l.out_channels,
+            })
+            cur_ch, cur_h, cur_w = l.out_channels, oh, ow
+        elif l.kind == "maxpool":
+            cur_h, cur_w = -(-cur_h // l.stride), -(-cur_w // l.stride)
+        elif l.kind == "upsample":
+            cur_h, cur_w = cur_h * l.size, cur_w * l.size
+        elif l.kind == "route":
+            cur_ch = sum(ch[j][0] for j in l.from_layers)
+            cur_h, cur_w = ch[l.from_layers[0]][1], ch[l.from_layers[0]][2]
+        elif l.kind == "shortcut":
+            pass
+        ch.append((cur_ch, cur_h, cur_w))
+    return dims

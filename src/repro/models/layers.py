@@ -1,0 +1,132 @@
+"""Shared neural-net building blocks (pure JAX, params = pytrees)."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+from repro.distributed.context import BATCH, MODEL, shard_hint as maybe_shard
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+
+
+def normal_init(rng, shape, scale: float = 0.02, dtype=jnp.float32):
+    return (scale * jax.random.normal(rng, shape)).astype(dtype)
+
+
+def fanin_init(rng, shape, dtype=jnp.float32):
+    scale = 1.0 / np.sqrt(max(shape[0], 1))
+    return (scale * jax.random.normal(rng, shape)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def layer_norm(
+    x: jnp.ndarray, scale: jnp.ndarray, bias: jnp.ndarray, eps: float = 1e-5
+) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (x * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+
+
+def rope_freqs(head_dim: int, theta: float = 10000.0) -> jnp.ndarray:
+    return 1.0 / (
+        theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+    )
+
+
+def apply_rope(
+    x: jnp.ndarray, positions: jnp.ndarray, theta: float = 10000.0
+) -> jnp.ndarray:
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    angles = angles[..., None, :]  # (..., S, 1, hd/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+
+
+def init_mlp(rng, d_model: int, d_ff: int, mlp_type: str, dtype=jnp.float32):
+    ks = jax.random.split(rng, 3)
+    if mlp_type in ("swiglu", "geglu"):
+        return {
+            "w_gate": normal_init(ks[0], (d_model, d_ff), dtype=dtype),
+            "w_up": normal_init(ks[1], (d_model, d_ff), dtype=dtype),
+            "w_down": normal_init(ks[2], (d_ff, d_model), dtype=dtype),
+        }
+    return {
+        "w_up": normal_init(ks[0], (d_model, d_ff), dtype=dtype),
+        "b_up": jnp.zeros((d_ff,), dtype),
+        "w_down": normal_init(ks[1], (d_ff, d_model), dtype=dtype),
+        "b_down": jnp.zeros((d_model,), dtype),
+    }
+
+
+def apply_mlp(params, x: jnp.ndarray, mlp_type: str, act: str = "gelu") -> jnp.ndarray:
+    """Feed-forward block.  The up/down projections are the LM-side targets
+    of the paper's blocked-GEMM co-design (they dominate HLO FLOPs)."""
+    if mlp_type in ("swiglu", "geglu"):
+        act_fn = jax.nn.silu if mlp_type == "swiglu" else jax.nn.gelu
+        gate = act_fn(x @ params["w_gate"])
+        up = x @ params["w_up"]
+        h = maybe_shard(gate * up, BATCH, None, MODEL)
+        return h @ params["w_down"]
+    h = x @ params["w_up"] + params["b_up"]
+    h = jax.nn.gelu(h) if act == "gelu" else jax.nn.relu(h)
+    h = maybe_shard(h, BATCH, None, MODEL)
+    return h @ params["w_down"] + params["b_down"]
+
+
+# ---------------------------------------------------------------------------
+# Embeddings / head
+
+
+def init_embedding(rng, vocab: int, d_model: int, dtype=jnp.float32):
+    return {"table": normal_init(rng, (vocab, d_model), dtype=dtype)}
+
+
+def embed(params, tokens: jnp.ndarray, scale_by_dim: bool = False) -> jnp.ndarray:
+    x = params["table"][tokens]
+    if scale_by_dim:
+        x = x * jnp.asarray(np.sqrt(params["table"].shape[-1]), x.dtype)
+    return x
+
+
+def unembed(params, x: jnp.ndarray, softcap: float = 0.0) -> jnp.ndarray:
+    logits = x @ params["table"].T.astype(x.dtype)
+    if softcap > 0:
+        logits = jnp.tanh(logits / softcap) * softcap
+    return logits
+
+
+def softcap(x: jnp.ndarray, cap: float) -> jnp.ndarray:
+    return jnp.tanh(x / cap) * cap if cap > 0 else x

@@ -1,0 +1,111 @@
+"""Mixture-of-Experts layer: top-k routing, capacity-bounded dispatch,
+expert-parallel GEMMs (+ optional dense residual branch, for arctic).
+
+Expert weights are sharded E-over-data x f-over-model (see
+distributed/sharding.py): the capacity-bounded scatter/gather is the token
+redistribution across the data axis (the all-to-all analogue under XLA
+SPMD), and each expert's GEMM is the paper's blocked-GEMM co-design target.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.context import BATCH, MODEL, shard_hint
+from repro.models.layers import normal_init
+
+
+def init_moe(rng, d_model: int, d_ff: int, num_experts: int, dtype):
+    ks = jax.random.split(rng, 4)
+    return {
+        "router": normal_init(ks[0], (d_model, num_experts), dtype=jnp.float32),
+        "w_gate": normal_init(ks[1], (num_experts, d_model, d_ff), dtype=dtype),
+        "w_up": normal_init(ks[2], (num_experts, d_model, d_ff), dtype=dtype),
+        "w_down": normal_init(ks[3], (num_experts, d_ff, d_model), dtype=dtype),
+    }
+
+
+def apply_moe(
+    params: Dict,
+    x: jnp.ndarray,
+    top_k: int,
+    capacity_factor: float = 1.25,
+    sharded_dispatch: bool = False,
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """x (B, S, d) -> (y (B, S, d), aux losses).
+
+    Capacity-bounded dispatch: token copies beyond an expert's capacity
+    C = ceil(T * k * cf / E) are dropped (their combine weight contributes
+    nothing), matching GShard/Switch semantics.
+
+    ``sharded_dispatch``: scatter-add dispatch with explicit DP sharding
+    hints on the dispatch/combine buffers — keeps the (E, C, d) buffers
+    expert-sharded over the DP axes instead of letting SPMD replicate them
+    (the arctic-480b memory fix; see EXPERIMENTS.md §Perf).
+    """
+    b, s, d = x.shape
+    e = params["router"].shape[-1]
+    t = b * s
+    cap = max(int(t * top_k * capacity_factor / e), top_k)
+
+    tokens = x.reshape(t, d)
+    logits = (tokens.astype(jnp.float32) @ params["router"])  # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_w, gate_idx = jax.lax.top_k(probs, top_k)  # (T, k)
+    gate_w = gate_w / jnp.maximum(gate_w.sum(-1, keepdims=True), 1e-9)
+
+    # Rank of each routed copy within its expert (GShard cumsum trick).
+    flat_idx = gate_idx.reshape(-1)  # (T*k,)
+    onehot = jax.nn.one_hot(flat_idx, e, dtype=jnp.int32)  # (T*k, E)
+    rank = (jnp.cumsum(onehot, axis=0) - 1)
+    rank = jnp.take_along_axis(rank, flat_idx[:, None], axis=1)[:, 0]  # (T*k,)
+    keep = rank < cap
+
+    src = jnp.repeat(tokens, top_k, axis=0)  # (T*k, d)
+    if sharded_dispatch:
+        # Masked scatter-add: dropped copies contribute zeros to slot 0, so
+        # no waste row is needed and E*C stays DP-divisible and shardable.
+        slot = jnp.where(keep, flat_idx * cap + rank, 0)
+        src = src * keep[:, None].astype(src.dtype)
+        src = shard_hint(src, BATCH, None)
+        buf = jnp.zeros((e * cap, d), tokens.dtype).at[slot].add(src)
+        expert_in = buf.reshape(e, cap, d)
+    else:
+        slot = jnp.where(keep, flat_idx * cap + rank, e * cap)
+        buf = jnp.zeros((e * cap + 1, d), tokens.dtype).at[slot].set(src)
+        expert_in = buf[: e * cap].reshape(e, cap, d)
+    expert_in = shard_hint(expert_in, BATCH, None, None)
+
+    # Expert GEMMs (SwiGLU), f sharded on the model axis.
+    gate = jax.nn.silu(
+        jnp.einsum("ecd,edf->ecf", expert_in, params["w_gate"])
+    )
+    up = jnp.einsum("ecd,edf->ecf", expert_in, params["w_up"])
+    hidden = shard_hint(gate * up, BATCH, None, MODEL)
+    expert_out = jnp.einsum("ecf,efd->ecd", hidden, params["w_down"])
+
+    # Combine: gather copies back, weight, and sum over the k choices.
+    out_flat = expert_out.reshape(e * cap, d)
+    if not sharded_dispatch:
+        out_flat = jnp.concatenate(
+            [out_flat, jnp.zeros((1, d), out_flat.dtype)]
+        )
+    gathered = out_flat[slot]  # (T*k, d); dropped copies masked below
+    gathered = gathered * (gate_w.reshape(-1, 1) * keep[:, None]).astype(gathered.dtype)
+    if sharded_dispatch:
+        gathered = shard_hint(gathered, BATCH, None)
+    y = gathered.reshape(t, top_k, d).sum(axis=1).reshape(b, s, d)
+
+    # Switch-style load-balancing aux loss + router z-loss.
+    density = jnp.mean(
+        jax.nn.one_hot(gate_idx[:, 0], e, dtype=jnp.float32), axis=0
+    )
+    mean_prob = jnp.mean(probs, axis=0)
+    aux = {
+        "load_balance": e * jnp.sum(density * mean_prob),
+        "router_z": jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2),
+        "dropped_frac": 1.0 - jnp.mean(keep.astype(jnp.float32)),
+    }
+    return y, aux

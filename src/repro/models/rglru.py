@@ -1,0 +1,129 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma).
+
+Linear diagonal recurrence with input-dependent gates:
+    r_t = sigmoid(W_a x_t + b_a)            recurrence gate
+    i_t = sigmoid(W_x x_t + b_x)            input gate
+    a_t = exp(-c * softplus(Lambda) * r_t)  per-channel decay
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Because the recurrence is linear and diagonal it parallelizes with
+``jax.lax.associative_scan`` over the sequence — the reason this family
+runs the long_500k cells that quadratic attention cannot.
+
+The block wraps the LRU Griffin-style: conv1d(4) temporal mixing on the
+recurrent branch, GeLU gate branch, elementwise merge, output projection.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import normal_init
+
+_C = 8.0  # Griffin's fixed decay temperature
+
+
+def init_rglru_block(rng, d_model: int, d_rnn: int, conv_width: int, dtype):
+    ks = jax.random.split(rng, 7)
+    return {
+        "w_y": normal_init(ks[0], (d_model, d_rnn), dtype=dtype),      # recurrent branch in
+        "w_gate": normal_init(ks[1], (d_model, d_rnn), dtype=dtype),   # gate branch in
+        "w_out": normal_init(ks[2], (d_rnn, d_model), dtype=dtype),
+        "conv_w": normal_init(ks[3], (conv_width, d_rnn), dtype=dtype),
+        "conv_b": jnp.zeros((d_rnn,), dtype),
+        "w_a": normal_init(ks[4], (d_rnn, d_rnn), dtype=dtype),
+        "b_a": jnp.zeros((d_rnn,), dtype),
+        "w_x": normal_init(ks[5], (d_rnn, d_rnn), dtype=dtype),
+        "b_x": jnp.zeros((d_rnn,), dtype),
+        # Lambda init so decay a ~ U[0.9, 0.999] at r=1 (Griffin's init).
+        "lam": jax.random.uniform(ks[6], (d_rnn,), jnp.float32, 0.0, 1.0),
+    }
+
+
+def _causal_conv1d(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                   state: Optional[jnp.ndarray] = None):
+    """Depthwise causal conv over time.  x (B,S,D), w (W,D).
+
+    Training: state None, left-pad with zeros.  Decode: x is (B,1,D) and
+    ``state`` holds the last W-1 inputs (B, W-1, D).
+    """
+    width = w.shape[0]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+        new_state = xp[:, -(width - 1):, :] if width > 1 else None
+    else:
+        xp = jnp.concatenate([state, x], axis=1)
+        new_state = xp[:, -(width - 1):, :]
+    out = sum(
+        xp[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(width)
+    )
+    return out + b, new_state
+
+
+def _rglru_scan(x: jnp.ndarray, a: jnp.ndarray,
+                h0: Optional[jnp.ndarray]) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """h_t = a_t*h_{t-1} + b_t via associative scan.  x,a: (B,S,D) fp32."""
+    b_in = x
+    if h0 is not None:
+        # Fold the carried state in as a virtual step 0.
+        a = jnp.concatenate([jnp.ones_like(a[:, :1]), a], axis=1)
+        b_in = jnp.concatenate([h0[:, None], b_in], axis=1)
+
+    def combine(lhs, rhs):
+        a1, b1 = lhs
+        a2, b2 = rhs
+        return a1 * a2, a2 * b1 + b2
+
+    aa, hh = jax.lax.associative_scan(combine, (a, b_in), axis=1)
+    del aa
+    if h0 is not None:
+        hh = hh[:, 1:]
+    return hh, hh[:, -1]
+
+
+def apply_rglru_block(
+    params: Dict,
+    x: jnp.ndarray,
+    cache: Optional[Dict] = None,
+    fill_state: bool = False,
+) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    """x (B, S, d_model) -> (out, new_cache).
+
+    cache = {'h': (B, d_rnn) fp32, 'conv': (B, W-1, d_rnn)} for decode.
+    ``fill_state``: prefill mode — return the end-of-sequence state as a
+    fresh cache.
+    """
+    y = x @ params["w_y"]
+    gate = jax.nn.gelu(x @ params["w_gate"])
+
+    conv_state = cache["conv"] if cache is not None else None
+    y, new_conv = _causal_conv1d(y, params["conv_w"], params["conv_b"], conv_state)
+
+    yf = y.astype(jnp.float32)
+    r = jax.nn.sigmoid(yf @ params["w_a"].astype(jnp.float32) + params["b_a"])
+    i = jax.nn.sigmoid(yf @ params["w_x"].astype(jnp.float32) + params["b_x"])
+    log_a = -_C * jax.nn.softplus(params["lam"]) * r
+    a = jnp.exp(log_a)
+    gated_in = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * yf)
+
+    h0 = cache["h"] if cache is not None else None
+    if x.shape[1] == 1 and h0 is not None:
+        h = a[:, 0] * h0 + gated_in[:, 0]
+        hs, h_last = h[:, None], h
+    else:
+        hs, h_last = _rglru_scan(gated_in, a, h0)
+
+    out = (hs.astype(x.dtype) * gate) @ params["w_out"]
+    new_cache = None
+    if cache is not None or fill_state:
+        new_cache = {"h": h_last, "conv": new_conv}
+    return out, new_cache
+
+
+def init_rglru_cache(batch: int, d_rnn: int, conv_width: int, dtype):
+    return {
+        "h": jnp.zeros((batch, d_rnn), jnp.float32),
+        "conv": jnp.zeros((batch, conv_width - 1, d_rnn), dtype),
+    }

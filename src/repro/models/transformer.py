@@ -1,0 +1,411 @@
+"""The model assembly: heterogeneous block stacks for all assigned archs.
+
+A model is a cycled ``layer_pattern`` of mixer blocks ('attn', 'local',
+'rglru', 'mlstm', 'slstm'), each followed by an MLP or MoE when the config
+says so.  Full periods of the pattern are stacked and driven by
+``jax.lax.scan`` (compile-time sanity for 88-layer configs); any remainder
+layers are unrolled.  Params are plain pytrees; caches mirror the param
+tree structure for decode.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.context import BATCH, MODEL, shard_hint
+from repro.models import attention as attn_lib
+from repro.models import moe as moe_lib
+from repro.models import rglru as rglru_lib
+from repro.models import xlstm as xlstm_lib
+from repro.models.layers import (
+    embed,
+    init_embedding,
+    normal_init,
+    rms_norm,
+    softcap,
+    unembed,
+)
+
+Params = Dict[str, Any]
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Per-layer init / apply
+
+
+def _init_layer(cfg: ModelConfig, rng, btype: str) -> Params:
+    dt = _dtype(cfg)
+    ks = jax.random.split(rng, 4)
+    p: Params = {"norm1": jnp.zeros((cfg.d_model,), jnp.float32)}
+    if btype in ("attn", "local"):
+        p["mixer"] = attn_lib.init_attention(
+            ks[0], cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+            cfg.resolved_head_dim, cfg.qkv_bias, dt,
+        )
+    elif btype == "rglru":
+        p["mixer"] = rglru_lib.init_rglru_block(
+            ks[0], cfg.d_model, cfg.resolved_d_rnn, cfg.conv_width, dt
+        )
+    elif btype == "mlstm":
+        p["mixer"] = xlstm_lib.init_mlstm_block(ks[0], cfg.d_model, cfg.num_heads, dt)
+    elif btype == "slstm":
+        p["mixer"] = xlstm_lib.init_slstm_block(ks[0], cfg.d_model, cfg.num_heads, dt)
+    else:
+        raise ValueError(f"unknown block type {btype}")
+    if cfg.use_post_norm:
+        p["post_norm1"] = jnp.zeros((cfg.d_model,), jnp.float32)
+
+    if cfg.num_experts:
+        p["norm2"] = jnp.zeros((cfg.d_model,), jnp.float32)
+        p["moe"] = moe_lib.init_moe(ks[1], cfg.d_model, cfg.d_ff, cfg.num_experts, dt)
+        if cfg.moe_dense_ff:
+            from repro.models.layers import init_mlp
+
+            p["dense_mlp"] = init_mlp(ks[2], cfg.d_model, cfg.moe_dense_ff, "swiglu", dt)
+        if cfg.use_post_norm:
+            p["post_norm2"] = jnp.zeros((cfg.d_model,), jnp.float32)
+    elif cfg.d_ff > 0 and cfg.mlp_type != "none":
+        from repro.models.layers import init_mlp
+
+        p["norm2"] = jnp.zeros((cfg.d_model,), jnp.float32)
+        p["mlp"] = init_mlp(ks[1], cfg.d_model, cfg.d_ff, cfg.mlp_type, dt)
+        if cfg.use_post_norm:
+            p["post_norm2"] = jnp.zeros((cfg.d_model,), jnp.float32)
+    return p
+
+
+def _apply_layer(
+    cfg: ModelConfig,
+    p: Params,
+    x: jnp.ndarray,
+    btype: str,
+    positions: Optional[jnp.ndarray],
+    cache: Optional[Params],
+    cache_pos: Optional[jnp.ndarray],
+    fill_capacity: Optional[int] = None,
+) -> Tuple[jnp.ndarray, Optional[Params], Dict[str, jnp.ndarray]]:
+    aux: Dict[str, jnp.ndarray] = {}
+    h = rms_norm(x, p["norm1"], cfg.norm_eps)
+    new_cache = None
+    fill = fill_capacity is not None
+    if btype in ("attn", "local"):
+        out, new_cache = attn_lib.attention_block(
+            p["mixer"], h,
+            num_heads=cfg.num_heads,
+            num_kv_heads=cfg.num_kv_heads,
+            head_dim=cfg.resolved_head_dim,
+            causal=cfg.causal and not cfg.encoder_only,
+            window=cfg.local_window if btype == "local" else 0,
+            logit_cap=cfg.attn_logit_softcap,
+            rope_theta=cfg.rope_theta,
+            positions=positions,
+            chunked_threshold=cfg.attn_chunked_threshold,
+            cache=cache,
+            cache_pos=cache_pos,
+            fill_capacity=fill_capacity,
+        )
+    elif btype == "rglru":
+        out, new_cache = rglru_lib.apply_rglru_block(
+            p["mixer"], h, cache=cache, fill_state=fill
+        )
+    elif btype == "mlstm":
+        out, new_cache = xlstm_lib.apply_mlstm_block(
+            p["mixer"], h, cfg.num_heads, cache=cache, fill_state=fill
+        )
+    else:  # slstm
+        out, new_cache = xlstm_lib.apply_slstm_block(
+            p["mixer"], h, cfg.num_heads, cache=cache, fill_state=fill
+        )
+    if cfg.use_post_norm:
+        out = rms_norm(out, p["post_norm1"], cfg.norm_eps)
+    x = x + out
+    x = shard_hint(x, BATCH, None, None)
+
+    if "moe" in p:
+        h2 = rms_norm(x, p["norm2"], cfg.norm_eps)
+        out2, aux = moe_lib.apply_moe(
+            p["moe"], h2, cfg.top_k, cfg.capacity_factor,
+            sharded_dispatch=cfg.moe_sharded_dispatch,
+        )
+        if "dense_mlp" in p:
+            from repro.models.layers import apply_mlp
+
+            out2 = out2 + apply_mlp(p["dense_mlp"], h2, "swiglu")
+        if cfg.use_post_norm:
+            out2 = rms_norm(out2, p["post_norm2"], cfg.norm_eps)
+        x = x + out2
+    elif "mlp" in p:
+        from repro.models.layers import apply_mlp
+
+        h2 = rms_norm(x, p["norm2"], cfg.norm_eps)
+        out2 = apply_mlp(p["mlp"], h2, cfg.mlp_type)
+        if cfg.use_post_norm:
+            out2 = rms_norm(out2, p["post_norm2"], cfg.norm_eps)
+        x = x + out2
+    x = shard_hint(x, BATCH, None, None)
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# Stack organization: scanned periods + unrolled tail
+
+
+def _period_split(cfg: ModelConfig) -> Tuple[int, Tuple[str, ...], Tuple[str, ...]]:
+    pat = cfg.layer_pattern
+    if not cfg.scan_layers:
+        return 0, (), cfg.pattern_layers
+    n_periods = cfg.num_layers // len(pat)
+    if n_periods < 2:
+        return 0, (), cfg.pattern_layers
+    tail = cfg.pattern_layers[n_periods * len(pat):]
+    return n_periods, pat, tail
+
+
+def init_params(cfg: ModelConfig, rng) -> Params:
+    dt = _dtype(cfg)
+    n_periods, pat, tail = _period_split(cfg)
+    k_embed, k_head, k_body, k_tail, k_front = jax.random.split(rng, 5)
+
+    params: Params = {}
+    if cfg.frontend == "audio_frames":
+        params["frontend_proj"] = normal_init(
+            k_front, (cfg.frontend_dim, cfg.d_model), dtype=dt
+        )
+        params["head"] = normal_init(k_head, (cfg.d_model, cfg.vocab_size), dtype=dt)
+    else:
+        params["embed"] = init_embedding(k_embed, cfg.vocab_size, cfg.d_model, dt)
+        if cfg.frontend == "vision_patches":
+            params["frontend_proj"] = normal_init(
+                k_front, (cfg.frontend_dim, cfg.d_model), dtype=dt
+            )
+        if not cfg.tie_embeddings:
+            params["head"] = normal_init(
+                k_head, (cfg.d_model, cfg.vocab_size), dtype=dt
+            )
+
+    if n_periods:
+        def init_period(key):
+            kk = jax.random.split(key, len(pat))
+            return {
+                f"{j}:{bt}": _init_layer(cfg, kk[j], bt) for j, bt in enumerate(pat)
+            }
+
+        params["period"] = jax.vmap(init_period)(jax.random.split(k_body, n_periods))
+    if tail:
+        kk = jax.random.split(k_tail, len(tail))
+        params["tail"] = {
+            f"{j}:{bt}": _init_layer(cfg, kk[j], bt) for j, bt in enumerate(tail)
+        }
+    params["final_norm"] = jnp.zeros((cfg.d_model,), jnp.float32)
+    return params
+
+
+def _remat_wrap(cfg: ModelConfig, fn):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        )
+    return jax.checkpoint(fn)
+
+
+def _embed_inputs(cfg: ModelConfig, params: Params, batch: Dict) -> jnp.ndarray:
+    dt = _dtype(cfg)
+    if cfg.frontend == "audio_frames":
+        x = batch["frames"].astype(dt) @ params["frontend_proj"]
+    else:
+        x = embed(params["embed"], batch["tokens"], scale_by_dim=cfg.embed_scale)
+        if cfg.frontend == "vision_patches" and "patch_embeds" in batch:
+            patches = batch["patch_embeds"].astype(dt) @ params["frontend_proj"]
+            x = jnp.concatenate([patches, x], axis=1)
+    return shard_hint(x.astype(dt), BATCH, None, None)
+
+
+def forward_hidden(
+    cfg: ModelConfig, params: Params, batch: Dict
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Trunk forward: final-norm hidden states (B, S, d) + aux losses."""
+    x = _embed_inputs(cfg, params, batch)
+    s = x.shape[1]
+    positions = jnp.arange(s)
+    n_periods, pat, tail = _period_split(cfg)
+    aux_total = {"load_balance": jnp.float32(0), "router_z": jnp.float32(0),
+                 "dropped_frac": jnp.float32(0)}
+
+    if n_periods:
+        def period_fn(carry, period_params):
+            xx, aux = carry
+            for j, bt in enumerate(pat):
+                xx, _, a = _apply_layer(
+                    cfg, period_params[f"{j}:{bt}"], xx, bt, positions, None, None
+                )
+                for k in a:
+                    aux = dict(aux, **{k: aux[k] + a[k]})
+            return (xx, aux), None
+
+        (x, aux_total), _ = jax.lax.scan(
+            _remat_wrap(cfg, period_fn), (x, aux_total), params["period"]
+        )
+    for j, bt in enumerate(tail):
+        x, _, a = _apply_layer(cfg, params["tail"][f"{j}:{bt}"], x, bt,
+                               positions, None, None)
+        for k in a:
+            aux_total[k] = aux_total[k] + a[k]
+
+    return rms_norm(x, params["final_norm"], cfg.norm_eps), aux_total
+
+
+def apply_head(cfg: ModelConfig, params: Params, x: jnp.ndarray) -> jnp.ndarray:
+    if "head" in params:
+        logits = x @ params["head"]
+    else:
+        logits = unembed(params["embed"], x)
+    return softcap(logits, cfg.final_logit_softcap)
+
+
+def forward(
+    cfg: ModelConfig, params: Params, batch: Dict
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Full-sequence forward (training / prefill).  Returns (logits, aux)."""
+    x, aux_total = forward_hidden(cfg, params, batch)
+    logits = apply_head(cfg, params, x)
+    logits = shard_hint(logits, BATCH, None, MODEL)
+    return logits, aux_total
+
+
+def prefill_with_cache(
+    cfg: ModelConfig, params: Params, batch: Dict, capacity: int
+) -> Tuple[jnp.ndarray, Params]:
+    """Prefill: forward over the prompt, returning (last-token logits, a
+    decode-ready cache of the given capacity)."""
+    x = _embed_inputs(cfg, params, batch)
+    s = x.shape[1]
+    positions = jnp.arange(s)
+    n_periods, pat, tail = _period_split(cfg)
+    new_cache: Params = {}
+
+    if n_periods:
+        def period_fn(xx, period_params):
+            ncc = {}
+            for j, bt in enumerate(pat):
+                key = f"{j}:{bt}"
+                xx, nc, _ = _apply_layer(
+                    cfg, period_params[key], xx, bt, positions, None, None,
+                    fill_capacity=capacity,
+                )
+                ncc[key] = nc
+            return xx, ncc
+
+        x, new_cache["period"] = jax.lax.scan(period_fn, x, params["period"])
+    if tail:
+        new_cache["tail"] = {}
+        for j, bt in enumerate(tail):
+            key = f"{j}:{bt}"
+            x, nc, _ = _apply_layer(
+                cfg, params["tail"][key], x, bt, positions, None, None,
+                fill_capacity=capacity,
+            )
+            new_cache["tail"][key] = nc
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = apply_head(cfg, params, x[:, -1:, :])
+    return logits[:, 0, :], new_cache
+
+
+# ---------------------------------------------------------------------------
+# Decode
+
+
+def _init_layer_cache(cfg: ModelConfig, btype: str, batch: int, capacity: int):
+    dt = _dtype(cfg)
+    if btype == "attn":
+        return attn_lib.init_kv_cache(
+            batch, capacity, cfg.num_kv_heads, cfg.resolved_head_dim, dt
+        )
+    if btype == "local":
+        return attn_lib.init_kv_cache(
+            batch, min(cfg.local_window, capacity), cfg.num_kv_heads,
+            cfg.resolved_head_dim, dt,
+        )
+    if btype == "rglru":
+        return rglru_lib.init_rglru_cache(batch, cfg.resolved_d_rnn, cfg.conv_width, dt)
+    if btype == "mlstm":
+        return xlstm_lib.init_mlstm_cache(
+            batch, cfg.num_heads, cfg.d_model // cfg.num_heads
+        )
+    return xlstm_lib.init_slstm_cache(
+        batch, cfg.num_heads, cfg.d_model // cfg.num_heads
+    )
+
+
+def init_cache(cfg: ModelConfig, batch: int, capacity: int) -> Params:
+    n_periods, pat, tail = _period_split(cfg)
+    cache: Params = {}
+    if n_periods:
+        def one(_):
+            return {
+                f"{j}:{bt}": _init_layer_cache(cfg, bt, batch, capacity)
+                for j, bt in enumerate(pat)
+            }
+
+        cache["period"] = jax.vmap(one)(jnp.arange(n_periods))
+    if tail:
+        cache["tail"] = {
+            f"{j}:{bt}": _init_layer_cache(cfg, bt, batch, capacity)
+            for j, bt in enumerate(tail)
+        }
+    return cache
+
+
+def decode_step(
+    cfg: ModelConfig,
+    params: Params,
+    cache: Params,
+    tokens: jnp.ndarray,   # (B, 1) int32
+    pos: jnp.ndarray,      # scalar int32: absolute position of the new token
+) -> Tuple[jnp.ndarray, Params]:
+    """One-token decode with cache update.  Returns (logits (B,V), cache')."""
+    x = embed(params["embed"], tokens, scale_by_dim=cfg.embed_scale)
+    x = x.astype(_dtype(cfg))
+    n_periods, pat, tail = _period_split(cfg)
+    new_cache: Params = {}
+
+    if n_periods:
+        def period_fn(xx, scanned):
+            pp, cc = scanned
+            ncc = {}
+            for j, bt in enumerate(pat):
+                key = f"{j}:{bt}"
+                xx, nc, _ = _apply_layer(cfg, pp[key], xx, bt, None, cc[key], pos)
+                ncc[key] = nc
+            return xx, ncc
+
+        x, new_period = jax.lax.scan(
+            period_fn, x, (params["period"], cache["period"])
+        )
+        new_cache["period"] = new_period
+    if tail:
+        new_cache["tail"] = {}
+        for j, bt in enumerate(tail):
+            key = f"{j}:{bt}"
+            x, nc, _ = _apply_layer(
+                cfg, params["tail"][key], x, bt, None, cache["tail"][key], pos
+            )
+            new_cache["tail"][key] = nc
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if "head" in params:
+        logits = x @ params["head"]
+    else:
+        logits = unembed(params["embed"], x)
+    logits = softcap(logits, cfg.final_logit_softcap)
+    return logits[:, 0, :], new_cache

@@ -1,0 +1,266 @@
+"""xLSTM blocks: mLSTM (matrix memory, linear-attention form) and sLSTM
+(scalar memory, sequential exponential-gating recurrence).
+
+mLSTM runs in three regimes:
+  - parallel (quadratic, decay-masked attention) for short train/prefill;
+  - chunkwise recurrent (parallel within chunk, state across chunks) for
+    long sequences — sub-quadratic, the reason xlstm runs long_500k;
+  - single-step recurrent for decode, with (C, n, m) state per head.
+All three are tested for agreement on small shapes.
+
+sLSTM is inherently sequential (non-linear state dependence) and runs as a
+``lax.scan`` over time with block-diagonal (per-head) recurrent weights.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import normal_init, rms_norm
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+
+
+def init_mlstm_block(rng, d_model: int, num_heads: int, dtype):
+    ks = jax.random.split(rng, 8)
+    hd = d_model // num_heads
+    return {
+        "w_up": normal_init(ks[0], (d_model, 2 * d_model), dtype=dtype),
+        "w_q": normal_init(ks[1], (d_model, d_model), dtype=dtype),
+        "w_k": normal_init(ks[2], (d_model, d_model), dtype=dtype),
+        "w_v": normal_init(ks[3], (d_model, d_model), dtype=dtype),
+        "w_i": normal_init(ks[4], (d_model, num_heads), dtype=jnp.float32),
+        "b_i": jnp.zeros((num_heads,), jnp.float32),
+        "w_f": normal_init(ks[5], (d_model, num_heads), dtype=jnp.float32),
+        "b_f": jnp.full((num_heads,), 3.0, jnp.float32),  # open forget gates
+        "w_down": normal_init(ks[6], (d_model, d_model), dtype=dtype),
+        "out_norm": jnp.zeros((d_model,), jnp.float32),
+        "_hd": jnp.zeros((hd,), jnp.float32),  # shape marker
+    }
+
+
+def _mlstm_parallel(q, k, v, log_f, log_i):
+    """Stabilized quadratic form.  q,k,v: (B,S,H,hd); gates (B,S,H) fp32."""
+    b, s, h, hd = q.shape
+    lf_cum = jnp.cumsum(log_f, axis=1)  # (B,S,H)
+    # dtilde_ij = lf_cum_i - lf_cum_j + log_i_j  for j <= i
+    dt = lf_cum[:, :, None, :] - lf_cum[:, None, :, :] + log_i[:, None, :, :]
+    causal = jnp.tril(jnp.ones((s, s), bool))
+    dt = jnp.where(causal[None, :, :, None], dt, -jnp.inf)
+    m = dt.max(axis=2)  # (B,S,H) stabilizer
+    d = jnp.exp(dt - m[:, :, None, :])  # (B,Si,Sj,H)
+    scores = jnp.einsum("bihd,bjhd->bijh", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / jnp.sqrt(jnp.float32(hd))
+    w = scores * d
+    norm = jnp.maximum(jnp.abs(w.sum(axis=2)), jnp.exp(-m))  # (B,S,H)
+    out = jnp.einsum("bijh,bjhd->bihd", w, v.astype(jnp.float32))
+    return (out / norm[..., None]).astype(q.dtype)
+
+
+def _mlstm_step(state, q, k, v, log_f, log_i):
+    """One recurrent step.  state = (C (B,H,hd,hd), n (B,H,hd), m (B,H));
+    q,k,v (B,H,hd); gates (B,H) fp32."""
+    c_prev, n_prev, m_prev = state
+    hd = q.shape[-1]
+    m_new = jnp.maximum(log_f + m_prev, log_i)
+    f_sc = jnp.exp(log_f + m_prev - m_new)[..., None]
+    i_sc = jnp.exp(log_i - m_new)[..., None]
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    c_new = f_sc[..., None] * c_prev + i_sc[..., None] * (
+        vf[..., :, None] * kf[..., None, :]
+    )  # (B,H,hd_v,hd_k)
+    n_new = f_sc * n_prev + i_sc * kf
+    qf = q.astype(jnp.float32) / jnp.sqrt(jnp.float32(hd))
+    num = jnp.einsum("bhvk,bhk->bhv", c_new, qf)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n_new, qf)),
+                      jnp.exp(-m_new))
+    out = (num / den[..., None]).astype(q.dtype)
+    return (c_new, n_new, m_new), out
+
+
+def _mlstm_chunked(q, k, v, log_f, log_i, state, chunk: int):
+    """Chunkwise recurrent: scan over S/chunk chunks, quadratic within.
+
+    Cross-chunk contributions flow through the (C, n, m) state exactly as in
+    the stabilized recurrent form; within-chunk uses the parallel form
+    extended with the carried state.
+    """
+    b, s, h, hd = q.shape
+    nc = s // chunk
+
+    def to_chunks(x):
+        return x.reshape(b, nc, chunk, *x.shape[2:]).transpose(1, 0, 2, *range(3, x.ndim + 1))
+
+    qs, ks, vs = to_chunks(q), to_chunks(k), to_chunks(v)
+    lfs, lis = to_chunks(log_f), to_chunks(log_i)
+
+    def chunk_step(carry, inp):
+        c_prev, n_prev, m_prev = carry  # (B,H,hd,hd),(B,H,hd),(B,H)
+        qc, kc, vc, lf, li = inp  # (B,chunk,H,*)
+        lf_cum = jnp.cumsum(lf, axis=1)  # (B,c,H)
+        # Intra-chunk decay matrix.
+        dt = lf_cum[:, :, None, :] - lf_cum[:, None, :, :] + li[:, None, :, :]
+        causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+        dt = jnp.where(causal[None, :, :, None], dt, -jnp.inf)
+        # Inter: position i sees state with weight lf_cum_i + m_prev.
+        inter_logw = lf_cum + m_prev[:, None, :]  # (B,c,H)
+        m = jnp.maximum(dt.max(axis=2), inter_logw)  # (B,c,H)
+        d = jnp.exp(dt - m[:, :, None, :])
+        qf = qc.astype(jnp.float32) / jnp.sqrt(jnp.float32(hd))
+        kf = kc.astype(jnp.float32)
+        vf = vc.astype(jnp.float32)
+        scores = jnp.einsum("bihd,bjhd->bijh", qf, kf) * d
+        inter_w = jnp.exp(inter_logw - m)  # (B,c,H)
+        num = jnp.einsum("bijh,bjhd->bihd", scores, vf) + inter_w[..., None] * \
+            jnp.einsum("bhvk,bihk->bihv", c_prev, qf)
+        den_intra = scores.sum(axis=2)  # (B,c,H)
+        den_inter = inter_w * jnp.einsum("bhk,bihk->bih", n_prev, qf)
+        den = jnp.maximum(jnp.abs(den_intra + den_inter), jnp.exp(-m))
+        out = (num / den[..., None]).astype(qc.dtype)
+
+        # State update to end of chunk.
+        lf_tot = lf_cum[:, -1]  # (B,H)
+        m_new = jnp.maximum(lf_tot + m_prev, (lf_tot[:, None] - lf_cum + li).max(axis=1))
+        w_state = jnp.exp(lf_tot + m_prev - m_new)  # (B,H)
+        w_in = jnp.exp(lf_tot[:, None] - lf_cum + li - m_new[:, None])  # (B,c,H)
+        c_new = w_state[..., None, None] * c_prev + jnp.einsum(
+            "bjh,bjhv,bjhk->bhvk", w_in, vf, kf
+        )
+        n_new = w_state[..., None] * n_prev + jnp.einsum("bjh,bjhk->bhk", w_in, kf)
+        return (c_new, n_new, m_new), out
+
+    state, outs = jax.lax.scan(chunk_step, state, (qs, ks, vs, lfs, lis))
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(b, s, h, hd)
+    return out, state
+
+
+def apply_mlstm_block(
+    params: Dict,
+    x: jnp.ndarray,
+    num_heads: int,
+    cache: Optional[Dict] = None,
+    chunk_threshold: int = 4096,
+    chunk: int = 256,
+    fill_state: bool = False,
+) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    """x (B,S,d) -> (out, cache').  cache = {'c','n','m'} for decode;
+    ``fill_state`` returns the end-of-sequence state (prefill)."""
+    b, s, d = x.shape
+    hd = d // num_heads
+    up = x @ params["w_up"]
+    u, g = jnp.split(up, 2, axis=-1)
+    q = (u @ params["w_q"]).reshape(b, s, num_heads, hd)
+    k = (u @ params["w_k"]).reshape(b, s, num_heads, hd)
+    v = (u @ params["w_v"]).reshape(b, s, num_heads, hd)
+    uf = u.astype(jnp.float32)
+    log_i = uf @ params["w_i"] + params["b_i"]  # (B,S,H)
+    log_f = jax.nn.log_sigmoid(uf @ params["w_f"] + params["b_f"])
+
+    new_cache = None
+    if cache is not None and s == 1:
+        state = (cache["c"], cache["n"], cache["m"])
+        state, out = _mlstm_step(
+            state, q[:, 0], k[:, 0], v[:, 0], log_f[:, 0], log_i[:, 0]
+        )
+        out = out[:, None]
+        new_cache = {"c": state[0], "n": state[1], "m": state[2]}
+    elif fill_state or (s > chunk_threshold and s % chunk == 0):
+        state = _init_mlstm_state(b, num_heads, hd)
+        ck = chunk if s % chunk == 0 else s
+        out, state = _mlstm_chunked(q, k, v, log_f, log_i, state, ck)
+        if fill_state:
+            new_cache = {"c": state[0], "n": state[1], "m": state[2]}
+    else:
+        out = _mlstm_parallel(q, k, v, log_f, log_i)
+
+    out = out.reshape(b, s, d)
+    out = rms_norm(out, params["out_norm"])
+    out = out * jax.nn.silu(g)
+    return out @ params["w_down"], new_cache
+
+
+def _init_mlstm_state(b, h, hd):
+    return (
+        jnp.zeros((b, h, hd, hd), jnp.float32),
+        jnp.zeros((b, h, hd), jnp.float32),
+        jnp.full((b, h), 0.0, jnp.float32),
+    )
+
+
+def init_mlstm_cache(batch, num_heads, head_dim, dtype=None):
+    c, n, m = _init_mlstm_state(batch, num_heads, head_dim)
+    return {"c": c, "n": n, "m": m}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+
+
+def init_slstm_block(rng, d_model: int, num_heads: int, dtype):
+    ks = jax.random.split(rng, 3)
+    hd = d_model // num_heads
+    return {
+        "w_in": normal_init(ks[0], (d_model, 4 * d_model), dtype=dtype),
+        "b_in": jnp.zeros((4 * d_model,), jnp.float32),
+        # Block-diagonal recurrent weights: per head (hd -> 4*hd).
+        "r": normal_init(ks[1], (num_heads, hd, 4 * hd), dtype=dtype),
+        "w_out": normal_init(ks[2], (d_model, d_model), dtype=dtype),
+        "out_norm": jnp.zeros((d_model,), jnp.float32),
+    }
+
+
+def apply_slstm_block(
+    params: Dict,
+    x: jnp.ndarray,
+    num_heads: int,
+    cache: Optional[Dict] = None,
+    fill_state: bool = False,
+) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    """Sequential sLSTM.  x (B,S,d); cache = {'c','n','m','h'} for decode."""
+    b, s, d = x.shape
+    hd = d // num_heads
+    zin = (x @ params["w_in"]).astype(jnp.float32) + params["b_in"]  # (B,S,4d)
+    zin = zin.reshape(b, s, 4, num_heads, hd)
+
+    if cache is not None:
+        state0 = (cache["c"], cache["n"], cache["m"], cache["h"])
+    else:
+        zero = jnp.zeros((b, num_heads, hd), jnp.float32)
+        state0 = (zero, zero, zero - 10.0, zero)
+
+    r = params["r"].astype(jnp.float32)
+
+    def step(state, z_t):
+        c, n, m, h = state  # (B,H,hd) each
+        rec = jnp.einsum("bhk,hkf->bhf", h, r).reshape(b, num_heads, 4, hd)
+        zz = z_t.transpose(1, 0, 2, 3) + rec.transpose(2, 0, 1, 3)  # (4,B,H,hd)
+        z_g, i_g, f_g, o_g = zz[0], zz[1], zz[2], zz[3]
+        z_g = jnp.tanh(z_g)
+        o_g = jax.nn.sigmoid(o_g)
+        log_f = jax.nn.log_sigmoid(f_g)
+        m_new = jnp.maximum(log_f + m, i_g)
+        i_sc = jnp.exp(i_g - m_new)
+        f_sc = jnp.exp(log_f + m - m_new)
+        c_new = f_sc * c + i_sc * z_g
+        n_new = f_sc * n + i_sc
+        h_new = o_g * c_new / jnp.maximum(n_new, 1e-6)
+        return (c_new, n_new, m_new, h_new), h_new
+
+    state, hs = jax.lax.scan(step, state0, zin.transpose(1, 0, 2, 3, 4))
+    out = hs.transpose(1, 0, 2, 3).reshape(b, s, d).astype(x.dtype)
+    out = rms_norm(out, params["out_norm"])
+    out = out @ params["w_out"]
+    new_cache = None
+    if cache is not None or fill_state:
+        new_cache = {"c": state[0], "n": state[1], "m": state[2], "h": state[3]}
+    return out, new_cache
+
+
+def init_slstm_cache(batch, num_heads, head_dim, dtype=None):
+    zero = jnp.zeros((batch, num_heads, head_dim), jnp.float32)
+    return {"c": zero, "n": zero, "m": zero - 10.0, "h": zero}

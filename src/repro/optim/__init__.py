@@ -1,0 +1,2 @@
+from repro.optim.adamw import AdamWConfig, AdamWState, init, update, global_norm
+from repro.optim.schedules import constant, warmup_cosine

@@ -1,0 +1,100 @@
+"""Hand-rolled AdamW with global-norm clipping and configurable moment
+storage (fp32 / bf16 / int8 block-quantized).
+
+State is a pytree mirroring params, so the distributed partition rules
+(distributed/sharding.py) shard it exactly like the params — plus the
+ZeRO rule that further shards moments across the DP axes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.quantized_state import QTensor, dequantize, quantize
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: Callable[[jnp.ndarray], jnp.ndarray]
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip_norm: float = 1.0
+    moment_dtype: str = "float32"   # float32 | bfloat16 | int8
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    m: Any
+    v: Any
+
+
+def _store(x: jnp.ndarray, moment_dtype: str):
+    if moment_dtype == "int8":
+        return quantize(x)
+    return x.astype(jnp.dtype(moment_dtype))
+
+
+def _load(x, moment_dtype: str) -> jnp.ndarray:
+    if moment_dtype == "int8":
+        return dequantize(x)
+    return x.astype(jnp.float32)
+
+
+def init(cfg: AdamWConfig, params) -> AdamWState:
+    zeros = jax.tree.map(lambda p: _store(jnp.zeros(p.shape, jnp.float32),
+                                          cfg.moment_dtype), params)
+    zeros_v = jax.tree.map(lambda p: _store(jnp.zeros(p.shape, jnp.float32),
+                                            cfg.moment_dtype), params)
+    return AdamWState(step=jnp.zeros((), jnp.int32), m=zeros, v=zeros_v)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+            for x in jax.tree.leaves(tree))
+    )
+
+
+def update(
+    cfg: AdamWConfig,
+    grads,
+    state: AdamWState,
+    params,
+) -> Tuple[Any, AdamWState, Dict[str, jnp.ndarray]]:
+    """One AdamW step.  Returns (new_params, new_state, metrics)."""
+    step = state.step + 1
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip_norm / jnp.maximum(gnorm, 1e-9))
+    lr = cfg.lr(step)
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def leaf(p, g, m_q, v_q):
+        g = g.astype(jnp.float32) * clip
+        m = cfg.b1 * _load(m_q, cfg.moment_dtype) + (1 - cfg.b1) * g
+        v = cfg.b2 * _load(v_q, cfg.moment_dtype) + (1 - cfg.b2) * g * g
+        upd = (m / b1c) / (jnp.sqrt(v / b2c) + cfg.eps)
+        pf = p.astype(jnp.float32)
+        decay = cfg.weight_decay if p.ndim >= 2 else 0.0  # no decay on norms
+        new_p = pf - lr * (upd + decay * pf)
+        return (new_p.astype(p.dtype),
+                _store(m, cfg.moment_dtype),
+                _store(v, cfg.moment_dtype))
+
+    is_q = lambda x: isinstance(x, QTensor)
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state.m, is_leaf=is_q)
+    flat_v = jax.tree.leaves(state.v, is_leaf=is_q)
+    outs = [leaf(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree.unflatten(tdef, [o[0] for o in outs])
+    new_m = jax.tree.unflatten(tdef, [o[1] for o in outs])
+    new_v = jax.tree.unflatten(tdef, [o[2] for o in outs])
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_p, AdamWState(step=step, m=new_m, v=new_v), metrics

@@ -1,0 +1,59 @@
+"""Block-wise int8 quantization for optimizer moments (8-bit Adam).
+
+A distributed-optimization memory trick: Adam's m/v tensors are stored as
+int8 with one fp32 scale per block of 256 elements (last axis), cutting
+optimizer-state HBM by ~3.5x — what makes arctic-480b trainable on a
+single 256-chip pod (see DESIGN.md §5 and EXPERIMENTS.md memory table).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+@jax.tree_util.register_pytree_node_class
+class QTensor:
+    """int8 payload + per-block fp32 scales; original shape kept static."""
+
+    def __init__(self, q, scale, shape):
+        self.q = q            # int8, (-1, BLOCK)
+        self.scale = scale    # fp32, (-1,)
+        self.shape = tuple(shape)
+
+    def tree_flatten(self):
+        return (self.q, self.scale), self.shape
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], children[1], aux)
+
+    def __repr__(self):
+        return f"QTensor(shape={self.shape})"
+
+
+def _pad_len(n: int) -> int:
+    return -(-n // BLOCK) * BLOCK
+
+
+def quantize(x: jnp.ndarray) -> QTensor:
+    shape = x.shape
+    flat = x.reshape(-1).astype(jnp.float32)
+    n = flat.shape[0]
+    pad = _pad_len(n) - n
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1) / 127.0
+    safe = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(blocks / safe[:, None]), -127, 127).astype(jnp.int8)
+    return QTensor(q=q, scale=scale, shape=shape)
+
+
+def dequantize(t: QTensor) -> jnp.ndarray:
+    flat = (t.q.astype(jnp.float32) * t.scale[:, None]).reshape(-1)
+    n = 1
+    for s in t.shape:
+        n *= s
+    return flat[:n].reshape(t.shape)

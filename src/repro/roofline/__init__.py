@@ -1,0 +1,8 @@
+from repro.roofline.analysis import (
+    CellStats,
+    RooflineReport,
+    extract_stats,
+    model_flops_for,
+    parse_collectives,
+    roofline,
+)

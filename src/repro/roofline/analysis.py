@@ -1,0 +1,234 @@
+"""Three-term roofline analysis from compiled dry-run artifacts.
+
+  compute    = HLO_FLOPs_per_device / peak_FLOP/s_per_chip
+  memory     = HLO_bytes_per_device / HBM_bw_per_chip
+  collective = wire_bytes_per_device / ICI_link_bw
+
+Notes on sources (see EXPERIMENTS.md §Roofline):
+- ``compiled.cost_analysis()`` reports *per-device, post-SPMD* flops/bytes.
+- collective bytes are parsed from ``compiled.as_text()`` (optimized HLO):
+  per-device ring-model wire bytes per op:
+     all-reduce          2*S*(G-1)/G     (S = per-device result bytes)
+     all-gather          S*(G-1)/G       (S = gathered result bytes)
+     reduce-scatter      S*(G-1)         (S = scattered result bytes)
+     all-to-all          S*(G-1)/G
+     collective-permute  S
+- XLA cost analysis counts while-loop (lax.scan) bodies ONCE (verified
+  empirically); ``scan_correction`` recompiles one scan body and adds
+  (trip_count - 1) x its stats.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+from repro.hw import V5E, ChipSpec
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?P<result>\([^)]*\)|[a-z0-9]+\[[^\]]*\][^ ]*)\s*"
+    r"(?P<kind>all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(",
+)
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_ARRAY_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _array_bytes(typestr: str) -> int:
+    total = 0
+    for dt, dims in _ARRAY_RE.findall(typestr):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveOp:
+    kind: str
+    result_bytes: int
+    group_size: int
+
+    @property
+    def wire_bytes(self) -> float:
+        s, g = self.result_bytes, max(self.group_size, 1)
+        if self.kind == "collective-permute":
+            return float(s)  # point-to-point: no replica_groups attribute
+        if g == 1:
+            return 0.0
+        if self.kind == "all-reduce":
+            return 2.0 * s * (g - 1) / g
+        if self.kind == "all-gather":
+            return s * (g - 1) / g
+        if self.kind == "reduce-scatter":
+            return float(s * (g - 1))
+        if self.kind == "all-to-all":
+            return s * (g - 1) / g
+        return float(s)  # collective-permute
+
+
+def parse_collectives(hlo_text: str) -> List[CollectiveOp]:
+    ops = []
+    for line in hlo_text.splitlines():
+        if "-done" in line:
+            continue
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        g = 1
+        gm = _GROUPS_RE.search(line)
+        if gm:
+            g = int(gm.group(2))
+        else:
+            gl = _GROUPS_LIST_RE.search(line)
+            if gl:
+                g = len([x for x in gl.group(1).split(",") if x.strip() != ""])
+        ops.append(CollectiveOp(
+            kind=m.group("kind"),
+            result_bytes=_array_bytes(m.group("result")),
+            group_size=g,
+        ))
+    return ops
+
+
+@dataclasses.dataclass
+class CellStats:
+    flops_per_device: float = 0.0
+    bytes_per_device: float = 0.0
+    collective_wire_bytes: float = 0.0
+    collective_counts: Optional[Dict[str, int]] = None
+    arg_bytes: float = 0.0
+    temp_bytes: float = 0.0
+    out_bytes: float = 0.0
+
+    def __add__(self, other: "CellStats") -> "CellStats":
+        counts = dict(self.collective_counts or {})
+        for k, v in (other.collective_counts or {}).items():
+            counts[k] = counts.get(k, 0) + v
+        return CellStats(
+            self.flops_per_device + other.flops_per_device,
+            self.bytes_per_device + other.bytes_per_device,
+            self.collective_wire_bytes + other.collective_wire_bytes,
+            counts,
+            max(self.arg_bytes, other.arg_bytes),
+            max(self.temp_bytes, other.temp_bytes),
+            max(self.out_bytes, other.out_bytes),
+        )
+
+    def scale(self, k: float) -> "CellStats":
+        return CellStats(
+            self.flops_per_device * k,
+            self.bytes_per_device * k,
+            self.collective_wire_bytes * k,
+            {kk: int(v * k) for kk, v in (self.collective_counts or {}).items()},
+            self.arg_bytes, self.temp_bytes, self.out_bytes,
+        )
+
+
+def extract_stats(compiled) -> CellStats:
+    cost = compiled.cost_analysis()
+    colls = parse_collectives(compiled.as_text())
+    counts: Dict[str, int] = {}
+    wire = 0.0
+    for op in colls:
+        counts[op.kind] = counts.get(op.kind, 0) + 1
+        wire += op.wire_bytes
+    stats = CellStats(
+        flops_per_device=float(cost.get("flops", 0.0)),
+        bytes_per_device=float(cost.get("bytes accessed", 0.0)),
+        collective_wire_bytes=wire,
+        collective_counts=counts,
+    )
+    try:
+        mem = compiled.memory_analysis()
+        stats.arg_bytes = float(mem.argument_size_in_bytes)
+        stats.temp_bytes = float(mem.temp_size_in_bytes)
+        stats.out_bytes = float(mem.output_size_in_bytes)
+    except Exception:
+        pass
+    return stats
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    model_flops: float
+    hlo_flops_global: float
+    chips: int
+    stats: CellStats
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_time_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def roofline_frac(self) -> float:
+        """compute term / achieved bound = fraction of roofline attained."""
+        return self.compute_s / max(self.bound_time_s, 1e-30)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        return self.model_flops / max(self.hlo_flops_global, 1.0)
+
+    def as_dict(self) -> Dict:
+        return {
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "roofline_frac": self.roofline_frac,
+            "model_flops": self.model_flops,
+            "hlo_flops_global": self.hlo_flops_global,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "chips": self.chips,
+            "flops_per_device": self.stats.flops_per_device,
+            "bytes_per_device": self.stats.bytes_per_device,
+            "collective_wire_bytes": self.stats.collective_wire_bytes,
+            "collective_counts": self.stats.collective_counts,
+            "arg_bytes_per_device": self.stats.arg_bytes,
+            "temp_bytes_per_device": self.stats.temp_bytes,
+        }
+
+
+def roofline(stats: CellStats, chips: int, model_flops: float,
+             hw: ChipSpec = V5E, dtype: str = "bfloat16") -> RooflineReport:
+    peak = hw.peak_flops_bf16 if dtype in ("bfloat16", "float16") else hw.peak_flops_fp32
+    return RooflineReport(
+        compute_s=stats.flops_per_device / peak,
+        memory_s=stats.bytes_per_device / hw.hbm_bandwidth,
+        collective_s=stats.collective_wire_bytes / hw.ici_link_bandwidth,
+        model_flops=model_flops,
+        hlo_flops_global=stats.flops_per_device * chips,
+        chips=chips,
+        stats=stats,
+    )
+
+
+def model_flops_for(cfg, shape) -> float:
+    """6*N*D (train) / 2*N*D (prefill) / 2*N_active*B (one decode step)."""
+    n_active = cfg.active_param_count()
+    d_tokens = shape.global_batch * shape.seq_len
+    if shape.kind == "train":
+        return 6.0 * n_active * d_tokens
+    if shape.kind == "prefill":
+        return 2.0 * n_active * d_tokens
+    return 2.0 * n_active * shape.global_batch  # decode: one token per seq

@@ -1,0 +1,130 @@
+"""Batched serving engine: prefill + decode with continuous batching.
+
+The engine keeps a fixed-capacity decode batch; finished sequences free
+their slot, queued requests prefill into it.  Decode steps are one jitted
+``serve_step`` over the whole batch regardless of occupancy (standard TPU
+serving shape discipline: no recompiles as requests come and go).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as tf
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray           # (S,) int32
+    max_new_tokens: int
+    out_tokens: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServingEngine:
+    def __init__(self, cfg: ModelConfig, params, batch_size: int,
+                 capacity: int, temperature: float = 0.0, seed: int = 0):
+        assert cfg.supports_decode, f"{cfg.name} is encoder-only"
+        self.cfg = cfg
+        self.params = params
+        self.batch = batch_size
+        self.capacity = capacity
+        self.temperature = temperature
+        self.rng = jax.random.PRNGKey(seed)
+
+        self.cache = tf.init_cache(cfg, batch_size, capacity)
+        self.pos = np.zeros(batch_size, np.int64)      # per-slot next position
+        self.slot_req: List[Optional[Request]] = [None] * batch_size
+        self.queue: List[Request] = []
+        self._uid = 0
+
+        self._decode = jax.jit(lambda p, c, t, pos: tf.decode_step(cfg, p, c, t, pos))
+
+    # -- public api -----------------------------------------------------------
+
+    def submit(self, prompt: np.ndarray, max_new_tokens: int = 16) -> int:
+        self._uid += 1
+        self.queue.append(Request(self._uid, np.asarray(prompt, np.int32),
+                                  max_new_tokens))
+        return self._uid
+
+    def run(self, max_steps: int = 10_000) -> Dict[int, List[int]]:
+        """Drive until all submitted requests finish.  Returns uid->tokens."""
+        results: Dict[int, List[int]] = {}
+        for _ in range(max_steps):
+            self._admit()
+            live = [i for i, r in enumerate(self.slot_req) if r is not None]
+            if not live and not self.queue:
+                break
+            self._decode_one_step()
+            for i, r in enumerate(self.slot_req):
+                if r is not None and r.done:
+                    results[r.uid] = r.out_tokens
+                    self.slot_req[i] = None
+        return results
+
+    # -- internals --------------------------------------------------------
+
+    def _admit(self):
+        """Prefill queued requests into free slots, one token at a time via
+        the decode path (slot-local; the global-batch prefill path is used
+        by launch/serve.py where all slots start together)."""
+        for i in range(self.batch):
+            if self.slot_req[i] is None and self.queue:
+                req = self.queue.pop(0)
+                self.slot_req[i] = req
+                self.pos[i] = 0
+                # Feed the prompt through decode steps for this slot.
+                for t in req.prompt[:-1]:
+                    self._step_slot(i, int(t))
+                req._last_token = int(req.prompt[-1])
+
+    def _step_slot(self, slot: int, token: int):
+        tokens = np.zeros((self.batch, 1), np.int32)
+        tokens[slot, 0] = token
+        logits, self.cache = self._decode(
+            self.params, self.cache, jnp.asarray(tokens),
+            jnp.int32(self.pos[slot]),
+        )
+        self.pos[slot] += 1
+        return np.asarray(logits[slot])
+
+    def _sample(self, logits: np.ndarray) -> int:
+        if self.temperature <= 0:
+            return int(logits.argmax())
+        self.rng, k = jax.random.split(self.rng)
+        return int(jax.random.categorical(k, jnp.asarray(logits) / self.temperature))
+
+    def _decode_one_step(self):
+        tokens = np.zeros((self.batch, 1), np.int32)
+        any_live = False
+        for i, r in enumerate(self.slot_req):
+            if r is not None:
+                tokens[i, 0] = getattr(r, "_last_token", 0)
+                any_live = True
+        if not any_live:
+            return
+        # Single shared position per decode step is the common serving case
+        # when slots prefill together; per-slot positions are handled by
+        # stepping lagging slots individually in _admit.
+        pos = int(max(self.pos[i] for i, r in enumerate(self.slot_req)
+                      if r is not None))
+        logits, self.cache = self._decode(
+            self.params, self.cache, jnp.asarray(tokens), jnp.int32(pos)
+        )
+        logits_np = np.asarray(logits)
+        for i, r in enumerate(self.slot_req):
+            if r is None:
+                continue
+            nxt = self._sample(logits_np[i])
+            r.out_tokens.append(nxt)
+            r._last_token = nxt
+            self.pos[i] = pos + 1
+            if len(r.out_tokens) >= r.max_new_tokens:
+                r.done = True

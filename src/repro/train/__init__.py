@@ -1,0 +1,2 @@
+from repro.train.step import loss_fn, make_prefill_step, make_serve_step, make_train_step
+from repro.train.loop import TrainRunConfig, train

@@ -1,0 +1,92 @@
+"""Training loop with checkpoint/restart, heartbeats, and straggler hooks.
+
+Single-process execution here; the fault-tolerance machinery (heartbeat
+files, failure detection, elastic re-mesh planning) lives in
+distributed/ft.py and is driven from this loop so the control flow is the
+one a multi-host deployment would run.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import AsyncCheckpointWriter, CheckpointStore
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.data import batch_for
+from repro.distributed.ft import Heartbeat, StragglerMonitor
+from repro.models import transformer as tf
+from repro.optim import adamw
+from repro.train.step import make_train_step
+
+
+@dataclasses.dataclass
+class TrainRunConfig:
+    steps: int = 100
+    checkpoint_every: int = 50
+    log_every: int = 10
+    seed: int = 0
+    out_dir: str = "/tmp/repro_run"
+    grad_accum: int = 1
+    resume: bool = True
+    heartbeat_every: int = 1
+
+
+def train(
+    cfg: ModelConfig,
+    shape: ShapeSpec,
+    opt_cfg: adamw.AdamWConfig,
+    run: TrainRunConfig,
+    in_shardings=None,
+    donate: bool = True,
+) -> Dict[str, float]:
+    """Run the loop; returns final metrics.  Restores from the newest
+    checkpoint in ``run.out_dir`` when present (crash/elastic restart)."""
+    os.makedirs(run.out_dir, exist_ok=True)
+    store = CheckpointStore(os.path.join(run.out_dir, "ckpt"))
+    writer = AsyncCheckpointWriter(store)
+    hb = Heartbeat(os.path.join(run.out_dir, "heartbeats"), rank=0)
+    straggler = StragglerMonitor(window=20, threshold=2.0)
+
+    rng = jax.random.PRNGKey(run.seed)
+    params = tf.init_params(cfg, rng)
+    opt_state = adamw.init(opt_cfg, params)
+    start_step = 0
+    if run.resume and store.latest_step() is not None:
+        start_step, restored = store.restore(
+            {"params": params, "opt_state": opt_state}
+        )
+        params, opt_state = restored["params"], restored["opt_state"]
+
+    step_fn = jax.jit(
+        make_train_step(cfg, opt_cfg, run.grad_accum),
+        donate_argnums=(0, 1) if donate else (),
+    )
+
+    metrics_log = open(os.path.join(run.out_dir, "metrics.jsonl"), "a")
+    last: Dict[str, float] = {}
+    for step in range(start_step, run.steps):
+        t0 = time.monotonic()
+        batch = batch_for(cfg, shape, step, seed=run.seed)
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        if step % run.log_every == 0 or step == run.steps - 1:
+            last = {k: float(v) for k, v in metrics.items()}
+            dt = time.monotonic() - t0
+            rec = {"step": step, "sec": round(dt, 4), **last}
+            metrics_log.write(json.dumps(rec) + "\n")
+            metrics_log.flush()
+        if step % run.heartbeat_every == 0:
+            hb.beat(step)
+        straggler.record(time.monotonic() - t0)
+        if (step + 1) % run.checkpoint_every == 0 or step == run.steps - 1:
+            writer.save(step + 1, {"params": params, "opt_state": opt_state},
+                        extra={"arch": cfg.name, "shape": shape.name})
+    writer.wait()
+    metrics_log.close()
+    last["slow_steps"] = float(straggler.slow_count)
+    return last

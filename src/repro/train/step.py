@@ -1,0 +1,152 @@
+"""Loss and train/serve step builders for every (arch x shape) kind.
+
+``make_train_step`` returns the pure function the dry-run lowers and the
+train loop jits: (params, opt_state, batch) -> (params', opt_state',
+metrics).  Supports microbatch gradient accumulation (scan with summed
+grads — the psum of each microbatch overlaps the next microbatch's
+compute under XLA's scheduler) and chunked-vocab cross-entropy.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.models import transformer as tf
+from repro.optim import adamw
+
+AUX_LB_COEF = 0.01
+AUX_Z_COEF = 1e-4
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                  mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Mean CE over (optionally masked) positions; logits (..., V) any dtype."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        mask = mask.astype(jnp.float32)
+        return jnp.sum(nll * mask) / jnp.maximum(mask.sum(), 1.0)
+    return jnp.mean(nll)
+
+
+def _chunked_ce(cfg: ModelConfig, params, hidden, labels,
+                mask: Optional[jnp.ndarray], chunk: int) -> jnp.ndarray:
+    """CE without materializing the full (B,S,V) logits: scan over sequence
+    chunks, computing each chunk's logits on the fly (beyond-paper memory
+    optimization for the 150k/256k-vocab archs)."""
+    b, s, d = hidden.shape
+    n = s // chunk
+    hs = hidden[:, : n * chunk].reshape(b, n, chunk, d).transpose(1, 0, 2, 3)
+    ls = labels[:, : n * chunk].reshape(b, n, chunk).transpose(1, 0, 2)
+    ms = (mask[:, : n * chunk].reshape(b, n, chunk).transpose(1, 0, 2)
+          if mask is not None else jnp.ones_like(ls, jnp.float32))
+
+    def step(carry, inp):
+        tot, cnt = carry
+        h, l, m = inp
+        logits = tf.apply_head(cfg, params, h).astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, l[..., None], axis=-1)[..., 0]
+        mf = m.astype(jnp.float32)
+        return (tot + jnp.sum((logz - gold) * mf), cnt + mf.sum()), None
+
+    (tot, cnt), _ = jax.lax.scan(step, (jnp.float32(0), jnp.float32(0)),
+                                 (hs, ls, ms))
+    # Remainder positions (s % chunk) fall back to direct computation.
+    if s % chunk:
+        h, l = hidden[:, n * chunk:], labels[:, n * chunk:]
+        m = mask[:, n * chunk:] if mask is not None else None
+        logits = tf.apply_head(cfg, params, h)
+        rem = cross_entropy(logits, l, m)
+        mf = (m.astype(jnp.float32).sum() if m is not None
+              else jnp.float32(l.size))
+        tot, cnt = tot + rem * mf, cnt + mf
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def loss_fn(cfg: ModelConfig, params, batch: Dict) -> Tuple[jnp.ndarray, Dict]:
+    """Task loss per family: next-token LM, masked audio prediction, VLM."""
+    if cfg.frontend == "audio_frames":
+        logits, aux = tf.forward(cfg, params, batch)
+        loss = cross_entropy(logits, batch["targets"], batch.get("mask"))
+    elif cfg.loss_vocab_chunk:
+        hidden, aux = tf.forward_hidden(cfg, params, batch)
+        if cfg.frontend == "vision_patches":
+            hidden = hidden[:, cfg.num_patches:]
+        loss = _chunked_ce(cfg, params, hidden, batch["labels"], None,
+                           cfg.loss_vocab_chunk)
+    else:
+        logits, aux = tf.forward(cfg, params, batch)
+        if cfg.frontend == "vision_patches":
+            logits = logits[:, cfg.num_patches:]
+        loss = cross_entropy(logits, batch["labels"])
+    total = loss
+    if cfg.num_experts:
+        total = total + AUX_LB_COEF * aux["load_balance"] + AUX_Z_COEF * aux["router_z"]
+    metrics = {"loss": loss, "total_loss": total}
+    if cfg.num_experts:
+        metrics["moe_dropped_frac"] = aux["dropped_frac"]
+    return total, metrics
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    opt_cfg: adamw.AdamWConfig,
+    grad_accum: int = 1,
+) -> Callable:
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics)."""
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(lambda p: loss_fn(cfg, p, batch), has_aux=True)(
+            params
+        )
+
+    def train_step(params, opt_state, batch):
+        if grad_accum > 1:
+            def split(x):
+                return x.reshape(grad_accum, x.shape[0] // grad_accum, *x.shape[1:])
+
+            micro = jax.tree.map(split, batch)
+
+            def accum(carry, mb):
+                g_sum, loss_sum = carry
+                (loss, m), g = grads_of(params, mb)
+                return (jax.tree.map(jnp.add, g_sum, g), loss_sum + m["loss"]), None
+
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (g_sum, loss_sum), _ = jax.lax.scan(
+                accum, (zeros, jnp.float32(0)), micro
+            )
+            grads = jax.tree.map(lambda g: g / grad_accum, g_sum)
+            metrics = {"loss": loss_sum / grad_accum}
+        else:
+            (loss, metrics), grads = grads_of(params, batch)
+        new_params, new_opt, opt_metrics = adamw.update(
+            opt_cfg, grads, opt_state, params
+        )
+        return new_params, new_opt, {**metrics, **opt_metrics}
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig) -> Callable:
+    def prefill_step(params, batch):
+        logits, _ = tf.forward(cfg, params, batch)
+        return logits[:, -1, :]
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig) -> Callable:
+    """One-token decode: (params, cache, tokens, pos) -> (logits, cache')."""
+
+    def serve_step(params, cache, tokens, pos):
+        return tf.decode_step(cfg, params, cache, tokens, pos)
+
+    return serve_step

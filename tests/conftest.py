@@ -1,0 +1,39 @@
+"""Shared test utilities.
+
+NOTE: no XLA_FLAGS here — tests see 1 CPU device by design.  Multi-device
+behavior is exercised through subprocess helpers that force a device count
+in a fresh process (see run_with_devices).
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+
+
+def run_with_devices(n_devices: int, code: str, timeout: int = 480) -> str:
+    """Run ``code`` in a fresh python with n forced host devices; returns
+    stdout.  Raises on nonzero exit."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(code)],
+        capture_output=True, text=True, timeout=timeout, env=env,
+    )
+    if proc.returncode != 0:
+        raise AssertionError(
+            f"subprocess failed ({proc.returncode}):\n{proc.stdout}\n{proc.stderr}"
+        )
+    return proc.stdout
+
+
+@pytest.fixture(scope="session")
+def rng():
+    import numpy as np
+
+    return np.random.default_rng(0)

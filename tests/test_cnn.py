@@ -1,0 +1,85 @@
+"""Darknet-style CNNs: per-kernel ops, full networks, Table IV dims."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import vgg16, yolov3
+from repro.core.conv_spec import arithmetic_intensity
+from repro.models.cnn import (
+    activate_array,
+    add_bias,
+    batchnorm_inference,
+    cnn_forward,
+    conv_layer_dims,
+    init_cnn,
+    normalize,
+    scale_bias,
+)
+
+
+def test_darknet_kernels():
+    x = jnp.asarray([[-2.0, 0.0, 3.0]])
+    np.testing.assert_allclose(activate_array(x, "leaky"), [[-0.2, 0.0, 3.0]])
+    np.testing.assert_allclose(activate_array(x, "relu"), [[0.0, 0.0, 3.0]])
+    np.testing.assert_allclose(activate_array(x, "linear"), x)
+    np.testing.assert_allclose(add_bias(x, jnp.float32(1.0)), x + 1)
+    np.testing.assert_allclose(scale_bias(x, jnp.float32(2.0)), x * 2)
+    n = normalize(x, 1.0, 4.0)
+    np.testing.assert_allclose(n, (x - 1.0) / 2.0, rtol=1e-4)
+
+
+def test_batchnorm_inference_matches_formula():
+    p = {"gamma": jnp.float32(2.0), "beta": jnp.float32(0.5),
+         "mean": jnp.float32(1.0), "var": jnp.float32(4.0)}
+    x = jnp.asarray([3.0])
+    got = batchnorm_inference(x, p)
+    np.testing.assert_allclose(got, (3 - 1) / 2 * 2 + 0.5, rtol=1e-4)
+
+
+@pytest.mark.parametrize("layers,hw", [
+    (vgg16.LAYERS, (64, 64)),
+    (yolov3.TINY_LAYERS, (64, 64)),
+    (yolov3.LAYERS_20, (64, 64)),
+])
+def test_network_forward(layers, hw):
+    rng = jax.random.PRNGKey(0)
+    params = init_cnn(rng, layers)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, *hw, 3))
+    out = cnn_forward(params, layers, x, impl="jax")
+    assert bool(jnp.isfinite(out).all())
+
+
+def test_jax_impl_matches_xla_impl():
+    layers = yolov3.TINY_LAYERS[:6]
+    params = init_cnn(jax.random.PRNGKey(2), layers)
+    x = jax.random.normal(jax.random.PRNGKey(3), (1, 32, 32, 3))
+    a = cnn_forward(params, layers, x, impl="jax")
+    b = cnn_forward(params, layers, x, impl="xla")
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-3,
+                               atol=2e-3)
+
+
+def test_vgg16_conv_count():
+    convs = [l for l in vgg16.LAYERS if l.kind == "conv"]
+    fcs = [l for l in vgg16.LAYERS if l.kind == "fc"]
+    assert len(convs) == 13 and len(fcs) == 3  # paper §II.B
+    assert all(l.kernel == 3 and l.stride == 1 for l in convs)
+
+
+def test_yolov3_tiny_conv_count():
+    convs = [l for l in yolov3.TINY_LAYERS if l.kind == "conv"]
+    assert len(convs) == 13  # paper §II.B
+
+
+def test_layer_dims_match_paper_table_iv():
+    """First YOLOv3 layers at 608x608 must reproduce Table IV M,N,K + AI."""
+    dims = conv_layer_dims(yolov3.LAYERS_20, 608, 608)
+    by_layer = {d["layer"]: d for d in dims}
+    # L1 (paper) == our conv 0; L2 == conv 1; L3 == conv 2
+    for ours, (name, m, n, k, ai, _) in [(0, yolov3.TABLE_IV[0]),
+                                         (1, yolov3.TABLE_IV[1]),
+                                         (2, yolov3.TABLE_IV[2])]:
+        d = by_layer[ours]
+        assert (d["M"], d["N"], d["K"]) == (m, n, k), (name, d)
+        assert abs(arithmetic_intensity(m, n, k) - ai) / ai < 0.05

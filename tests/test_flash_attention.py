@@ -1,0 +1,50 @@
+"""Flash-attention Pallas kernel vs oracle: shape/feature sweeps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.flash_attention import attention_ref, flash_attention
+
+
+def _run(b, s, h, hd, causal, window, cap, bq=16, bk=16, seed=0):
+    rng = np.random.default_rng(seed)
+    q, k, v = (jnp.asarray(rng.normal(size=(b, s, h, hd)), jnp.float32)
+               for _ in range(3))
+    got = flash_attention(q, k, v, causal=causal, window=window,
+                          logit_cap=cap, bq=bq, bk=bk, interpret=True)
+    def flat(x):
+        return x.transpose(0, 2, 1, 3).reshape(b * h, s, hd)
+    ref = attention_ref(flat(q), flat(k), flat(v), causal=causal,
+                        window=window, logit_cap=cap)
+    ref = ref.reshape(b, h, s, hd).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("case", [
+    dict(b=2, s=64, h=3, hd=16, causal=True, window=0, cap=0.0),
+    dict(b=1, s=128, h=2, hd=32, causal=True, window=32, cap=0.0, bq=32, bk=64),
+    dict(b=2, s=48, h=2, hd=16, causal=True, window=0, cap=50.0),
+    dict(b=1, s=64, h=1, hd=16, causal=False, window=0, cap=0.0),
+    dict(b=1, s=50, h=2, hd=16, causal=True, window=0, cap=0.0),  # padded
+])
+def test_flash_attention_cases(case):
+    _run(**case)
+
+
+@settings(max_examples=10, deadline=None)
+@given(s=st.integers(17, 96), h=st.integers(1, 3),
+       window=st.sampled_from([0, 8, 24]), seed=st.integers(0, 2**31))
+def test_flash_attention_property(s, h, window, seed):
+    _run(b=1, s=s, h=h, hd=16, causal=True, window=window, cap=0.0, seed=seed)
+
+
+def test_flash_attention_bf16():
+    rng = np.random.default_rng(1)
+    q, k, v = (jnp.asarray(rng.normal(size=(1, 64, 2, 16)), jnp.bfloat16)
+               for _ in range(3))
+    got = flash_attention(q, k, v, bq=16, bk=16, interpret=True)
+    assert got.dtype == jnp.bfloat16
+    assert bool(jnp.isfinite(got.astype(jnp.float32)).all())

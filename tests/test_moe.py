@@ -1,0 +1,86 @@
+"""MoE layer: routing invariants, capacity semantics, aux losses."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models.moe import apply_moe, init_moe
+
+
+def _setup(d=16, f=32, e=8, seed=0):
+    return init_moe(jax.random.PRNGKey(seed), d, f, e, jnp.float32)
+
+
+def test_output_shape_and_finite():
+    p = _setup()
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 12, 16))
+    y, aux = apply_moe(p, x, top_k=2)
+    assert y.shape == x.shape
+    assert bool(jnp.isfinite(y).all())
+    assert float(aux["dropped_frac"]) >= 0.0
+
+
+def test_high_capacity_drops_nothing():
+    p = _setup()
+    x = jax.random.normal(jax.random.PRNGKey(2), (2, 16, 16))
+    _, aux = apply_moe(p, x, top_k=2, capacity_factor=8.0)
+    assert float(aux["dropped_frac"]) == 0.0
+
+
+def test_tiny_capacity_drops_tokens():
+    p = _setup()
+    x = jax.random.normal(jax.random.PRNGKey(3), (4, 32, 16))
+    _, aux = apply_moe(p, x, top_k=2, capacity_factor=0.1)
+    assert float(aux["dropped_frac"]) > 0.3
+
+
+def test_combine_weights_convexity():
+    """With capacity high enough for no drops, scaling all expert outputs by
+    c scales the MoE output by c (combine weights sum to 1)."""
+    p = _setup()
+    x = jax.random.normal(jax.random.PRNGKey(4), (1, 8, 16))
+    y1, _ = apply_moe(p, x, top_k=2, capacity_factor=8.0)
+    p2 = dict(p, w_down=p["w_down"] * 2.0)
+    y2, _ = apply_moe(p2, x, top_k=2, capacity_factor=8.0)
+    np.testing.assert_allclose(np.asarray(y2), 2 * np.asarray(y1),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_load_balance_loss_range():
+    """Uniform routing -> lb loss ~1; concentrated routing -> ~E."""
+    p = _setup(e=8)
+    x = jax.random.normal(jax.random.PRNGKey(5), (4, 64, 16))
+    _, aux = apply_moe(p, x, top_k=2)
+    assert 0.5 < float(aux["load_balance"]) < 8.5
+
+
+def test_sharded_dispatch_matches_default():
+    """The masked scatter-add (DP-shardable) dispatch computes the same
+    outputs as the waste-row dispatch, drops included (same rank/keep)."""
+    p = _setup(e=8, seed=3)
+    x = jax.random.normal(jax.random.PRNGKey(7), (4, 32, 16))
+    for cf in (0.2, 1.25, 8.0):
+        y1, a1 = apply_moe(p, x, top_k=2, capacity_factor=cf,
+                           sharded_dispatch=False)
+        y2, a2 = apply_moe(p, x, top_k=2, capacity_factor=cf,
+                           sharded_dispatch=True)
+        np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                                   rtol=1e-5, atol=1e-6)
+        assert float(a1["dropped_frac"]) == float(a2["dropped_frac"])
+
+
+@settings(max_examples=10, deadline=None)
+@given(e=st.sampled_from([4, 8, 16]), k=st.integers(1, 4),
+       seed=st.integers(0, 2**31))
+def test_moe_gradient_flows(e, k, seed):
+    p = _setup(e=e, seed=seed % 100)
+    x = jax.random.normal(jax.random.PRNGKey(seed % 1000), (2, 8, 16))
+
+    def loss(p_):
+        y, _ = apply_moe(p_, x, top_k=min(k, e))
+        return jnp.sum(y ** 2)
+
+    g = jax.grad(loss)(p)
+    gnorm = sum(float(jnp.abs(v).sum()) for v in jax.tree.leaves(g))
+    assert np.isfinite(gnorm) and gnorm > 0

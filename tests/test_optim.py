@@ -1,0 +1,83 @@
+"""Optimizer + quantized-state tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.optim import AdamWConfig, adamw, constant, warmup_cosine
+from repro.optim.quantized_state import dequantize, quantize
+
+
+def _rosenbrockish_loss(p):
+    return jnp.sum((p["a"] - 1.0) ** 2) + jnp.sum((p["b"] + 2.0) ** 2)
+
+
+@pytest.mark.parametrize("moment_dtype", ["float32", "bfloat16", "int8"])
+def test_adamw_converges(moment_dtype):
+    cfg = AdamWConfig(lr=constant(0.05), weight_decay=0.0,
+                      moment_dtype=moment_dtype)
+    params = {"a": jnp.zeros((4, 4)), "b": jnp.ones((8,))}
+    state = adamw.init(cfg, params)
+
+    @jax.jit
+    def step(p, s):
+        g = jax.grad(_rosenbrockish_loss)(p)
+        return adamw.update(cfg, g, s, p)
+
+    for _ in range(300):
+        params, state, m = step(params, state)
+    assert float(_rosenbrockish_loss(params)) < 1e-2
+
+
+def test_weight_decay_only_on_matrices():
+    cfg = AdamWConfig(lr=constant(0.1), weight_decay=1.0)
+    params = {"w": jnp.full((4, 4), 5.0), "scale": jnp.full((4,), 5.0)}
+    state = adamw.init(cfg, params)
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    new_params, _, _ = adamw.update(cfg, zeros, state, params)
+    assert float(jnp.max(new_params["w"])) < 5.0       # decayed
+    np.testing.assert_allclose(new_params["scale"], 5.0)  # not decayed
+
+
+def test_grad_clipping():
+    cfg = AdamWConfig(lr=constant(0.0), grad_clip_norm=1.0)
+    params = {"w": jnp.zeros((4,))}
+    state = adamw.init(cfg, params)
+    _, _, m = adamw.update(cfg, {"w": jnp.full((4,), 100.0)}, state, params)
+    assert float(m["grad_norm"]) == pytest.approx(200.0)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(1, 2000),
+    scale=st.floats(1e-6, 1e4),
+    seed=st.integers(0, 2**31),
+)
+def test_quantize_roundtrip_bound(n, scale, seed):
+    """Property: |x - deq(q(x))| <= blockmax/127 elementwise, any shape."""
+    x = jnp.asarray(
+        np.random.default_rng(seed).normal(size=n) * scale, jnp.float32
+    )
+    t = quantize(x)
+    back = dequantize(t)
+    assert back.shape == x.shape
+    err = np.abs(np.asarray(back - x))
+    bound = np.abs(np.asarray(x)).max() / 127.0 + 1e-9
+    assert err.max() <= bound * 1.0001
+
+
+def test_quantized_state_memory_ratio():
+    """int8 moments take ~25% + scale overhead of fp32 moments."""
+    x = jnp.ones((1024, 1024), jnp.float32)
+    t = quantize(x)
+    q_bytes = t.q.size * 1 + t.scale.size * 4
+    assert q_bytes < 0.27 * x.size * 4
+
+
+def test_warmup_cosine_schedule():
+    fn = warmup_cosine(1.0, warmup_steps=10, total_steps=100, final_frac=0.1)
+    assert float(fn(0)) == 0.0
+    assert float(fn(10)) == pytest.approx(1.0, rel=1e-3)
+    assert float(fn(100)) == pytest.approx(0.1, rel=1e-2)
+    assert float(fn(5)) == pytest.approx(0.5, rel=1e-3)

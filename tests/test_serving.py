@@ -1,0 +1,61 @@
+"""Serving engine behaviour."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import transformer as tf
+from repro.serving import ServingEngine
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = configs.smoke_config("llama3.2-1b", seq_len=64)
+    params = tf.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def test_engine_completes_requests(setup):
+    cfg, params = setup
+    eng = ServingEngine(cfg, params, batch_size=2, capacity=64)
+    rng = np.random.default_rng(0)
+    uids = [eng.submit(rng.integers(1, cfg.vocab_size, 5), max_new_tokens=4)
+            for _ in range(3)]
+    results = eng.run()
+    assert set(results) == set(uids)
+    for toks in results.values():
+        assert len(toks) == 4
+        assert all(0 <= t < cfg.vocab_size for t in toks)
+
+
+def test_engine_greedy_matches_manual_decode(setup):
+    """Single request, greedy: engine output == manual prefill+argmax loop."""
+    cfg, params = setup
+    prompt = np.array([5, 9, 2, 7], np.int32)
+    eng = ServingEngine(cfg, params, batch_size=1, capacity=64)
+    eng.submit(prompt, max_new_tokens=5)
+    got = list(eng.run().values())[0]
+
+    cache = tf.init_cache(cfg, 1, 64)
+    toks = jnp.asarray(prompt)[None]
+    for t in range(len(prompt)):
+        logits, cache = tf.decode_step(cfg, params, cache, toks[:, t:t + 1],
+                                       jnp.int32(t))
+    expect = []
+    pos = len(prompt)
+    nxt = int(jnp.argmax(logits[0]))
+    for _ in range(5):
+        expect.append(nxt)
+        logits, cache = tf.decode_step(
+            cfg, params, cache, jnp.asarray([[nxt]], jnp.int32), jnp.int32(pos)
+        )
+        nxt = int(jnp.argmax(logits[0]))
+        pos += 1
+    assert got == expect
+
+
+def test_engine_rejects_encoder_archs():
+    cfg = configs.smoke_config("hubert-xlarge")
+    with pytest.raises(AssertionError):
+        ServingEngine(cfg, {}, 1, 16)
