@@ -1,0 +1,131 @@
+"""End-to-end planned CNN inference: the planner driving a whole network.
+
+The paper's bottom line is a fully co-designed network run: every conv layer
+executes the algorithm + blocking the per-layer analysis chose (§VII, Figs
+9-10).  This benchmark reproduces that shape with the planning subsystem
+(core/planner.py):
+
+  1. A Planner resolves a ConvPlan per conv layer (cost-model autotune on a
+     cold cache; pure lookups on a warm one) — printed as a per-layer table
+     of (algorithm, block config, predicted cost).
+  2. The network runs end-to-end through ``cnn_forward(plans=...)`` and the
+     total latency is reported.
+  3. A second Planner is opened on the same cache file and re-plans the
+     network: it must hit the persistent cache with **zero re-tunes**, which
+     the emitted ``warm_retunes`` row asserts.
+
+Models: vgg16 (default, paper's classification network), yolov3-tiny, and
+yolov3-20 (the first-20-layer Darknet-53 slice the paper sweeps in gem5).
+
+Run directly:  PYTHONPATH=src python -m benchmarks.e2e_cnn --model vgg16
+"""
+from __future__ import annotations
+
+import argparse
+from typing import Optional, Tuple
+
+from benchmarks.common import emit, time_jit
+
+
+def _network(model: str):
+    """(layer table, default input hw, in_channels) for a model name."""
+    from repro.configs import vgg16, yolov3
+
+    if model == "vgg16":
+        return vgg16.LAYERS, vgg16.INPUT_HW, 3
+    if model == "yolov3-tiny":
+        return yolov3.TINY_LAYERS, yolov3.TINY_INPUT_HW, 3
+    if model == "yolov3-20":
+        return yolov3.LAYERS_20, yolov3.INPUT_HW, 3
+    raise ValueError(f"unknown model {model!r}")
+
+
+def run(
+    model: str = "vgg16",
+    input_hw: Optional[Tuple[int, int]] = None,
+    batch: int = 1,
+    impl: str = "jax",
+    mode: str = "cost",
+    cache_path: Optional[str] = None,
+    reps: int = 2,
+) -> None:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.planner import DEFAULT_CACHE_PATH, Planner
+    from repro.models.cnn import cnn_forward, init_cnn, plan_layers
+
+    layers, default_hw, in_ch = _network(model)
+    h, w = input_hw or default_hw
+    cache = cache_path if cache_path is not None else DEFAULT_CACHE_PATH
+
+    # -- 1. plan the whole network (cold: tunes; warm: pure cache hits) ------
+    planner = Planner(mode=mode, impl=impl, cache_path=cache, autosave=False)
+    plans = plan_layers(layers, h, w, planner, in_channels=in_ch, batch=batch)
+    planner.save()   # one merge+write for the whole net, not one per layer
+    conv_i = 0
+    for i, (l, plan) in enumerate(zip(layers, plans)):
+        if plan is None:
+            continue
+        blk = plan.block
+        emit(
+            f"e2e_{model}_L{conv_i:02d}",
+            plan.predicted_s,
+            f"{plan.algorithm.value} {l.kernel}x{l.kernel}/s{l.stride} "
+            f"bm{blk.bm} bn{blk.bn} bk{blk.bk} "
+            f"kblocks={'x'.join(map(str, plan.kernel_blocks))} [{plan.source}]",
+        )
+        conv_i += 1
+    total_pred = sum(p.predicted_s for p in plans if p is not None)
+    emit(f"e2e_{model}_predicted_total", total_pred,
+         f"tunes={planner.stats['tunes']} hits={planner.stats['hits']}")
+
+    # -- 2. run the network end-to-end through the plans ---------------------
+    rng = jax.random.PRNGKey(0)
+    params = init_cnn(rng, layers, in_channels=in_ch)
+    x = jax.random.normal(jax.random.PRNGKey(1), (batch, h, w, in_ch))
+    fwd = jax.jit(
+        lambda xx: cnn_forward(params, layers, xx, impl=impl, plans=plans)
+    )
+    t = time_jit(fwd, x, reps=reps, warmup=1)
+    emit(f"e2e_{model}_total", t,
+         f"{model} {h}x{w} b{batch} impl={impl} planned end-to-end")
+
+    # -- 3. warm-cache proof: a fresh planner must re-tune nothing -----------
+    planner2 = Planner(mode=mode, impl=impl, cache_path=cache)
+    plan_layers(layers, h, w, planner2, in_channels=in_ch, batch=batch)
+    retunes = planner2.stats["tunes"]
+    emit(f"e2e_{model}_warm_retunes", 0.0,
+         f"retunes={retunes} hits={planner2.stats['hits']}")
+    assert retunes == 0, (
+        f"warm plan cache re-tuned {retunes} layers — persistence is broken"
+    )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--model", default="vgg16",
+                    choices=["vgg16", "yolov3-tiny", "yolov3-20"])
+    ap.add_argument("--hw", type=int, default=None,
+                    help="square input resolution (default: model's own)")
+    ap.add_argument("--batch", type=int, default=1)
+    ap.add_argument("--impl", default="jax", choices=["jax", "pallas"])
+    ap.add_argument("--mode", default="cost", choices=["cost", "measure"])
+    ap.add_argument("--cache", default=None,
+                    help="plan-cache JSON path (default: REPRO_PLAN_CACHE or "
+                         ".cache/conv_plans.json)")
+    ap.add_argument("--reps", type=int, default=2)
+    args = ap.parse_args()
+    run(
+        model=args.model,
+        input_hw=(args.hw, args.hw) if args.hw else None,
+        batch=args.batch,
+        impl=args.impl,
+        mode=args.mode,
+        cache_path=args.cache,
+        reps=args.reps,
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -8,6 +8,8 @@ Sections:
   fig_cache_sweep    paper Figs 7-10 (cache x veclen co-design, both algos)
   table4_ai          paper Table IV (per-layer AI + %peak)
   winograd_vs_im2col paper §VII     (2.4x / 1.35x / 1.5x claims)
+  e2e_cnn            paper Figs 9-10 (planned end-to-end network; small
+                     resolution here — full runs via benchmarks.e2e_cnn)
   lm_roofline        beyond-paper   (assigned-arch dry-run roofline table)
 """
 from __future__ import annotations
@@ -19,6 +21,7 @@ import traceback
 def main() -> None:
     from benchmarks import (
         breakdown,
+        e2e_cnn,
         fig_cache_sweep,
         lm_roofline,
         table2_blocksizes,
@@ -34,6 +37,8 @@ def main() -> None:
         ("fig_cache_sweep", fig_cache_sweep.run),
         ("table4_ai", table4_ai.run),
         ("winograd_vs_im2col", winograd_vs_im2col.run),
+        ("e2e_cnn", lambda: e2e_cnn.run(model="vgg16", input_hw=(64, 64),
+                                        reps=1)),
         ("lm_roofline", lm_roofline.run),
     ]
     failures = 0

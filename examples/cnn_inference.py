@@ -1,5 +1,6 @@
 """End-to-end CNN inference (the paper's workload): YOLOv3-tiny + VGG16
-with per-layer algorithm selection, timed per algorithm path.
+with per-layer algorithm selection, timed per algorithm path, then the same
+networks fully planned (core/planner.py: co-design decided once, cached).
 
   PYTHONPATH=src python examples/cnn_inference.py [--input 416]
 """
@@ -10,29 +11,33 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import vgg16, yolov3
+from repro.core.planner import Planner
 from repro.data import image_batch
-from repro.models.cnn import cnn_forward, conv_layer_dims, init_cnn
+from repro.models.cnn import cnn_forward, init_cnn, plan_layers
 
 
-def bench(name, layers, hw):
+def bench(name, layers, hw, planner):
     params = init_cnn(jax.random.PRNGKey(0), layers)
     x = image_batch(0, 1, *hw)
-    for impl in ("jax", "xla"):
-        fn = jax.jit(lambda p, xx: cnn_forward(p, layers, xx, impl=impl))
+    tunes_before = planner.stats["tunes"]
+    plans = plan_layers(layers, *hw, planner)
+    net_tunes = planner.stats["tunes"] - tunes_before
+    for impl, kw in (("jax", {}), ("xla", {}), ("jax", {"plans": plans})):
+        fn = jax.jit(lambda p, xx: cnn_forward(p, layers, xx, impl=impl, **kw))
         out = fn(params, x)
         jax.block_until_ready(out)
         t0 = time.perf_counter()
         out = fn(params, x)
         jax.block_until_ready(out)
         dt = time.perf_counter() - t0
-        print(f"  {name:12s} impl={impl:4s} out={tuple(out.shape)} {dt*1e3:.1f} ms")
-    dims = conv_layer_dims(layers, *hw)
+        tag = impl + ("+plan" if kw else "")
+        print(f"  {name:12s} impl={tag:8s} out={tuple(out.shape)} {dt*1e3:.1f} ms")
     algos = {}
-    for d in dims:
-        key = ("winograd" if d["kernel"] == 3 and d["stride"] == 1 else
-               "direct" if d["kernel"] == 1 else "im2col")
-        algos[key] = algos.get(key, 0) + 1
-    print(f"  {name:12s} conv layers by algorithm: {algos}")
+    for plan in plans:
+        if plan is not None:
+            algos[plan.algorithm.value] = algos.get(plan.algorithm.value, 0) + 1
+    print(f"  {name:12s} planned conv layers by algorithm: {algos} "
+          f"(tunes={net_tunes})")
 
 
 def main():
@@ -40,10 +45,11 @@ def main():
     ap.add_argument("--input", type=int, default=224)
     args = ap.parse_args()
     hw = (args.input, args.input)
+    planner = Planner()   # persistent cache: second invocation re-tunes nothing
     print("== YOLOv3-tiny ==")
-    bench("yolov3-tiny", yolov3.TINY_LAYERS, hw)
+    bench("yolov3-tiny", yolov3.TINY_LAYERS, hw, planner)
     print("== VGG16 ==")
-    bench("vgg16", vgg16.LAYERS, hw)
+    bench("vgg16", vgg16.LAYERS, hw, planner)
 
 
 if __name__ == "__main__":

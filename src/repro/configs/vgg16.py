@@ -23,3 +23,16 @@ LAYERS = (
 
 INPUT_HW = (224, 224)
 NAME = "vgg16"
+
+
+def plan_network(planner, input_hw=INPUT_HW, batch=1, in_channels=3,
+                 dtype="float32"):
+    """Per-layer ConvPlans for VGG16 at ``input_hw`` (see core/planner.py).
+
+    Returns a plans list aligned with LAYERS, ready for
+    ``cnn_forward(plans=...)`` — the whole network runs fully planned.
+    """
+    from repro.models.cnn import plan_layers
+
+    return plan_layers(LAYERS, *input_hw, planner, in_channels=in_channels,
+                       batch=batch, dtype=dtype)

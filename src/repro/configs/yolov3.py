@@ -67,6 +67,17 @@ INPUT_HW = (608, 608)
 TINY_INPUT_HW = (416, 416)
 NAME = "yolov3"
 
+
+def plan_network(planner, layers=LAYERS_20, input_hw=INPUT_HW, batch=1,
+                 in_channels=3, dtype="float32"):
+    """Per-layer ConvPlans for a YOLOv3 layer table (default: the paper's
+    20-layer hw-sweep slice at 608x608).  Pass ``layers=TINY_LAYERS,
+    input_hw=TINY_INPUT_HW`` for the full YOLOv3-tiny network."""
+    from repro.models.cnn import plan_layers
+
+    return plan_layers(layers, *input_hw, planner, in_channels=in_channels,
+                       batch=batch, dtype=dtype)
+
 # Paper Table IV: the 14 discrete YOLOv3 conv-layer GEMMs (M, N, K) with the
 # paper's measured AI and % of A64FX single-core peak.
 TABLE_IV = (

@@ -6,10 +6,12 @@
 - conv2d:     public dispatching conv entry point
 - vmem_model: analytical TPU memory-hierarchy model (the gem5 analogue)
 - codesign:   vector-length / cache-size / lanes co-design sweeps (paper §V/§VI)
+- planner:    per-layer ConvPlan resolution + persistent autotuning cache
 """
 from repro.core.conv_spec import ConvAlgorithm, ConvSpec, select_algorithm
 from repro.core.conv2d import conv2d, conv2d_reference
 from repro.core.im2col import conv2d_im2col, im2col
+from repro.core.planner import ConvPlan, Planner
 from repro.core.winograd import conv2d_winograd, transform_weights
 
 __all__ = [
@@ -20,6 +22,8 @@ __all__ = [
     "conv2d_reference",
     "conv2d_im2col",
     "im2col",
+    "ConvPlan",
+    "Planner",
     "conv2d_winograd",
     "transform_weights",
 ]

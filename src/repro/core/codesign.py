@@ -98,6 +98,45 @@ def sweep_lanes(
     return out
 
 
+def predict_conv_time(
+    spec: ConvSpec,
+    h: int,
+    w: int,
+    algorithm,
+    hw: ChipSpec = V5E,
+    dtype_bytes: int = 4,
+    batch: int = 1,
+) -> float:
+    """Modeled seconds for one conv layer executed with ``algorithm``.
+
+    Roofline time max(compute, HBM traffic) at this layer's dims.  GEMM-family
+    algorithms (direct / im2col) move the patch matrix, the weights and the
+    output; Winograd moves the tile/transform pipeline with transforms fused
+    in VMEM (the structure of kernels/winograd).  Activation terms scale with
+    ``batch``; weight terms do not.
+    """
+    from repro.core.conv_spec import ConvAlgorithm
+    from repro.core.winograd import winograd_flops
+
+    oh, ow = spec.out_hw(h, w)
+    cin, cout = spec.in_channels, spec.out_channels
+    kh, kw = spec.kernel_size
+    peak = hw.peak_flops_fp32 if dtype_bytes == 4 else hw.peak_flops_bf16
+    bw = hw.hbm_bandwidth
+    if algorithm is ConvAlgorithm.WINOGRAD:
+        fl = winograd_flops(oh, ow, cin, cout)
+        tiles = batch * -(-oh // 6) * -(-ow // 6)
+        fused_bytes = dtype_bytes * (tiles * 64 * cin + 64 * cin * cout
+                                     + tiles * 36 * cout)
+        return max(batch * fl["winograd_flops"] / peak, fused_bytes / bw)
+    # direct-1x1 and im2col share the GEMM roofline; direct just has K = Cin.
+    taps = kh * kw
+    gemm_bytes = dtype_bytes * (batch * oh * ow * taps * cin + taps * cin * cout
+                                + batch * oh * ow * cout)
+    flops = 2.0 * batch * oh * ow * taps * cin * cout
+    return max(flops / peak, gemm_bytes / bw)
+
+
 def select_algorithm_by_cost(
     spec: ConvSpec, h: int, w: int, hw: ChipSpec = V5E, dtype_bytes: int = 4
 ):
@@ -110,23 +149,14 @@ def select_algorithm_by_cost(
     Winograd pipeline and picks the winner.
     """
     from repro.core.conv_spec import ConvAlgorithm, select_algorithm
-    from repro.core.winograd import winograd_flops
 
     base = select_algorithm(dataclasses.replace(spec, algorithm=ConvAlgorithm.AUTO))
     if base is not ConvAlgorithm.WINOGRAD:
         return base
-    oh, ow = spec.out_hw(h, w)
-    cin, cout = spec.in_channels, spec.out_channels
-    fl = winograd_flops(oh, ow, cin, cout)
-    peak = hw.peak_flops_fp32 if dtype_bytes == 4 else hw.peak_flops_bf16
-    bw = hw.hbm_bandwidth
-    im2col_bytes = dtype_bytes * (oh * ow * 9 * cin + 9 * cin * cout
-                                  + oh * ow * cout)
-    t_im2col = max(fl["direct_flops"] / peak, im2col_bytes / bw)
-    tiles = -(-oh // 6) * -(-ow // 6)
-    fused_bytes = dtype_bytes * (tiles * 64 * cin + 64 * cin * cout
-                                 + tiles * 36 * cout)
-    t_wino = max(fl["winograd_flops"] / peak, fused_bytes / bw)
+    t_wino = predict_conv_time(spec, h, w, ConvAlgorithm.WINOGRAD, hw, dtype_bytes)
+    t_im2col = predict_conv_time(
+        spec, h, w, ConvAlgorithm.IM2COL_GEMM, hw, dtype_bytes
+    )
     return ConvAlgorithm.WINOGRAD if t_wino < t_im2col else ConvAlgorithm.IM2COL_GEMM
 
 

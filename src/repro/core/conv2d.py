@@ -1,19 +1,25 @@
 """Public convolution API with per-layer algorithm dispatch.
 
 ``conv2d`` is the single entry point used by the model zoo (models/cnn.py)
-and the examples.  It consults the paper's selector (core/conv_spec.py) and
-routes to direct-GEMM / im2col+GEMM / Winograd, optionally through the
-Pallas kernels (kernels/) when ``impl='pallas'``.
+and the examples.  Routing comes from, in priority order: an explicit
+``ConvPlan`` (the planner's cached co-design decision — algorithm, impl and
+block sizes resolved once per layer/shape/chip), a ``Planner`` to look one
+up, or the per-call selectors in core/conv_spec.py / core/codesign.py.
+Execution goes to direct-GEMM / im2col+GEMM / Winograd, optionally through
+the Pallas kernels (kernels/) when the impl is 'pallas'.
 """
 from __future__ import annotations
 
-from typing import Optional
+from typing import Optional, TYPE_CHECKING
 
 import jax.numpy as jnp
 
 from repro.core.conv_spec import ConvAlgorithm, ConvSpec, select_algorithm
 from repro.core.im2col import conv2d_direct_1x1, conv2d_im2col
 from repro.core.winograd import conv2d_winograd
+
+if TYPE_CHECKING:  # import cycle: planner imports conv2d for measure mode
+    from repro.core.planner import ConvPlan, Planner
 
 
 def conv2d(
@@ -22,13 +28,25 @@ def conv2d(
     spec: ConvSpec,
     impl: str = "jax",
     interpret: Optional[bool] = None,
+    plan: Optional["ConvPlan"] = None,
+    planner: Optional["Planner"] = None,
 ) -> jnp.ndarray:
     """Convolve ``x`` (B,H,W,C) with ``w`` (kh,kw,C,O) per ``spec``.
 
     impl: 'jax' (pure jnp, the reference path) or 'pallas' (TPU kernels;
-    ``interpret=True`` executes them on CPU for validation).
+    ``interpret=True`` executes them on CPU for validation).  When ``plan``
+    is given (or resolved via ``planner``) it overrides both the algorithm
+    choice and ``impl``, and its block sizes are forwarded to the Pallas
+    kernels — no per-call re-selection happens.
     """
-    if spec.algorithm is ConvAlgorithm.AUTO_COST:
+    if plan is None and planner is not None:
+        plan = planner.plan(
+            spec, x.shape[1], x.shape[2], batch=x.shape[0], dtype=x.dtype
+        )
+    if plan is not None:
+        algo = plan.algorithm
+        impl = plan.impl
+    elif spec.algorithm is ConvAlgorithm.AUTO_COST:
         from repro.core.codesign import select_algorithm_by_cost
 
         algo = select_algorithm_by_cost(spec, x.shape[1], x.shape[2])
@@ -38,7 +56,9 @@ def conv2d(
         # Imported lazily: kernels are optional at import time.
         from repro.kernels import conv_ops
 
-        return conv_ops.conv2d_pallas(x, w, spec, algo, interpret=interpret)
+        return conv_ops.conv2d_pallas(
+            x, w, spec, algo, interpret=interpret, plan=plan
+        )
     if algo is ConvAlgorithm.DIRECT:
         return conv2d_direct_1x1(x, w, spec)
     if algo is ConvAlgorithm.WINOGRAD:

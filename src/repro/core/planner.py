@@ -1,0 +1,413 @@
+"""Per-layer convolution planner with a persistent autotuning cache.
+
+The paper's central finding is that the convolution algorithm *and* its
+blocking are per-layer, per-chip decisions (§VII + the follow-up co-design
+paper): the same 3x3 layer wants Winograd at high resolution and im2col+GEMM
+deep in the network, and the best BLIS-style block sizes shift with the
+layer's GEMM dims and the chip's cache budget.  The repo's ingredients — the
+selector (conv_spec/codesign), the VMEM cost model (vmem_model) and the
+Pallas kernels — used to re-derive that decision on every ``conv2d`` call.
+
+This module makes the co-design decision **once per (layer, shape, chip,
+dtype)** and caches it:
+
+  ConvPlan   frozen record of one decision: algorithm, impl, the GEMM-level
+             ``BlockConfig`` the autotuner chose, the kernel-level block
+             tuple the Pallas wrappers consume, and the predicted (or
+             measured) seconds.
+  Planner    resolves plans.  ``mode='cost'`` drives the vmem_model
+             autotuner + roofline (fast, deterministic, no hardware);
+             ``mode='measure'`` times candidate algorithms on the current
+             backend and keeps the winner (the paper's empirical per-layer
+             selection, §VII.A).  Plans persist in a JSON cache keyed by
+             (spec, input shape, chip, dtype, impl, mode, VMEM budget) so a
+             warm process — or the next process — re-tunes nothing.
+
+Every downstream consumer threads through here: ``core.conv2d`` accepts a
+plan (or a planner to look one up), ``kernels/conv_ops`` forwards the plan's
+block sizes to the Pallas kernels, and ``models/cnn.plan_layers`` resolves a
+whole network ahead of time (see benchmarks/e2e_cnn.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import tempfile
+from typing import Any, Dict, List, Optional, Tuple
+
+from repro.core.conv_spec import ConvAlgorithm, ConvSpec, select_algorithm
+from repro.core.vmem_model import BlockConfig, GemmShape, autotune_gemm
+from repro.hw import V5E, ChipSpec
+from repro.util import ceil_to
+
+PLAN_CACHE_VERSION = 1
+
+# Default on-disk location (overridable per Planner and via environment).
+DEFAULT_CACHE_PATH = os.environ.get(
+    "REPRO_PLAN_CACHE", os.path.join(".cache", "conv_plans.json")
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvPlan:
+    """One resolved co-design decision for one conv layer at one shape.
+
+    ``block`` is the autotuned GEMM-level BlockConfig (the paper's Table II
+    block sizes, VMEM in the role of L2).  ``kernel_blocks`` is what the
+    Pallas wrappers actually consume — (bm, bn, bk) for the direct GEMM,
+    (toh, bc, bo) for the fused im2col kernel, (bt, bc, bo) for the Winograd
+    pipeline.  ``predicted_s`` is modeled seconds in cost mode and measured
+    wall seconds in measure mode (``source`` says which).
+    """
+
+    algorithm: ConvAlgorithm
+    impl: str
+    block: BlockConfig
+    kernel_blocks: Tuple[int, int, int]
+    predicted_s: float
+    source: str = "cost_model"          # cost_model | measured
+
+    def to_json(self) -> Dict[str, Any]:
+        return {
+            "algorithm": self.algorithm.value,
+            "impl": self.impl,
+            "block": [self.block.bm, self.block.bn, self.block.bk],
+            "kernel_blocks": list(self.kernel_blocks),
+            "predicted_s": self.predicted_s,
+            "source": self.source,
+        }
+
+    @classmethod
+    def from_json(cls, d: Dict[str, Any]) -> "ConvPlan":
+        return cls(
+            algorithm=ConvAlgorithm(d["algorithm"]),
+            impl=d["impl"],
+            block=BlockConfig(*d["block"]),
+            kernel_blocks=tuple(d["kernel_blocks"]),
+            predicted_s=float(d["predicted_s"]),
+            source=d.get("source", "cost_model"),
+        )
+
+
+def plan_key(
+    spec: ConvSpec,
+    h: int,
+    w: int,
+    batch: int,
+    chip: str,
+    dtype: str,
+    impl: str,
+    mode: str = "cost",
+    vmem_budget: Optional[int] = None,
+) -> str:
+    """Canonical cache key: every field that changes the decision."""
+    return "|".join(
+        [
+            chip,
+            dtype,
+            impl,
+            mode,
+            f"v{vmem_budget if vmem_budget is not None else 0}",
+            f"b{batch}",
+            f"h{h}w{w}",
+            f"ci{spec.in_channels}co{spec.out_channels}",
+            f"k{spec.kh}x{spec.kw}",
+            f"s{spec.stride[0]}x{spec.stride[1]}",
+            f"p{spec.padding[0]}x{spec.padding[1]}",
+            f"d{spec.dilation[0]}x{spec.dilation[1]}",
+            spec.algorithm.value,
+        ]
+    )
+
+
+def _dtype_name(dtype) -> str:
+    """'float32' from jnp.float32 / np.dtype / str alike (no jax import)."""
+    name = getattr(dtype, "__name__", None) or getattr(dtype, "name", None)
+    return name if name is not None else str(dtype)
+
+
+def _dtype_bytes(dtype) -> int:
+    return {"bfloat16": 2, "float16": 2, "int8": 1, "fp8": 1}.get(
+        _dtype_name(dtype), 4
+    )
+
+
+def _eligible_algorithms(spec: ConvSpec) -> List[ConvAlgorithm]:
+    """Candidate set for measure mode (forced specs collapse to one)."""
+    if spec.algorithm not in (ConvAlgorithm.AUTO, ConvAlgorithm.AUTO_COST):
+        return [spec.algorithm]
+    if spec.kernel_size == (1, 1) and spec.stride == (1, 1):
+        return [ConvAlgorithm.DIRECT, ConvAlgorithm.IM2COL_GEMM]
+    if (
+        spec.kernel_size == (3, 3)
+        and spec.stride == (1, 1)
+        and spec.dilation == (1, 1)
+    ):
+        return [ConvAlgorithm.WINOGRAD, ConvAlgorithm.IM2COL_GEMM]
+    return [ConvAlgorithm.IM2COL_GEMM]
+
+
+class Planner:
+    """Resolves and caches ConvPlans.
+
+    Lookup order: in-memory dict -> persistent JSON cache -> tune (cost model
+    or microbenchmark) and write back.  ``stats`` counts ``hits`` (memory or
+    disk) and ``tunes`` (cache misses that ran the autotuner); a warm cache
+    means ``tunes == 0``.
+    """
+
+    def __init__(
+        self,
+        hw: ChipSpec = V5E,
+        mode: str = "cost",
+        impl: str = "jax",
+        cache_path: Optional[str] = DEFAULT_CACHE_PATH,
+        vmem_budget: Optional[int] = None,
+        measure_reps: int = 3,
+        autosave: bool = True,
+    ):
+        if mode not in ("cost", "measure"):
+            raise ValueError(f"mode must be 'cost' or 'measure', got {mode!r}")
+        self.hw = hw
+        self.mode = mode
+        self.impl = impl
+        self.cache_path = cache_path
+        self.vmem_budget = vmem_budget if vmem_budget is not None else hw.vmem_bytes
+        self.measure_reps = measure_reps
+        # autosave=False defers persistence to an explicit save() — use for
+        # bulk planning (plan_layers over a deep net) to avoid a locked
+        # read-merge-rewrite of the cache file on every miss.
+        self.autosave = autosave
+        self._dirty = False
+        self._plans: Dict[str, ConvPlan] = {}
+        self.stats = {"hits": 0, "tunes": 0}
+        if cache_path and os.path.exists(cache_path):
+            self._load()
+
+    # -- persistence ---------------------------------------------------------
+
+    def _load(self) -> None:
+        try:
+            with open(self.cache_path) as f:
+                data = json.load(f)
+        except (OSError, json.JSONDecodeError):
+            return  # unreadable/corrupt cache is a cold start, not an error
+        if data.get("version") != PLAN_CACHE_VERSION:
+            return
+        for key, d in data.get("plans", {}).items():
+            try:
+                self._plans[key] = ConvPlan.from_json(d)
+            except (KeyError, ValueError, TypeError):
+                continue
+
+    def save(self) -> None:
+        """Atomically write the cache (tmp file + rename).
+
+        Merges with whatever is on disk first (ours wins on key collision) so
+        concurrent planners tuning different layers converge to the union
+        instead of clobbering each other's entries; a sidecar flock makes the
+        read-merge-write sequence race-free where flock exists.
+        """
+        if not self.cache_path:
+            return
+        d = os.path.dirname(self.cache_path) or "."
+        os.makedirs(d, exist_ok=True)
+        lock = open(self.cache_path + ".lock", "w")
+        try:
+            try:
+                import fcntl
+
+                fcntl.flock(lock, fcntl.LOCK_EX)
+            except ImportError:  # non-POSIX: best-effort, merge still helps
+                pass
+            plans: Dict[str, Any] = {}
+            if os.path.exists(self.cache_path):
+                try:
+                    with open(self.cache_path) as f:
+                        disk = json.load(f)
+                    if disk.get("version") == PLAN_CACHE_VERSION:
+                        plans.update(disk.get("plans", {}))
+                except (OSError, json.JSONDecodeError):
+                    pass
+            plans.update({k: p.to_json() for k, p in self._plans.items()})
+            payload = {
+                "version": PLAN_CACHE_VERSION,
+                "chip": self.hw.name,
+                "plans": plans,
+            }
+            fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp")
+            try:
+                with os.fdopen(fd, "w") as f:
+                    json.dump(payload, f, indent=1, sort_keys=True)
+                os.replace(tmp, self.cache_path)
+            except BaseException:
+                if os.path.exists(tmp):
+                    os.unlink(tmp)
+                raise
+        finally:
+            lock.close()
+        self._dirty = False
+
+    def __len__(self) -> int:
+        return len(self._plans)
+
+    # -- planning ------------------------------------------------------------
+
+    def plan(
+        self,
+        spec: ConvSpec,
+        h: int,
+        w: int,
+        batch: int = 1,
+        dtype: Any = "float32",
+    ) -> ConvPlan:
+        """The plan for one layer at one input shape; tunes on first miss."""
+        key = plan_key(
+            spec, h, w, batch, self.hw.name, _dtype_name(dtype), self.impl,
+            self.mode, self.vmem_budget,
+        )
+        cached = self._plans.get(key)
+        if cached is not None:
+            self.stats["hits"] += 1
+            return cached
+        self.stats["tunes"] += 1
+        if self.mode == "measure":
+            plan = self._tune_measured(spec, h, w, batch, dtype)
+        else:
+            plan = self._tune_cost_model(spec, h, w, batch, dtype)
+        self._plans[key] = plan
+        if self.autosave:
+            self.save()
+        else:
+            self._dirty = True
+        return plan
+
+    def _resolve_blocks(
+        self,
+        spec: ConvSpec,
+        algo: ConvAlgorithm,
+        h: int,
+        w: int,
+        batch: int,
+        dtype_bytes: int,
+    ) -> Tuple[BlockConfig, Tuple[int, int, int]]:
+        """(GEMM BlockConfig, kernel block tuple) for one algorithm choice.
+
+        The BlockConfig is autotuned on the GEMM exactly as the kernel runs
+        it (direct: (B*OH*OW, O, C); im2col: K = kh*kw*C; winograd: the
+        per-position tuple multiply (tiles, O, C)).
+        """
+        oh, ow = spec.out_hw(h, w)
+        cin, cout = spec.in_channels, spec.out_channels
+        if algo is ConvAlgorithm.WINOGRAD:
+            tiles = batch * -(-oh // 6) * -(-ow // 6)
+            shape = GemmShape(tiles, cout, cin)
+        elif algo is ConvAlgorithm.DIRECT:
+            shape = GemmShape(batch * oh * ow, cout, cin)
+        else:
+            shape = GemmShape(batch * oh * ow, cout, spec.kh * spec.kw * cin)
+        cfg, _ = autotune_gemm(shape, self.hw, self.vmem_budget, dtype_bytes)
+        # Clamp to the padded problem so tiny layers don't over-pad.
+        cfg = BlockConfig(
+            min(cfg.bm, ceil_to(shape.m, self.hw.sublanes)),
+            min(cfg.bn, ceil_to(shape.n, self.hw.lane_width)),
+            min(cfg.bk, ceil_to(shape.k, self.hw.lane_width)),
+        )
+        if algo is ConvAlgorithm.WINOGRAD:
+            from repro.kernels.winograd.ops import pick_blocks
+
+            kernel_blocks = pick_blocks(
+                shape.m, cin, cout, vmem_budget=self.vmem_budget
+            )
+        elif algo is ConvAlgorithm.IM2COL_GEMM:
+            from repro.kernels.im2col_gemm.ops import pick_blocks
+
+            ph, pw = spec.padding
+            kernel_blocks = pick_blocks(
+                h + 2 * ph, w + 2 * pw, cin, cout, oh, ow, dtype_bytes,
+                vmem_budget=self.vmem_budget,
+            )
+        else:
+            kernel_blocks = (cfg.bm, cfg.bn, cfg.bk)
+        return cfg, kernel_blocks
+
+    def _tune_cost_model(
+        self, spec: ConvSpec, h: int, w: int, batch: int, dtype
+    ) -> ConvPlan:
+        """Analytic decision: codesign routing + vmem_model block autotune."""
+        from repro.core.codesign import predict_conv_time, select_algorithm_by_cost
+
+        dtype_bytes = _dtype_bytes(dtype)
+        if spec.algorithm in (ConvAlgorithm.AUTO, ConvAlgorithm.AUTO_COST):
+            algo = select_algorithm_by_cost(spec, h, w, self.hw, dtype_bytes)
+        else:
+            algo = select_algorithm(spec)
+        cfg, kernel_blocks = self._resolve_blocks(
+            spec, algo, h, w, batch, dtype_bytes
+        )
+        t = predict_conv_time(spec, h, w, algo, self.hw, dtype_bytes, batch)
+        return ConvPlan(
+            algorithm=algo,
+            impl=self.impl,
+            block=cfg,
+            kernel_blocks=kernel_blocks,
+            predicted_s=t,
+            source="cost_model",
+        )
+
+    def _tune_measured(
+        self, spec: ConvSpec, h: int, w: int, batch: int, dtype
+    ) -> ConvPlan:
+        """Empirical decision: time each eligible algorithm, keep the winner.
+
+        This is the paper's §VII.A methodology (measure both, pick per layer)
+        run on whatever backend is active; on CPU it times the jitted pure-JAX
+        paths, on TPU the Pallas kernels when ``impl='pallas'``.
+        """
+        import time
+
+        import jax
+        import jax.numpy as jnp
+        import numpy as np
+
+        from repro.core.conv2d import conv2d
+
+        dtype_bytes = _dtype_bytes(dtype)
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(rng.normal(size=(batch, h, w, spec.in_channels)), dtype)
+        wts = jnp.asarray(
+            rng.normal(size=(spec.kh, spec.kw, spec.in_channels, spec.out_channels))
+            * 0.05,
+            dtype,
+        )
+        best: Tuple[Optional[ConvPlan], float] = (None, float("inf"))
+        for algo in _eligible_algorithms(spec):
+            cfg, kernel_blocks = self._resolve_blocks(
+                spec, algo, h, w, batch, dtype_bytes
+            )
+            candidate = ConvPlan(
+                algorithm=algo,
+                impl=self.impl,
+                block=cfg,
+                kernel_blocks=kernel_blocks,
+                predicted_s=0.0,
+                source="measured",
+            )
+            fn = jax.jit(lambda a, b, p=candidate: conv2d(a, b, spec, plan=p))
+            try:
+                jax.block_until_ready(fn(x, wts))  # compile + warm
+                times = []
+                for _ in range(self.measure_reps):
+                    t0 = time.perf_counter()
+                    jax.block_until_ready(fn(x, wts))
+                    times.append(time.perf_counter() - t0)
+                t = float(np.median(times))
+            except Exception:
+                continue  # an algorithm that fails to run is never the plan
+            if t < best[1]:
+                best = (dataclasses.replace(candidate, predicted_s=t), t)
+        if best[0] is None:
+            # Every candidate failed (e.g. no backend): fall back to the model.
+            return self._tune_cost_model(spec, h, w, batch, dtype)
+        return best[0]

@@ -27,10 +27,7 @@ import itertools
 from typing import Iterable, List, Optional, Tuple
 
 from repro.hw import V5E, ChipSpec
-
-
-def _ceil_to(x: int, q: int) -> int:
-    return -(-x // q) * q
+from repro.util import ceil_to
 
 
 @dataclasses.dataclass(frozen=True)
@@ -89,9 +86,9 @@ def predict_gemm(
     sweep): peak compute scales, per-step overhead does not shrink — exactly
     the start-up-latency trade-off the paper observes (§VI.B.c).
     """
-    mp = _ceil_to(shape.m, max(block.bm, hw.sublanes))
-    np_ = _ceil_to(shape.n, max(block.bn, hw.lane_width))
-    kp = _ceil_to(shape.k, block.bk)
+    mp = ceil_to(shape.m, max(block.bm, hw.sublanes))
+    np_ = ceil_to(shape.n, max(block.bn, hw.lane_width))
+    kp = ceil_to(shape.k, block.bk)
     peak = (hw.peak_flops_fp32 if dtype_bytes == 4 else hw.peak_flops_bf16) * lanes
     compute_s = 2.0 * mp * np_ * kp / peak
     grid = (mp // block.bm) * (np_ // block.bn) * (kp // block.bk)
@@ -143,11 +140,11 @@ def autotune_gemm(
     best: Tuple[Optional[BlockConfig], Optional[GemmEstimate]] = (None, None)
     for cfg in candidate_blocks(budget, hw, dtype_bytes):
         # Don't bother with blocks bigger than the (padded) problem.
-        if cfg.bm > _ceil_to(shape.m, hw.sublanes) * 2:
+        if cfg.bm > ceil_to(shape.m, hw.sublanes) * 2:
             continue
-        if cfg.bn > _ceil_to(shape.n, hw.lane_width) * 2:
+        if cfg.bn > ceil_to(shape.n, hw.lane_width) * 2:
             continue
-        if cfg.bk > _ceil_to(shape.k, 128) * 2:
+        if cfg.bk > ceil_to(shape.k, 128) * 2:
             continue
         est = predict_gemm(shape, cfg, hw, dtype_bytes, lanes)
         if best[1] is None or est.total_s < best[1].total_s:

@@ -1,0 +1,23 @@
+"""Version shims for the Pallas TPU API surface.
+
+jax renamed ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams`` (~0.5);
+the kernels target the new name, this alias keeps them importable on the
+older jaxlib baked into the CI/dev image.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+try:
+    CompilerParams = pltpu.CompilerParams
+except AttributeError:
+    try:
+        CompilerParams = pltpu.TPUCompilerParams
+    except AttributeError as e:  # name the version problem at import time
+        raise ImportError(
+            "jax.experimental.pallas.tpu exposes neither CompilerParams nor "
+            "TPUCompilerParams; this jax version is unsupported by the "
+            "Pallas kernels"
+        ) from e
+
+__all__ = ["CompilerParams"]

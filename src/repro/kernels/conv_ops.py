@@ -1,15 +1,20 @@
 """Kernel-level dispatcher used by core.conv2d(impl='pallas').
 
 Routes per the paper's selector: 1x1 -> blocked GEMM (direct), 3x3 stride-1
--> Winograd kernels, everything else -> fused im2col+GEMM kernel.
+-> Winograd kernels, everything else -> fused im2col+GEMM kernel.  When a
+``ConvPlan`` is supplied the kernels run with its autotuned block sizes
+instead of their built-in heuristics.
 """
 from __future__ import annotations
 
-from typing import Optional
+from typing import Optional, TYPE_CHECKING
 
 import jax.numpy as jnp
 
 from repro.core.conv_spec import ConvAlgorithm, ConvSpec
+
+if TYPE_CHECKING:
+    from repro.core.planner import ConvPlan
 
 
 def conv2d_pallas(
@@ -18,12 +23,14 @@ def conv2d_pallas(
     spec: ConvSpec,
     algo: ConvAlgorithm,
     interpret: Optional[bool] = None,
+    plan: Optional["ConvPlan"] = None,
 ) -> jnp.ndarray:
     """x (B,H,W,C), w (kh,kw,C,O) -> (B,OH,OW,O) via Pallas kernels."""
     import jax
 
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
+    blocks = plan.kernel_blocks if plan is not None else None
 
     if algo is ConvAlgorithm.DIRECT:
         from repro.kernels.gemm import blocked_matmul
@@ -36,6 +43,7 @@ def conv2d_pallas(
         out = blocked_matmul(
             x.reshape(b * oh * ow, c),
             w.reshape(c, spec.out_channels),
+            block=blocks,
             interpret=interpret,
         )
         return out.reshape(b, oh, ow, spec.out_channels)
@@ -43,8 +51,8 @@ def conv2d_pallas(
     if algo is ConvAlgorithm.WINOGRAD:
         from repro.kernels.winograd import conv2d_winograd_pallas
 
-        return conv2d_winograd_pallas(x, w, spec, interpret=interpret)
+        return conv2d_winograd_pallas(x, w, spec, blocks=blocks, interpret=interpret)
 
     from repro.kernels.im2col_gemm import conv2d_pallas_im2col
 
-    return conv2d_pallas_im2col(x, w, spec, interpret=interpret)
+    return conv2d_pallas_im2col(x, w, spec, blocks=blocks, interpret=interpret)

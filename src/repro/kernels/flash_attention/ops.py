@@ -7,10 +7,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.flash_attention.kernel import flash_attention_pallas
-
-
-def _ceil_to(x: int, q: int) -> int:
-    return -(-x // q) * q
+from repro.util import ceil_to
 
 
 @functools.partial(
@@ -30,9 +27,9 @@ def flash_attention(
 ) -> jnp.ndarray:
     b, s, h, hd = q.shape
     sk = k.shape[1]
-    bq = min(bq, _ceil_to(s, 8))
-    bk = min(bk, _ceil_to(sk, 8))
-    sp, skp = _ceil_to(s, bq), _ceil_to(sk, bk)
+    bq = min(bq, ceil_to(s, 8))
+    bk = min(bk, ceil_to(sk, 8))
+    sp, skp = ceil_to(s, bq), ceil_to(sk, bk)
     # Padding: query pad rows produce garbage rows we slice off; key pad
     # columns are masked out because their positions exceed every real
     # query position under the causal mask, or are handled by -inf rows

@@ -24,6 +24,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import CompilerParams
+
 
 def _matmul_kernel_6loop(a_ref, b_ref, c_ref, acc_ref):
     """Grid (nm, nn, nk), K innermost: accumulate A@B blocks in VMEM."""
@@ -75,7 +77,7 @@ def matmul_pallas(
             ],
             out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
             out_shape=out_shape,
-            compiler_params=pltpu.CompilerParams(
+            compiler_params=CompilerParams(
                 dimension_semantics=("parallel", "parallel")
             ),
             interpret=interpret,
@@ -91,7 +93,7 @@ def matmul_pallas(
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
         out_shape=out_shape,
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")
         ),
         interpret=interpret,

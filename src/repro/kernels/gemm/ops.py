@@ -15,19 +15,16 @@ import jax.numpy as jnp
 from repro.core.vmem_model import BlockConfig, GemmShape, autotune_gemm
 from repro.hw import V5E
 from repro.kernels.gemm.kernel import matmul_pallas
-
-
-def _ceil_to(x: int, q: int) -> int:
-    return -(-x // q) * q
+from repro.util import ceil_to
 
 
 def default_block(m: int, n: int, k: int, dtype_bytes: int = 4) -> BlockConfig:
     """Autotuned block for this shape under the v5e VMEM budget, clamped to
     the (padded) problem so tiny test shapes don't over-pad."""
     cfg, _ = autotune_gemm(GemmShape(m, n, k), V5E, dtype_bytes=dtype_bytes)
-    bm = min(cfg.bm, _ceil_to(m, 8))
-    bn = min(cfg.bn, _ceil_to(n, 128))
-    bk = min(cfg.bk, _ceil_to(k, 128))
+    bm = min(cfg.bm, ceil_to(m, 8))
+    bn = min(cfg.bn, ceil_to(n, 128))
+    bk = min(cfg.bk, ceil_to(k, 128))
     return BlockConfig(bm, bn, bk)
 
 
@@ -58,7 +55,7 @@ def blocked_matmul(
         bm, bn, bk = cfg.bm, cfg.bn, cfg.bk
     else:
         bm, bn, bk = block
-    mp, np_, kp = _ceil_to(m, bm), _ceil_to(n, bn), _ceil_to(k, bk)
+    mp, np_, kp = ceil_to(m, bm), ceil_to(n, bn), ceil_to(k, bk)
     a_p = jnp.pad(a, ((0, mp - m), (0, kp - k))) if (mp, kp) != (m, k) else a
     b_p = jnp.pad(b, ((0, kp - k), (0, np_ - n))) if (kp, np_) != (k, n) else b
     if variant == "3loop":

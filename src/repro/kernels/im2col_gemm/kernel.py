@@ -21,6 +21,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import CompilerParams
+
 
 def _conv_kernel(
     x_ref,  # (1, Hp, Wp, bc) VMEM-resident input block (one channel slab)
@@ -108,7 +110,7 @@ def conv2d_im2col_gemm_pallas(
         ),
         out_shape=jax.ShapeDtypeStruct((b, ohp, ow, o), out_dtype),
         scratch_shapes=[pltpu.VMEM((toh, ow, bo), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "parallel", "arbitrary")
         ),
         interpret=interpret,

@@ -15,14 +15,12 @@ import jax.numpy as jnp
 from repro.core.conv_spec import ConvSpec
 from repro.hw import V5E
 from repro.kernels.im2col_gemm.kernel import conv2d_im2col_gemm_pallas
-
-
-def _ceil_to(x: int, q: int) -> int:
-    return -(-x // q) * q
+from repro.util import ceil_to
 
 
 def pick_blocks(
-    hp: int, wp: int, c: int, o: int, oh: int, ow: int, dtype_bytes: int = 4
+    hp: int, wp: int, c: int, o: int, oh: int, ow: int, dtype_bytes: int = 4,
+    vmem_budget: Optional[int] = None,
 ) -> Tuple[int, int, int]:
     """(toh, bc, bo): biggest channel slab + row tile fitting the VMEM budget.
 
@@ -30,13 +28,13 @@ def pick_blocks(
     (Table II): the input slab (Hp*Wp*bc) plays the role of the packed B
     panel, the accumulator (toh*OW*bo) the role of the C block.
     """
-    budget = V5E.vmem_bytes
-    bc = min(_ceil_to(c, 8), 128)
+    budget = vmem_budget if vmem_budget is not None else V5E.vmem_bytes
+    bc = min(ceil_to(c, 8), 128)
     # Shrink the channel slab until it takes at most ~2/3 of VMEM (x2 for
     # double buffering).
     while bc > 8 and 2 * hp * wp * bc * dtype_bytes > 2 * budget // 3:
         bc //= 2
-    bo = min(_ceil_to(o, 128), 256)
+    bo = min(ceil_to(o, 128), 256)
     toh = min(oh, 64)
     while toh > 8 and toh * ow * bo * 4 > budget // 3:
         toh //= 2
@@ -65,8 +63,8 @@ def conv2d_pallas_im2col(
         h + 2 * ph, ww + 2 * pw, c, o, oh, ow, jnp.dtype(x.dtype).itemsize
     )
     toh = min(toh, oh)
-    ohp = _ceil_to(oh, toh)
-    cp, op = _ceil_to(c, bc), _ceil_to(o, bo)
+    ohp = ceil_to(oh, toh)
+    cp, op = ceil_to(c, bc), ceil_to(o, bo)
     need_h = (ohp - 1) * sh + kh
     need_w = (ow - 1) * sw + kw
     x_p = jnp.pad(

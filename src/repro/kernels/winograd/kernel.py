@@ -22,6 +22,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import CompilerParams
+
 from repro.core.winograd import AT, BT
 
 
@@ -72,7 +74,7 @@ def input_transform_pallas(
         ],
         out_specs=pl.BlockSpec((8, 8, bt, bc), lambda i, j: (0, 0, i, j)),
         out_shape=jax.ShapeDtypeStruct((8, 8, t, c), tiles.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel")
         ),
         interpret=interpret,
@@ -100,7 +102,7 @@ def tuple_multiply_pallas(
         out_specs=pl.BlockSpec((1, bt, bo), lambda pp, i, j, k: (pp, i, j)),
         out_shape=jax.ShapeDtypeStruct((p, t, o), v.dtype),
         scratch_shapes=[pltpu.VMEM((bt, bo), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "parallel", "arbitrary")
         ),
         interpret=interpret,
@@ -121,7 +123,7 @@ def output_transform_pallas(
         ],
         out_specs=pl.BlockSpec((bt, 6, 6, bo), lambda i, j: (i, 0, 0, j)),
         out_shape=jax.ShapeDtypeStruct((t, 6, 6, o), m.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel")
         ),
         interpret=interpret,

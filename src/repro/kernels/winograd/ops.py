@@ -16,19 +16,19 @@ import jax.numpy as jnp
 from repro.core.conv_spec import ConvSpec
 from repro.core.winograd import OUT_TILE, TILE, _tile_input, transform_weights
 from repro.hw import V5E
+from repro.util import ceil_to
 
 
-def _ceil_to(x: int, q: int) -> int:
-    return -(-x // q) * q
-
-
-def pick_blocks(t: int, c: int, o: int) -> Tuple[int, int, int]:
+def pick_blocks(
+    t: int, c: int, o: int, vmem_budget: Optional[int] = None
+) -> Tuple[int, int, int]:
     """(bt, bc, bo) aligned to (sublane, lane) granularity, VMEM-bounded."""
-    bt = min(_ceil_to(t, 8), 256)
-    bc = min(_ceil_to(c, 128), 512)
-    bo = min(_ceil_to(o, 128), 512)
+    budget = vmem_budget if vmem_budget is not None else V5E.vmem_bytes
+    bt = min(ceil_to(t, 8), 256)
+    bc = min(ceil_to(c, 128), 512)
+    bo = min(ceil_to(o, 128), 512)
     # input-transform block: bt*8*8*bc*4 bytes x2 buffers must fit VMEM.
-    while bt > 8 and 2 * bt * 64 * bc * 4 > V5E.vmem_bytes // 2:
+    while bt > 8 and 2 * bt * 64 * bc * 4 > budget // 2:
         bt //= 2
     return bt, bc, bo
 
@@ -64,7 +64,7 @@ def conv2d_winograd_pallas(
     tiles = tiles.reshape(t, TILE, TILE, c)
 
     bt, bc, bo = blocks or pick_blocks(t, c, o)
-    tp, cp, op = _ceil_to(t, bt), _ceil_to(c, bc), _ceil_to(o, bo)
+    tp, cp, op = ceil_to(t, bt), ceil_to(c, bc), ceil_to(o, bo)
     tiles = jnp.pad(tiles, ((0, tp - t), (0, 0), (0, 0), (0, cp - c)))
 
     u = w if pretransformed else transform_weights(w, x.dtype)  # (8,8,C,O)

@@ -110,14 +110,60 @@ def init_cnn(rng, layers: Sequence[CNNLayer], in_channels: int = 3,
     return params
 
 
+def plan_layers(
+    layers: Sequence[CNNLayer],
+    h: int,
+    w: int,
+    planner,
+    in_channels: int = 3,
+    batch: int = 1,
+    dtype="float32",
+) -> List[Optional[object]]:
+    """Resolve a ConvPlan for every conv layer of a network ahead of time.
+
+    Walks the layer table exactly like ``cnn_forward`` does (same shape
+    propagation) and asks ``planner`` for each conv's plan at its actual
+    input resolution.  Returns a list aligned with ``layers`` (None for
+    non-conv layers) that plugs straight into ``cnn_forward(plans=...)``.
+    """
+    plans: List[Optional[object]] = []
+    ch: List[Tuple[int, int, int]] = []
+    cur_ch, cur_h, cur_w = in_channels, h, w
+    for l in layers:
+        plan = None
+        if l.kind == "conv":
+            spec = _conv_spec(l, cur_ch)
+            plan = planner.plan(spec, cur_h, cur_w, batch=batch, dtype=dtype)
+            cur_h, cur_w = spec.out_hw(cur_h, cur_w)
+            cur_ch = l.out_channels
+        elif l.kind == "maxpool":
+            cur_h, cur_w = -(-cur_h // l.stride), -(-cur_w // l.stride)
+        elif l.kind == "upsample":
+            cur_h, cur_w = cur_h * l.size, cur_w * l.size
+        elif l.kind == "route":
+            cur_ch = sum(ch[j][0] for j in l.from_layers)
+            cur_h, cur_w = ch[l.from_layers[0]][1], ch[l.from_layers[0]][2]
+        elif l.kind == "fc":
+            cur_ch = l.out_channels
+        plans.append(plan)
+        ch.append((cur_ch, cur_h, cur_w))
+    return plans
+
+
 def cnn_forward(
     params: Sequence[Dict],
     layers: Sequence[CNNLayer],
     x: jnp.ndarray,
     impl: str = "jax",
     interpret: Optional[bool] = None,
+    planner=None,
+    plans: Optional[Sequence[Optional[object]]] = None,
 ) -> jnp.ndarray:
-    """x (B,H,W,C) NHWC.  ``impl``: 'jax' | 'pallas' | 'xla' (lax.conv)."""
+    """x (B,H,W,C) NHWC.  ``impl``: 'jax' | 'pallas' | 'xla' (lax.conv).
+
+    ``plans`` (from ``plan_layers``) or ``planner`` routes every conv through
+    its cached co-design plan instead of per-call selection.
+    """
     outputs: List[jnp.ndarray] = []
     cur = x
     in_ch = x.shape[-1]
@@ -130,7 +176,11 @@ def cnn_forward(
 
                 cur = conv2d_reference(cur, p["w"], spec)
             else:
-                cur = conv2d(cur, p["w"], spec, impl=impl, interpret=interpret)
+                cur = conv2d(
+                    cur, p["w"], spec, impl=impl, interpret=interpret,
+                    plan=plans[i] if plans is not None else None,
+                    planner=planner,
+                )
             if l.batch_norm:
                 cur = batchnorm_inference(cur, p["bn"])
             else:

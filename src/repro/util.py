@@ -1,0 +1,7 @@
+"""Tiny shared helpers used across core, kernels and benchmarks."""
+from __future__ import annotations
+
+
+def ceil_to(x: int, q: int) -> int:
+    """Round ``x`` up to the next multiple of ``q``."""
+    return -(-x // q) * q

@@ -1,6 +1,7 @@
 """Co-design model invariants + roofline machinery (HLO parsing)."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # property tests need it; skip, not error
 from hypothesis import given, settings, strategies as st
 
 from repro.core.codesign import MB, layer_roofline, sweep_cache_size, sweep_lanes

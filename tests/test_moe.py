@@ -3,6 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # property tests need it; skip, not error
 from hypothesis import given, settings, strategies as st
 
 from repro.models.moe import apply_moe, init_moe
