@@ -53,7 +53,7 @@ def run(
     import jax.numpy as jnp
 
     from repro.core.planner import DEFAULT_CACHE_PATH, Planner
-    from repro.models.cnn import cnn_forward, init_cnn, plan_layers
+    from repro.models.cnn import cnn_forward, cnn_infer, init_cnn, plan_layers
 
     layers, default_hw, in_ch = _network(model)
     h, w = input_hw or default_hw
@@ -90,6 +90,25 @@ def run(
     t = time_jit(fwd, x, reps=reps, warmup=1)
     emit(f"e2e_{model}_total", t,
          f"{model} {h}x{w} b{batch} impl={impl} planned end-to-end")
+
+    # -- 2b. fused epilogue: batchnorm folded offline, bias+act in-kernel ----
+    # Folding runs once ahead of serving (like the paper's offline Winograd
+    # weight transform, §VII.A), so it is excluded from the timed loop.
+    from repro.models.cnn import fold_batchnorm
+
+    folded = jax.block_until_ready(
+        jax.jit(lambda p: fold_batchnorm(p, layers))(params)
+    )
+    plans_t = tuple(plans)
+    fused = jax.jit(
+        lambda xx: cnn_infer(folded, layers, xx, impl=impl, plans=plans_t,
+                             fold_bn=False)
+    )
+    t_fused = time_jit(fused, x, reps=reps, warmup=1)
+    speedup = t / t_fused if t_fused > 0 else float("inf")
+    emit(f"e2e_{model}_total_fused", t_fused,
+         f"{model} {h}x{w} b{batch} impl={impl} bn-folded fused epilogue "
+         f"({speedup:.2f}x vs unfused)")
 
     # -- 3. warm-cache proof: a fresh planner must re-tune nothing -----------
     planner2 = Planner(mode=mode, impl=impl, cache_path=cache)

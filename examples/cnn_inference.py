@@ -1,6 +1,8 @@
 """End-to-end CNN inference (the paper's workload): YOLOv3-tiny + VGG16
 with per-layer algorithm selection, timed per algorithm path, then the same
-networks fully planned (core/planner.py: co-design decided once, cached).
+networks fully planned (core/planner.py: co-design decided once, cached),
+and finally the fused deployment path (``cnn_infer``: batchnorm folded into
+the conv weights, bias + activation fused into the kernels' output stage).
 
   PYTHONPATH=src python examples/cnn_inference.py [--input 416]
 """
@@ -13,7 +15,13 @@ import jax.numpy as jnp
 from repro.configs import vgg16, yolov3
 from repro.core.planner import Planner
 from repro.data import image_batch
-from repro.models.cnn import cnn_forward, init_cnn, plan_layers
+from repro.models.cnn import (
+    cnn_forward,
+    cnn_infer,
+    fold_batchnorm,
+    init_cnn,
+    plan_layers,
+)
 
 
 def bench(name, layers, hw, planner):
@@ -22,16 +30,28 @@ def bench(name, layers, hw, planner):
     tunes_before = planner.stats["tunes"]
     plans = plan_layers(layers, *hw, planner)
     net_tunes = planner.stats["tunes"] - tunes_before
-    for impl, kw in (("jax", {}), ("xla", {}), ("jax", {"plans": plans})):
-        fn = jax.jit(lambda p, xx: cnn_forward(p, layers, xx, impl=impl, **kw))
-        out = fn(params, x)
+    plans_t = tuple(plans)
+    folded = fold_batchnorm(params, layers)   # once, offline
+    runs = (
+        ("jax", params,
+         lambda p, xx: cnn_forward(p, layers, xx, impl="jax")),
+        ("xla", params,
+         lambda p, xx: cnn_forward(p, layers, xx, impl="xla")),
+        ("jax+plan", params,
+         lambda p, xx: cnn_forward(p, layers, xx, impl="jax", plans=plans_t)),
+        ("jax+fused", folded,
+         lambda p, xx: cnn_infer(p, layers, xx, impl="jax", plans=plans_t,
+                                 fold_bn=False)),
+    )
+    for tag, ps, fwd in runs:
+        fn = jax.jit(fwd)
+        out = fn(ps, x)
         jax.block_until_ready(out)
         t0 = time.perf_counter()
-        out = fn(params, x)
+        out = fn(ps, x)
         jax.block_until_ready(out)
         dt = time.perf_counter() - t0
-        tag = impl + ("+plan" if kw else "")
-        print(f"  {name:12s} impl={tag:8s} out={tuple(out.shape)} {dt*1e3:.1f} ms")
+        print(f"  {name:12s} impl={tag:10s} out={tuple(out.shape)} {dt*1e3:.1f} ms")
     algos = {}
     for plan in plans:
         if plan is not None:

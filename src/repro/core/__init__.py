@@ -8,7 +8,14 @@
 - codesign:   vector-length / cache-size / lanes co-design sweeps (paper §V/§VI)
 - planner:    per-layer ConvPlan resolution + persistent autotuning cache
 """
-from repro.core.conv_spec import ConvAlgorithm, ConvSpec, select_algorithm
+from repro.core.conv_spec import (
+    ConvAlgorithm,
+    ConvSpec,
+    Epilogue,
+    apply_activation,
+    apply_epilogue,
+    select_algorithm,
+)
 from repro.core.conv2d import conv2d, conv2d_reference
 from repro.core.im2col import conv2d_im2col, im2col
 from repro.core.planner import ConvPlan, Planner
@@ -17,6 +24,9 @@ from repro.core.winograd import conv2d_winograd, transform_weights
 __all__ = [
     "ConvAlgorithm",
     "ConvSpec",
+    "Epilogue",
+    "apply_activation",
+    "apply_epilogue",
     "select_algorithm",
     "conv2d",
     "conv2d_reference",

@@ -14,7 +14,12 @@ from typing import Optional, TYPE_CHECKING
 
 import jax.numpy as jnp
 
-from repro.core.conv_spec import ConvAlgorithm, ConvSpec, select_algorithm
+from repro.core.conv_spec import (
+    ConvAlgorithm,
+    ConvSpec,
+    Epilogue,
+    select_algorithm,
+)
 from repro.core.im2col import conv2d_direct_1x1, conv2d_im2col
 from repro.core.winograd import conv2d_winograd
 
@@ -30,6 +35,7 @@ def conv2d(
     interpret: Optional[bool] = None,
     plan: Optional["ConvPlan"] = None,
     planner: Optional["Planner"] = None,
+    epilogue: Optional[Epilogue] = None,
 ) -> jnp.ndarray:
     """Convolve ``x`` (B,H,W,C) with ``w`` (kh,kw,C,O) per ``spec``.
 
@@ -37,7 +43,8 @@ def conv2d(
     ``interpret=True`` executes them on CPU for validation).  When ``plan``
     is given (or resolved via ``planner``) it overrides both the algorithm
     choice and ``impl``, and its block sizes are forwarded to the Pallas
-    kernels — no per-call re-selection happens.
+    kernels — no per-call re-selection happens.  ``epilogue`` (bias +
+    activation) is fused into the output stage of whichever path runs.
     """
     if plan is None and planner is not None:
         plan = planner.plan(
@@ -57,13 +64,13 @@ def conv2d(
         from repro.kernels import conv_ops
 
         return conv_ops.conv2d_pallas(
-            x, w, spec, algo, interpret=interpret, plan=plan
+            x, w, spec, algo, interpret=interpret, plan=plan, epilogue=epilogue
         )
     if algo is ConvAlgorithm.DIRECT:
-        return conv2d_direct_1x1(x, w, spec)
+        return conv2d_direct_1x1(x, w, spec, epilogue=epilogue)
     if algo is ConvAlgorithm.WINOGRAD:
-        return conv2d_winograd(x, w, spec)
-    return conv2d_im2col(x, w, spec)
+        return conv2d_winograd(x, w, spec, epilogue=epilogue)
+    return conv2d_im2col(x, w, spec, epilogue=epilogue)
 
 
 def conv2d_reference(x: jnp.ndarray, w: jnp.ndarray, spec: ConvSpec) -> jnp.ndarray:

@@ -10,7 +10,7 @@ from __future__ import annotations
 
 import dataclasses
 import enum
-from typing import Optional, Tuple
+from typing import Any, Optional, Tuple
 
 
 class ConvAlgorithm(enum.Enum):
@@ -65,6 +65,49 @@ class ConvSpec:
         """
         oh, ow = self.out_hw(h, w)
         return self.out_channels, oh * ow, self.kh * self.kw * self.in_channels
+
+
+@dataclasses.dataclass(frozen=True)
+class Epilogue:
+    """Per-layer conv epilogue fused into the kernel's output stage.
+
+    The paper's BLIS lesson (§IV.A) applied to the layer pipeline: instead of
+    bouncing the conv output through HBM three more times (add_bias →
+    activation as separate elementwise passes), the bias add and activation
+    run on the fp32 accumulator while it is still VMEM-resident.  Inference-
+    mode batchnorm is first folded into the conv weights + this bias
+    (``models/cnn.fold_batchnorm``), so every conv layer reduces to
+    conv + bias + activation.
+
+    ``bias`` is a traced (out_channels,) vector or None; ``activation`` is a
+    static kind ('linear' | 'relu' | 'leaky') so jitted kernel wrappers can
+    specialize on it.
+    """
+
+    bias: Optional[Any] = None      # (O,) jnp vector, traced through jit
+    activation: str = "linear"      # linear | relu | leaky
+
+
+def apply_activation(x, kind: str):
+    """Darknet's activate_array, shared by kernels and reference paths."""
+    import jax.numpy as jnp
+
+    if kind == "leaky":
+        return jnp.where(x > 0, x, 0.1 * x)
+    if kind == "relu":
+        return jnp.maximum(x, 0)
+    if kind == "linear":
+        return x
+    raise ValueError(f"unknown activation {kind!r}")
+
+
+def apply_epilogue(y, epilogue: Optional[Epilogue]):
+    """Reference epilogue: y + bias, then activation (pure jnp)."""
+    if epilogue is None:
+        return y
+    if epilogue.bias is not None:
+        y = y + epilogue.bias
+    return apply_activation(y, epilogue.activation)
 
 
 def select_algorithm(spec: ConvSpec) -> ConvAlgorithm:

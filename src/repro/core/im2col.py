@@ -10,11 +10,11 @@ channels along the vector (§IV.B).
 """
 from __future__ import annotations
 
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax.numpy as jnp
 
-from repro.core.conv_spec import ConvSpec
+from repro.core.conv_spec import ConvSpec, Epilogue, apply_epilogue
 
 
 def im2col(
@@ -53,8 +53,13 @@ def im2col(
     return patches.reshape(b, oh, ow, kh * kw * c)
 
 
-def conv2d_im2col(x: jnp.ndarray, w: jnp.ndarray, spec: ConvSpec) -> jnp.ndarray:
-    """Convolution via im2col + GEMM.
+def conv2d_im2col(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    spec: ConvSpec,
+    epilogue: Optional[Epilogue] = None,
+) -> jnp.ndarray:
+    """Convolution via im2col + GEMM, with an optional fused epilogue.
 
     Args:
       x: (B, H, W, C); w: (kh, kw, C, O).
@@ -69,10 +74,15 @@ def conv2d_im2col(x: jnp.ndarray, w: jnp.ndarray, spec: ConvSpec) -> jnp.ndarray
     k = kh * kw * c
     # (B*OH*OW, K) @ (K, O): N-major output, channels-last (lane axis = O).
     out = patches.reshape(b * oh * ow, k) @ w.reshape(k, o)
-    return out.reshape(b, oh, ow, o)
+    return apply_epilogue(out, epilogue).reshape(b, oh, ow, o)
 
 
-def conv2d_direct_1x1(x: jnp.ndarray, w: jnp.ndarray, spec: ConvSpec) -> jnp.ndarray:
+def conv2d_direct_1x1(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    spec: ConvSpec,
+    epilogue: Optional[Epilogue] = None,
+) -> jnp.ndarray:
     """1x1 convolution as a plain GEMM (the paper's Direct path for 1x1)."""
     b, h, ww, c = x.shape
     assert spec.kernel_size == (1, 1)
@@ -85,4 +95,4 @@ def conv2d_direct_1x1(x: jnp.ndarray, w: jnp.ndarray, spec: ConvSpec) -> jnp.nda
         x = x[:, ::sh, ::sw, :]
     oh, ow = x.shape[1], x.shape[2]
     out = x.reshape(b * oh * ow, c) @ w.reshape(c, spec.out_channels)
-    return out.reshape(b, oh, ow, spec.out_channels)
+    return apply_epilogue(out, epilogue).reshape(b, oh, ow, spec.out_channels)

@@ -41,7 +41,9 @@ from repro.core.vmem_model import BlockConfig, GemmShape, autotune_gemm
 from repro.hw import V5E, ChipSpec
 from repro.util import ceil_to
 
-PLAN_CACHE_VERSION = 1
+# v2: plans record whether the conv epilogue (bias + activation) is fused
+# into the kernel's output stage; v1 caches are invalidated (cold start).
+PLAN_CACHE_VERSION = 2
 
 # Default on-disk location (overridable per Planner and via environment).
 DEFAULT_CACHE_PATH = os.environ.get(
@@ -67,6 +69,7 @@ class ConvPlan:
     kernel_blocks: Tuple[int, int, int]
     predicted_s: float
     source: str = "cost_model"          # cost_model | measured
+    fused_epilogue: bool = False        # bias+activation fused in the kernel
 
     def to_json(self) -> Dict[str, Any]:
         return {
@@ -76,6 +79,7 @@ class ConvPlan:
             "kernel_blocks": list(self.kernel_blocks),
             "predicted_s": self.predicted_s,
             "source": self.source,
+            "fused_epilogue": self.fused_epilogue,
         }
 
     @classmethod
@@ -87,6 +91,7 @@ class ConvPlan:
             kernel_blocks=tuple(d["kernel_blocks"]),
             predicted_s=float(d["predicted_s"]),
             source=d.get("source", "cost_model"),
+            fused_epilogue=bool(d.get("fused_epilogue", False)),
         )
 
 
@@ -100,6 +105,7 @@ def plan_key(
     impl: str,
     mode: str = "cost",
     vmem_budget: Optional[int] = None,
+    fuse_epilogue: bool = False,
 ) -> str:
     """Canonical cache key: every field that changes the decision."""
     return "|".join(
@@ -108,6 +114,7 @@ def plan_key(
             dtype,
             impl,
             mode,
+            f"e{int(fuse_epilogue)}",
             f"v{vmem_budget if vmem_budget is not None else 0}",
             f"b{batch}",
             f"h{h}w{w}",
@@ -166,12 +173,17 @@ class Planner:
         vmem_budget: Optional[int] = None,
         measure_reps: int = 3,
         autosave: bool = True,
+        fuse_epilogue: bool = False,
     ):
         if mode not in ("cost", "measure"):
             raise ValueError(f"mode must be 'cost' or 'measure', got {mode!r}")
         self.hw = hw
         self.mode = mode
         self.impl = impl
+        # Plans record the fusion decision so consumers (cnn_forward) apply
+        # the epilogue inside the kernel exactly when the plan was tuned
+        # that way; keyed separately in the cache.
+        self.fuse_epilogue = fuse_epilogue
         self.cache_path = cache_path
         self.vmem_budget = vmem_budget if vmem_budget is not None else hw.vmem_bytes
         self.measure_reps = measure_reps
@@ -265,7 +277,7 @@ class Planner:
         """The plan for one layer at one input shape; tunes on first miss."""
         key = plan_key(
             spec, h, w, batch, self.hw.name, _dtype_name(dtype), self.impl,
-            self.mode, self.vmem_budget,
+            self.mode, self.vmem_budget, self.fuse_epilogue,
         )
         cached = self._plans.get(key)
         if cached is not None:
@@ -354,6 +366,7 @@ class Planner:
             kernel_blocks=kernel_blocks,
             predicted_s=t,
             source="cost_model",
+            fused_epilogue=self.fuse_epilogue,
         )
 
     def _tune_measured(
@@ -393,6 +406,7 @@ class Planner:
                 kernel_blocks=kernel_blocks,
                 predicted_s=0.0,
                 source="measured",
+                fused_epilogue=self.fuse_epilogue,
             )
             fn = jax.jit(lambda a, b, p=candidate: conv2d(a, b, spec, plan=p))
             try:

@@ -17,12 +17,12 @@ Their correctness is asserted against direct convolution in the test-suite.
 """
 from __future__ import annotations
 
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.conv_spec import ConvSpec
+from repro.core.conv_spec import ConvSpec, Epilogue, apply_epilogue
 
 TILE = 8          # input tile (paper's default 8x8)
 OUT_TILE = 6      # output tile of F(6,3)
@@ -154,6 +154,7 @@ def conv2d_winograd(
     w: jnp.ndarray,
     spec: ConvSpec,
     pretransformed: bool = False,
+    epilogue: Optional[Epilogue] = None,
 ) -> jnp.ndarray:
     """Full Winograd F(6,3) convolution, stride 1, 3x3 kernels.
 
@@ -178,7 +179,9 @@ def conv2d_winograd(
     v = input_transform(tiles)
     m = tuple_multiply(v, u.astype(x.dtype))
     y = output_transform(m, bsz, nth, ntw)
-    return y[:, :oh, :ow, :]
+    # Epilogue on the transformed output (bias + activation are elementwise,
+    # so applying before the crop is exact).
+    return apply_epilogue(y, epilogue)[:, :oh, :ow, :]
 
 
 def winograd_flops(oh: int, ow: int, cin: int, cout: int) -> dict:

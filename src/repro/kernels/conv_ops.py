@@ -11,7 +11,7 @@ from typing import Optional, TYPE_CHECKING
 
 import jax.numpy as jnp
 
-from repro.core.conv_spec import ConvAlgorithm, ConvSpec
+from repro.core.conv_spec import ConvAlgorithm, ConvSpec, Epilogue
 
 if TYPE_CHECKING:
     from repro.core.planner import ConvPlan
@@ -24,35 +24,55 @@ def conv2d_pallas(
     algo: ConvAlgorithm,
     interpret: Optional[bool] = None,
     plan: Optional["ConvPlan"] = None,
+    epilogue: Optional[Epilogue] = None,
 ) -> jnp.ndarray:
-    """x (B,H,W,C), w (kh,kw,C,O) -> (B,OH,OW,O) via Pallas kernels."""
+    """x (B,H,W,C), w (kh,kw,C,O) -> (B,OH,OW,O) via Pallas kernels.
+
+    ``epilogue`` (bias + activation) is forwarded into each kernel family's
+    output stage — no separate elementwise pass over HBM.
+    """
     import jax
 
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     blocks = plan.kernel_blocks if plan is not None else None
+    bias = epilogue.bias if epilogue is not None else None
+    activation = epilogue.activation if epilogue is not None else "linear"
 
     if algo is ConvAlgorithm.DIRECT:
         from repro.kernels.gemm import blocked_matmul
 
-        b, h, ww, c = x.shape
         sh, sw = spec.stride
+        ph, pw = spec.padding
+        # Pad BEFORE subsampling, exactly like core.im2col.conv2d_direct_1x1:
+        # dropping spec.padding here silently shrank the output (wrong shape
+        # *and* values for any padded 1x1 layer).
+        if ph or pw:
+            x = jnp.pad(x, ((0, 0), (ph, ph), (pw, pw), (0, 0)))
         if (sh, sw) != (1, 1):
             x = x[:, ::sh, ::sw, :]
-        oh, ow = x.shape[1], x.shape[2]
+        b, oh, ow, c = x.shape
         out = blocked_matmul(
             x.reshape(b * oh * ow, c),
             w.reshape(c, spec.out_channels),
             block=blocks,
             interpret=interpret,
+            bias=bias,
+            activation=activation,
         )
         return out.reshape(b, oh, ow, spec.out_channels)
 
     if algo is ConvAlgorithm.WINOGRAD:
         from repro.kernels.winograd import conv2d_winograd_pallas
 
-        return conv2d_winograd_pallas(x, w, spec, blocks=blocks, interpret=interpret)
+        return conv2d_winograd_pallas(
+            x, w, spec, blocks=blocks, interpret=interpret,
+            bias=bias, activation=activation,
+        )
 
     from repro.kernels.im2col_gemm import conv2d_pallas_im2col
 
-    return conv2d_pallas_im2col(x, w, spec, blocks=blocks, interpret=interpret)
+    return conv2d_pallas_im2col(
+        x, w, spec, blocks=blocks, interpret=interpret,
+        bias=bias, activation=activation,
+    )

@@ -24,11 +24,13 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.conv_spec import apply_activation
 from repro.kernels.compat import CompilerParams
 
 
-def _matmul_kernel_6loop(a_ref, b_ref, c_ref, acc_ref):
-    """Grid (nm, nn, nk), K innermost: accumulate A@B blocks in VMEM."""
+def _accumulate_k_block(a_ref, b_ref, acc_ref):
+    """Shared 6-loop body: zero the VMEM accumulator on the first K step,
+    then add this (bm, bk) x (bk, bn) block product."""
 
     @pl.when(pl.program_id(2) == 0)
     def _init():
@@ -38,16 +40,40 @@ def _matmul_kernel_6loop(a_ref, b_ref, c_ref, acc_ref):
         a_ref[...], b_ref[...], preferred_element_type=jnp.float32
     )
 
+
+def _matmul_kernel_6loop(a_ref, b_ref, c_ref, acc_ref, *, activation: str):
+    """Grid (nm, nn, nk), K innermost: accumulate A@B blocks in VMEM."""
+    _accumulate_k_block(a_ref, b_ref, acc_ref)
+
     @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
     def _done():
-        c_ref[...] = acc_ref[...].astype(c_ref.dtype)
+        # Fused epilogue on the VMEM-resident fp32 accumulator (paper §IV.A:
+        # absorb adjacent data movement into the micro-kernel's output stage).
+        c_ref[...] = apply_activation(acc_ref[...], activation).astype(c_ref.dtype)
 
 
-def _matmul_kernel_3loop(a_ref, b_ref, c_ref):
+def _matmul_bias_kernel_6loop(a_ref, b_ref, bias_ref, c_ref, acc_ref, *,
+                              activation: str):
+    """6-loop variant with a fused (1, bn) bias row + activation epilogue."""
+    _accumulate_k_block(a_ref, b_ref, acc_ref)
+
+    @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
+    def _done():
+        out = acc_ref[...] + bias_ref[...].astype(jnp.float32)
+        c_ref[...] = apply_activation(out, activation).astype(c_ref.dtype)
+
+
+def _matmul_kernel_3loop(a_ref, b_ref, c_ref, *, activation: str):
     """Grid (nm, nn): one full-K panel per output block (paper Fig. 2)."""
-    c_ref[...] = jnp.dot(
-        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
-    ).astype(c_ref.dtype)
+    out = jnp.dot(a_ref[...], b_ref[...], preferred_element_type=jnp.float32)
+    c_ref[...] = apply_activation(out, activation).astype(c_ref.dtype)
+
+
+def _matmul_bias_kernel_3loop(a_ref, b_ref, bias_ref, c_ref, *, activation: str):
+    """3-loop variant with a fused bias + activation epilogue."""
+    out = jnp.dot(a_ref[...], b_ref[...], preferred_element_type=jnp.float32)
+    out = out + bias_ref[...].astype(jnp.float32)
+    c_ref[...] = apply_activation(out, activation).astype(c_ref.dtype)
 
 
 def matmul_pallas(
@@ -59,37 +85,58 @@ def matmul_pallas(
     variant: str = "6loop",
     out_dtype=None,
     interpret: bool = False,
+    bias=None,
+    activation: str = "linear",
 ) -> jnp.ndarray:
-    """Blocked matmul; dims must already be padded to block multiples."""
+    """Blocked matmul; dims must already be padded to block multiples.
+
+    ``bias`` (1, N) and ``activation`` form the fused epilogue, applied to
+    the fp32 accumulator in the output stage (no extra HBM round trip).
+    """
     m, k = a.shape
     k2, n = b.shape
     assert k == k2 and m % bm == 0 and n % bn == 0 and k % bk == 0
+    assert bias is None or bias.shape == (1, n), (n, getattr(bias, "shape", None))
     out_dtype = out_dtype or a.dtype
     out_shape = jax.ShapeDtypeStruct((m, n), out_dtype)
 
     if variant == "3loop":
+        kern = functools.partial(
+            _matmul_bias_kernel_3loop if bias is not None else _matmul_kernel_3loop,
+            activation=activation,
+        )
+        in_specs = [
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ]
+        if bias is not None:
+            in_specs.append(pl.BlockSpec((1, bn), lambda i, j: (0, j)))
         return pl.pallas_call(
-            _matmul_kernel_3loop,
+            kern,
             grid=(m // bm, n // bn),
-            in_specs=[
-                pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
-                pl.BlockSpec((k, bn), lambda i, j: (0, j)),
-            ],
+            in_specs=in_specs,
             out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
             out_shape=out_shape,
             compiler_params=CompilerParams(
                 dimension_semantics=("parallel", "parallel")
             ),
             interpret=interpret,
-        )(a, b)
+        )(a, b, *(() if bias is None else (bias,)))
 
+    kern = functools.partial(
+        _matmul_bias_kernel_6loop if bias is not None else _matmul_kernel_6loop,
+        activation=activation,
+    )
+    in_specs = [
+        pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+        pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+    ]
+    if bias is not None:
+        in_specs.append(pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)))
     return pl.pallas_call(
-        _matmul_kernel_6loop,
+        kern,
         grid=(m // bm, n // bn, k // bk),
-        in_specs=[
-            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
-            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
         out_shape=out_shape,
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
@@ -97,4 +144,4 @@ def matmul_pallas(
             dimension_semantics=("parallel", "parallel", "arbitrary")
         ),
         interpret=interpret,
-    )(a, b)
+    )(a, b, *(() if bias is None else (bias,)))

@@ -30,7 +30,7 @@ def default_block(m: int, n: int, k: int, dtype_bytes: int = 4) -> BlockConfig:
 
 @functools.partial(
     jax.jit,
-    static_argnames=("block", "variant", "interpret", "out_dtype"),
+    static_argnames=("block", "variant", "interpret", "out_dtype", "activation"),
 )
 def blocked_matmul(
     a: jnp.ndarray,
@@ -39,14 +39,18 @@ def blocked_matmul(
     variant: str = "6loop",
     out_dtype=None,
     interpret: bool = False,
+    bias: Optional[jnp.ndarray] = None,
+    activation: str = "linear",
 ) -> jnp.ndarray:
-    """C = A @ B with BLIS-like VMEM blocking.
+    """C = act(A @ B + bias) with BLIS-like VMEM blocking.
 
     Args:
       a: (M, K); b: (K, N).
       block: (bm, bn, bk) or None to autotune (co-design model).
       variant: '6loop' (K-blocked, VMEM accumulation) or '3loop' (full-K
         panel per output block).
+      bias: optional (N,) vector fused into the kernel's output stage.
+      activation: 'linear' | 'relu' | 'leaky', fused likewise.
     """
     m, k = a.shape
     _, n = b.shape
@@ -58,9 +62,13 @@ def blocked_matmul(
     mp, np_, kp = ceil_to(m, bm), ceil_to(n, bn), ceil_to(k, bk)
     a_p = jnp.pad(a, ((0, mp - m), (0, kp - k))) if (mp, kp) != (m, k) else a
     b_p = jnp.pad(b, ((0, kp - k), (0, np_ - n))) if (kp, np_) != (k, n) else b
+    bias_p = None
+    if bias is not None:
+        bias_p = jnp.pad(bias, (0, np_ - n)).reshape(1, np_)
     if variant == "3loop":
         bk = kp
     out = matmul_pallas(
-        a_p, b_p, bm, bn, bk, variant=variant, out_dtype=out_dtype, interpret=interpret
+        a_p, b_p, bm, bn, bk, variant=variant, out_dtype=out_dtype,
+        interpret=interpret, bias=bias_p, activation=activation,
     )
     return out[:m, :n]

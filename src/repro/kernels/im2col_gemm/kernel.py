@@ -21,22 +21,15 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.conv_spec import apply_activation
 from repro.kernels.compat import CompilerParams
 
 
-def _conv_kernel(
-    x_ref,  # (1, Hp, Wp, bc) VMEM-resident input block (one channel slab)
-    w_ref,  # (kh, kw, bc, bo)
-    o_ref,  # (1, toh, OW, bo)
-    acc_ref,  # (toh, OW, bo) fp32 scratch
-    *,
-    kh: int,
-    kw: int,
-    sh: int,
-    sw: int,
-    toh: int,
-    ow: int,
-):
+def _accumulate_taps(x_ref, w_ref, o_ref, acc_ref, *, kh, kw, sh, sw, toh, ow):
+    """Shared K-reduction body: init the accumulator on the first in-channel
+    block, then statically unroll over the kh*kw taps (paper's loop
+    unrolling) — each tap is a shifted strided window -> one
+    (toh*OW, bc) x (bc, bo) MXU matmul."""
     r = pl.program_id(1)
 
     @pl.when(pl.program_id(3) == 0)
@@ -47,8 +40,6 @@ def _conv_kernel(
     bo = o_ref.shape[-1]
     row0 = r * toh * sh
     acc = acc_ref[...].reshape(toh * ow, bo)
-    # Static unroll over the kh*kw taps (paper's loop unrolling): each tap is
-    # a shifted strided window -> one (toh*OW, bc) x (bc, bo) MXU matmul.
     for di in range(kh):
         for dj in range(kw):
             slab = x_ref[
@@ -63,9 +54,44 @@ def _conv_kernel(
             )
     acc_ref[...] = acc.reshape(toh, ow, bo)
 
+
+def _conv_kernel(
+    x_ref,  # (1, Hp, Wp, bc) VMEM-resident input block (one channel slab)
+    w_ref,  # (kh, kw, bc, bo)
+    o_ref,  # (1, toh, OW, bo)
+    acc_ref,  # (toh, OW, bo) fp32 scratch
+    *,
+    kh: int,
+    kw: int,
+    sh: int,
+    sw: int,
+    toh: int,
+    ow: int,
+    activation: str = "linear",
+):
+    _accumulate_taps(x_ref, w_ref, o_ref, acc_ref,
+                     kh=kh, kw=kw, sh=sh, sw=sw, toh=toh, ow=ow)
+
     @pl.when(pl.program_id(3) == pl.num_programs(3) - 1)
     def _done():
-        o_ref[...] = acc_ref[...].astype(o_ref.dtype)[None]
+        o_ref[...] = apply_activation(acc_ref[...], activation).astype(
+            o_ref.dtype
+        )[None]
+
+
+def _conv_bias_kernel(
+    x_ref, w_ref, bias_ref, o_ref, acc_ref, *,
+    kh: int, kw: int, sh: int, sw: int, toh: int, ow: int, activation: str,
+):
+    """_conv_kernel plus a fused (1, bo) bias row applied in the output
+    stage, on the fp32 accumulator, after the full K reduction."""
+    _accumulate_taps(x_ref, w_ref, o_ref, acc_ref,
+                     kh=kh, kw=kw, sh=sh, sw=sw, toh=toh, ow=ow)
+
+    @pl.when(pl.program_id(3) == pl.num_programs(3) - 1)
+    def _done():
+        out = acc_ref[...] + bias_ref[...].astype(jnp.float32)
+        o_ref[...] = apply_activation(out, activation).astype(o_ref.dtype)[None]
 
 
 def conv2d_im2col_gemm_pallas(
@@ -80,12 +106,15 @@ def conv2d_im2col_gemm_pallas(
     bo: int,
     out_dtype=None,
     interpret: bool = False,
+    bias=None,
+    activation: str = "linear",
 ) -> jnp.ndarray:
     """Run the fused conv kernel.  Returns (B, OHp, OW, O); caller crops.
 
     The input must be pre-padded so that every row tile's window is in
     bounds:  Hp >= (OHp-1)*sh + kh with OHp = ceil(oh/toh)*toh, and
-    Wp >= (OW-1)*sw + kw.
+    Wp >= (OW-1)*sw + kw.  ``bias`` (1, O) and ``activation`` are the fused
+    epilogue, applied once after the full in-channel reduction.
     """
     b, hp, wp, c = x.shape
     kh, kw, _, o = w.shape
@@ -93,18 +122,28 @@ def conv2d_im2col_gemm_pallas(
     assert hp >= (ohp - 1) * sh + kh, (hp, ohp, sh, kh)
     assert wp >= (ow - 1) * sw + kw, (wp, ow, sw, kw)
     assert c % bc == 0 and o % bo == 0
+    assert bias is None or bias.shape == (1, o), (o, getattr(bias, "shape", None))
     out_dtype = out_dtype or x.dtype
 
-    kernel = functools.partial(
-        _conv_kernel, kh=kh, kw=kw, sh=sh, sw=sw, toh=toh, ow=ow
-    )
+    in_specs = [
+        pl.BlockSpec((1, hp, wp, bc), lambda bi, r, oc, ic: (bi, 0, 0, ic)),
+        pl.BlockSpec((kh, kw, bc, bo), lambda bi, r, oc, ic: (0, 0, ic, oc)),
+    ]
+    if bias is not None:
+        kernel = functools.partial(
+            _conv_bias_kernel, kh=kh, kw=kw, sh=sh, sw=sw, toh=toh, ow=ow,
+            activation=activation,
+        )
+        in_specs.append(pl.BlockSpec((1, bo), lambda bi, r, oc, ic: (0, oc)))
+    else:
+        kernel = functools.partial(
+            _conv_kernel, kh=kh, kw=kw, sh=sh, sw=sw, toh=toh, ow=ow,
+            activation=activation,
+        )
     return pl.pallas_call(
         kernel,
         grid=(b, ohp // toh, o // bo, c // bc),
-        in_specs=[
-            pl.BlockSpec((1, hp, wp, bc), lambda bi, r, oc, ic: (bi, 0, 0, ic)),
-            pl.BlockSpec((kh, kw, bc, bo), lambda bi, r, oc, ic: (0, 0, ic, oc)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec(
             (1, toh, ow, bo), lambda bi, r, oc, ic: (bi, r, 0, oc)
         ),
@@ -114,4 +153,4 @@ def conv2d_im2col_gemm_pallas(
             dimension_semantics=("parallel", "parallel", "parallel", "arbitrary")
         ),
         interpret=interpret,
-    )(x, w)
+    )(x, w, *(() if bias is None else (bias,)))

@@ -42,7 +42,8 @@ def pick_blocks(
 
 
 @functools.partial(
-    jax.jit, static_argnames=("spec", "blocks", "interpret", "out_dtype")
+    jax.jit,
+    static_argnames=("spec", "blocks", "interpret", "out_dtype", "activation"),
 )
 def conv2d_pallas_im2col(
     x: jnp.ndarray,
@@ -51,8 +52,13 @@ def conv2d_pallas_im2col(
     blocks: Optional[Tuple[int, int, int]] = None,
     out_dtype=None,
     interpret: bool = False,
+    bias: Optional[jnp.ndarray] = None,
+    activation: str = "linear",
 ) -> jnp.ndarray:
-    """Fused-conv entry point: x (B,H,W,C), w (kh,kw,C,O) -> (B,OH,OW,O)."""
+    """Fused-conv entry point: x (B,H,W,C), w (kh,kw,C,O) -> (B,OH,OW,O).
+
+    ``bias`` (O,) and ``activation`` form the fused epilogue, applied inside
+    the kernel's output stage (see kernel.py)."""
     b, h, ww, c = x.shape
     kh, kw, _, o = w.shape
     sh, sw = spec.stride
@@ -77,8 +83,12 @@ def conv2d_pallas_im2col(
         ),
     )
     w_p = jnp.pad(w, ((0, 0), (0, 0), (0, cp - c), (0, op - o)))
+    bias_p = None
+    if bias is not None:
+        bias_p = jnp.pad(bias, (0, op - o)).reshape(1, op)
     out = conv2d_im2col_gemm_pallas(
         x_p, w_p, sh, sw, oh, ow, toh, bc, bo,
         out_dtype=out_dtype, interpret=interpret,
+        bias=bias_p, activation=activation,
     )
     return out[:, :oh, :, :o]

@@ -22,6 +22,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.conv_spec import apply_activation
 from repro.kernels.compat import CompilerParams
 
 from repro.core.winograd import AT, BT
@@ -52,12 +53,23 @@ def _tuple_multiply_kernel(v_ref, u_ref, m_ref, acc_ref):
         m_ref[...] = acc_ref[...].astype(m_ref.dtype)[None]
 
 
-def _output_transform_kernel(at_ref, m_ref, y_ref):
+def _output_transform_kernel(at_ref, m_ref, y_ref, *, activation: str = "linear"):
     """M (8, 8, bt, bo) -> Y (bt, 6, 6, bo)."""
     at_mat = at_ref[...]
     m = m_ref[...].astype(jnp.float32)
     y = jnp.einsum("xa,yb,abto->txyo", at_mat, at_mat, m)
-    y_ref[...] = y.astype(y_ref.dtype)
+    y_ref[...] = apply_activation(y, activation).astype(y_ref.dtype)
+
+
+def _output_transform_bias_kernel(at_ref, m_ref, bias_ref, y_ref, *,
+                                  activation: str):
+    """Output transform with the fused epilogue: bias (1, bo) + activation
+    applied to the fp32 transform result before the store."""
+    at_mat = at_ref[...]
+    m = m_ref[...].astype(jnp.float32)
+    y = jnp.einsum("xa,yb,abto->txyo", at_mat, at_mat, m)
+    y = y + bias_ref[...].astype(jnp.float32)
+    y_ref[...] = apply_activation(y, activation).astype(y_ref.dtype)
 
 
 def input_transform_pallas(
@@ -110,21 +122,34 @@ def tuple_multiply_pallas(
 
 
 def output_transform_pallas(
-    m: jnp.ndarray, bt: int, bo: int, interpret: bool = False
+    m: jnp.ndarray, bt: int, bo: int, interpret: bool = False,
+    bias=None, activation: str = "linear",
 ) -> jnp.ndarray:
-    """(8, 8, T, O) -> (T, 6, 6, O)."""
+    """(8, 8, T, O) -> (T, 6, 6, O), with an optional fused bias (1, O) +
+    activation epilogue applied to the fp32 transform output."""
     _, _, t, o = m.shape
+    assert bias is None or bias.shape == (1, o), (o, getattr(bias, "shape", None))
+    in_specs = [
+        pl.BlockSpec((6, 8), lambda i, j: (0, 0)),
+        pl.BlockSpec((8, 8, bt, bo), lambda i, j: (0, 0, i, j)),
+    ]
+    if bias is not None:
+        kernel = functools.partial(
+            _output_transform_bias_kernel, activation=activation
+        )
+        in_specs.append(pl.BlockSpec((1, bo), lambda i, j: (0, j)))
+    else:
+        kernel = functools.partial(
+            _output_transform_kernel, activation=activation
+        )
     return pl.pallas_call(
-        _output_transform_kernel,
+        kernel,
         grid=(t // bt, o // bo),
-        in_specs=[
-            pl.BlockSpec((6, 8), lambda i, j: (0, 0)),
-            pl.BlockSpec((8, 8, bt, bo), lambda i, j: (0, 0, i, j)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((bt, 6, 6, bo), lambda i, j: (i, 0, 0, j)),
         out_shape=jax.ShapeDtypeStruct((t, 6, 6, o), m.dtype),
         compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel")
         ),
         interpret=interpret,
-    )(jnp.asarray(AT, jnp.float32), m)
+    )(jnp.asarray(AT, jnp.float32), m, *(() if bias is None else (bias,)))

@@ -34,7 +34,9 @@ def pick_blocks(
 
 
 @functools.partial(
-    jax.jit, static_argnames=("spec", "blocks", "interpret", "pretransformed")
+    jax.jit,
+    static_argnames=("spec", "blocks", "interpret", "pretransformed",
+                     "activation"),
 )
 def conv2d_winograd_pallas(
     x: jnp.ndarray,
@@ -43,8 +45,13 @@ def conv2d_winograd_pallas(
     blocks: Optional[Tuple[int, int, int]] = None,
     pretransformed: bool = False,
     interpret: bool = False,
+    bias: Optional[jnp.ndarray] = None,
+    activation: str = "linear",
 ) -> jnp.ndarray:
-    """x (B,H,W,C), w (3,3,C,O) [or (8,8,C,O) pretransformed] -> (B,OH,OW,O)."""
+    """x (B,H,W,C), w (3,3,C,O) [or (8,8,C,O) pretransformed] -> (B,OH,OW,O).
+
+    ``bias`` (O,) and ``activation`` form the fused epilogue, applied in the
+    output-transform kernel on the fp32 accumulator before the store."""
     from repro.kernels.winograd.kernel import (
         input_transform_pallas,
         output_transform_pallas,
@@ -75,8 +82,12 @@ def conv2d_winograd_pallas(
     m = tuple_multiply_pallas(
         v, u.reshape(TILE * TILE, cp, op), bt, bc, bo, interpret=interpret
     )
+    bias_p = None
+    if bias is not None:
+        bias_p = jnp.pad(bias, (0, op - o)).reshape(1, op)
     y = output_transform_pallas(
-        m.reshape(TILE, TILE, tp, op), bt, bo, interpret=interpret
+        m.reshape(TILE, TILE, tp, op), bt, bo, interpret=interpret,
+        bias=bias_p, activation=activation,
     )  # (tp, 6, 6, op)
 
     y = y[:t, :, :, :o].reshape(b, nth, ntw, OUT_TILE, OUT_TILE, o)

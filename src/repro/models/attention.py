@@ -164,32 +164,36 @@ def attention_block(
 
     Training/prefill: cache is None; decode: x is (B, 1, d) and ``cache``
     holds {'k','v','slot_pos'} ring buffers, ``cache_pos`` the absolute
-    position of the new token.  ``fill_capacity``: prefill mode — also
-    return a cache of the given capacity filled with this call's K/V.
+    position of the new token — a scalar (all rows at the same position) or
+    a (B,) vector (continuous batching: every row decodes at its own
+    position, writing its own ring slot).  ``fill_capacity``: prefill mode —
+    also return a cache of the given capacity filled with this call's K/V.
     """
     b, s, _ = x.shape
     g = num_heads // num_kv_heads
     q, k, v = _qkv(params, x, num_heads, num_kv_heads, head_dim)
 
     if cache is not None:
-        pos = cache_pos  # scalar int32
-        q = apply_rope(q, jnp.full((b, 1), pos), rope_theta)
-        k = apply_rope(k, jnp.full((b, 1), pos), rope_theta)
+        # Per-row positions: scalar cache_pos broadcasts to (B,).
+        pos = jnp.broadcast_to(
+            jnp.asarray(cache_pos, jnp.int32).reshape(-1), (b,)
+        )
+        q = apply_rope(q, pos[:, None], rope_theta)
+        k = apply_rope(k, pos[:, None], rope_theta)
         cap = cache["k"].shape[1]
-        slot = pos % cap
+        slot = pos % cap  # (B,)
+        rows = jnp.arange(b)
         new_cache = {
-            "k": jax.lax.dynamic_update_slice(cache["k"], k, (0, slot, 0, 0)),
-            "v": jax.lax.dynamic_update_slice(cache["v"], v, (0, slot, 0, 0)),
-            "slot_pos": jax.lax.dynamic_update_slice(
-                cache["slot_pos"], pos[None].astype(jnp.int32), (slot,)
-            ),
+            "k": cache["k"].at[rows, slot].set(k[:, 0]),
+            "v": cache["v"].at[rows, slot].set(v[:, 0]),
+            "slot_pos": cache["slot_pos"].at[rows, slot].set(pos),
         }
         qh = q.reshape(b, 1, num_kv_heads, g, head_dim)
-        k_pos = new_cache["slot_pos"]
-        valid = (k_pos >= 0) & (k_pos <= pos)
+        k_pos = new_cache["slot_pos"]  # (B, Sk)
+        valid = (k_pos >= 0) & (k_pos <= pos[:, None])
         if window > 0:
-            valid &= k_pos > pos - window
-        mask = valid[None, None, :]  # (1, Sq=1, Sk)
+            valid &= k_pos > (pos - window)[:, None]
+        mask = valid[:, None, :]  # (B, Sq=1, Sk)
         out = _sdpa(qh, new_cache["k"], new_cache["v"], mask, logit_cap)
         out = out.reshape(b, 1, num_heads * head_dim)
         return out @ params["wo"], new_cache
@@ -222,12 +226,15 @@ def attention_block(
             keep_v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
             keep_pos = jnp.pad(positions, (0, pad), constant_values=-1)
         slots = jnp.where(keep_pos >= 0, keep_pos % cap, jnp.arange(cap) % cap)
+        slot_pos = jnp.full((cap,), -1, jnp.int32).at[slots].set(
+            keep_pos.astype(jnp.int32)
+        )
         new_cache = {
             "k": jnp.zeros_like(keep_k).at[:, slots].set(keep_k),
             "v": jnp.zeros_like(keep_v).at[:, slots].set(keep_v),
-            "slot_pos": jnp.full((cap,), -1, jnp.int32).at[slots].set(
-                keep_pos.astype(jnp.int32)
-            ),
+            # Per-row (B, cap) so continuous-batching decode can track each
+            # row's own positions; prefill fills all rows identically.
+            "slot_pos": jnp.broadcast_to(slot_pos, (b, cap)),
         }
     return out @ params["wo"], new_cache
 
@@ -253,5 +260,5 @@ def init_kv_cache(batch, capacity, num_kv_heads, head_dim, dtype):
     return {
         "k": jnp.zeros((batch, capacity, num_kv_heads, head_dim), dtype),
         "v": jnp.zeros((batch, capacity, num_kv_heads, head_dim), dtype),
-        "slot_pos": jnp.full((capacity,), -1, jnp.int32),
+        "slot_pos": jnp.full((batch, capacity), -1, jnp.int32),
     }

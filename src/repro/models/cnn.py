@@ -9,12 +9,13 @@ fused jnp ops.  Layer tables for VGG16 / YOLOv3(-tiny) live in configs/.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.conv_spec import ConvSpec
+from repro.core.conv_spec import ConvSpec, Epilogue, apply_activation
 from repro.core.conv2d import conv2d
 from repro.models.layers import normal_init
 
@@ -47,10 +48,8 @@ def _conv_spec(layer: CNNLayer, in_ch: int) -> ConvSpec:
 
 
 def activate_array(x: jnp.ndarray, kind: str) -> jnp.ndarray:
-    if kind == "leaky":
-        return jnp.where(x > 0, x, 0.1 * x)
-    if kind == "relu":
-        return jnp.maximum(x, 0)
+    if kind in ("leaky", "relu", "linear"):
+        return apply_activation(x, kind)
     return x
 
 
@@ -69,6 +68,31 @@ def add_bias(x, bias):
 def batchnorm_inference(x, p):
     """normalize + scale_bias + add_bias, exactly Darknet's inference path."""
     return add_bias(scale_bias(normalize(x, p["mean"], p["var"]), p["gamma"]), p["beta"])
+
+
+def fold_batchnorm(params: Sequence[Dict], layers: Sequence[CNNLayer],
+                   eps: float = 1e-5) -> List[Dict]:
+    """Fold inference-mode batchnorm into conv weights + bias.
+
+    bn(conv(x, w)) = conv(x, w * s) + (beta - mean * s) with
+    s = gamma / sqrt(var + eps), so every conv layer reduces to
+    conv + bias (+ activation) — the precondition for fusing the whole
+    epilogue into the conv kernel's output stage.  Layers without bn pass
+    through unchanged; the returned params drop the ``bn`` dict in favor of
+    a plain ``b`` bias and plug into ``cnn_forward`` /  ``cnn_infer``.
+    """
+    folded: List[Dict] = []
+    for p, l in zip(params, layers):
+        if l.kind == "conv" and "bn" in p:
+            bn = p["bn"]
+            s = bn["gamma"] * jax.lax.rsqrt(bn["var"] + eps)      # (O,)
+            folded.append({
+                "w": p["w"] * s,                                  # (kh,kw,C,O)
+                "b": bn["beta"] - bn["mean"] * s,
+            })
+        else:
+            folded.append(p)
+    return folded
 
 
 # --- Model init / forward ----------------------------------------------------
@@ -158,11 +182,17 @@ def cnn_forward(
     interpret: Optional[bool] = None,
     planner=None,
     plans: Optional[Sequence[Optional[object]]] = None,
+    fuse_epilogue: bool = False,
 ) -> jnp.ndarray:
     """x (B,H,W,C) NHWC.  ``impl``: 'jax' | 'pallas' | 'xla' (lax.conv).
 
     ``plans`` (from ``plan_layers``) or ``planner`` routes every conv through
-    its cached co-design plan instead of per-call selection.
+    its cached co-design plan instead of per-call selection.  With
+    ``fuse_epilogue`` every conv whose batchnorm has been folded (params
+    carry a plain ``b`` bias — see ``fold_batchnorm``) runs bias +
+    activation inside the conv kernel's output stage instead of as separate
+    elementwise passes; a plan that records ``fused_epilogue`` opts its
+    layer in as well.
     """
     outputs: List[jnp.ndarray] = []
     cur = x
@@ -171,17 +201,29 @@ def cnn_forward(
         p = params[i]
         if l.kind == "conv":
             spec = _conv_spec(l, cur.shape[-1])
+            plan = plans[i] if plans is not None else None
+            # bn-folded params carry "b" instead of "bn", regardless of the
+            # layer table's batch_norm flag.
+            has_bn = "bn" in p
+            fuse = (fuse_epilogue or getattr(plan, "fused_epilogue", False))
+            fuse = fuse and not has_bn and impl != "xla"
             if impl == "xla":
                 from repro.core.conv2d import conv2d_reference
 
                 cur = conv2d_reference(cur, p["w"], spec)
             else:
+                epi = (
+                    Epilogue(bias=p["b"], activation=l.activation)
+                    if fuse else None
+                )
                 cur = conv2d(
                     cur, p["w"], spec, impl=impl, interpret=interpret,
-                    plan=plans[i] if plans is not None else None,
-                    planner=planner,
+                    plan=plan, planner=planner, epilogue=epi,
                 )
-            if l.batch_norm:
+            if fuse:
+                outputs.append(cur)
+                continue
+            if has_bn:
                 cur = batchnorm_inference(cur, p["bn"])
             else:
                 cur = add_bias(cur, p["b"])
@@ -208,6 +250,38 @@ def cnn_forward(
             cur = activate_array(cur @ p["w"] + p["b"], l.activation)
         outputs.append(cur)
     return cur
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("layers", "impl", "interpret", "plans", "fuse_epilogue",
+                     "fold_bn"),
+)
+def cnn_infer(
+    params,
+    layers: Tuple[CNNLayer, ...],
+    x: jnp.ndarray,
+    impl: str = "jax",
+    interpret: Optional[bool] = None,
+    plans: Optional[Tuple[Optional[object], ...]] = None,
+    fuse_epilogue: bool = True,
+    fold_bn: bool = True,
+) -> jnp.ndarray:
+    """Jitted whole-network inference entry point (the deployment path).
+
+    One compilation covers the entire network: batchnorm folding
+    (``fold_bn``), every planned conv with its fused bias + activation
+    epilogue (``fuse_epilogue``), and all the glue layers.  ``layers`` and
+    ``plans`` must be tuples (they are static, hashable arguments; the
+    configs' layer tables already are).  Used by ``benchmarks/e2e_cnn.py``
+    and ``examples/cnn_inference.py`` to report fused vs unfused latency.
+    """
+    if fold_bn:
+        params = fold_batchnorm(params, layers)
+    return cnn_forward(
+        params, layers, x, impl=impl, interpret=interpret, plans=plans,
+        fuse_epilogue=fuse_epilogue,
+    )
 
 
 def conv_layer_dims(layers: Sequence[CNNLayer], h: int, w: int, in_ch: int = 3):

@@ -371,7 +371,8 @@ def decode_step(
     params: Params,
     cache: Params,
     tokens: jnp.ndarray,   # (B, 1) int32
-    pos: jnp.ndarray,      # scalar int32: absolute position of the new token
+    pos: jnp.ndarray,      # scalar or (B,) int32: absolute position of the
+                           # new token (per-row for continuous batching)
 ) -> Tuple[jnp.ndarray, Params]:
     """One-token decode with cache update.  Returns (logits (B,V), cache')."""
     x = embed(params["embed"], tokens, scale_by_dim=cfg.embed_scale)

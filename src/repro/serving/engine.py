@@ -31,6 +31,20 @@ class ServingEngine:
     def __init__(self, cfg: ModelConfig, params, batch_size: int,
                  capacity: int, temperature: float = 0.0, seed: int = 0):
         assert cfg.supports_decode, f"{cfg.name} is encoder-only"
+        # Continuous batching is only correct for attention (KV ring) caches:
+        # per-row positions make every ring-slot write overwrite-before-read.
+        # Recurrent state (rglru/mlstm/slstm) is updated unconditionally per
+        # decode step, so batched slot-local prefill would feed garbage
+        # tokens into other rows' states with no way to undo it.
+        recurrent = {b for b in cfg.pattern_layers
+                     if b not in ("attn", "local")}
+        if recurrent and batch_size > 1:
+            raise ValueError(
+                f"{cfg.name} has recurrent blocks {sorted(recurrent)}: "
+                "continuous batching would corrupt their per-row state; "
+                "use batch_size=1 (or the global-batch prefill in "
+                "launch/serve.py)"
+            )
         self.cfg = cfg
         self.params = params
         self.batch = batch_size
@@ -49,9 +63,13 @@ class ServingEngine:
     # -- public api -----------------------------------------------------------
 
     def submit(self, prompt: np.ndarray, max_new_tokens: int = 16) -> int:
+        prompt = np.asarray(prompt, np.int32)
+        if prompt.size == 0:
+            raise ValueError(
+                "empty prompt: decode needs at least one token to condition on"
+            )
         self._uid += 1
-        self.queue.append(Request(self._uid, np.asarray(prompt, np.int32),
-                                  max_new_tokens))
+        self.queue.append(Request(self._uid, prompt, max_new_tokens))
         return self._uid
 
     def run(self, max_steps: int = 10_000) -> Dict[int, List[int]]:
@@ -86,11 +104,19 @@ class ServingEngine:
                 req._last_token = int(req.prompt[-1])
 
     def _step_slot(self, slot: int, token: int):
+        """Advance one lagging slot (prompt prefill) through the batched
+        decode.  Every row passes its *own* position, so other live rows'
+        KV ring slots are written at positions they will legitimately
+        overwrite on their next real decode step — never at a foreign
+        slot's position (which is what corrupted mid-flight admissions
+        before).  This overwrite-before-read argument only holds for
+        attention caches; recurrent blocks are rejected at __init__ for
+        batch_size > 1."""
         tokens = np.zeros((self.batch, 1), np.int32)
         tokens[slot, 0] = token
         logits, self.cache = self._decode(
             self.params, self.cache, jnp.asarray(tokens),
-            jnp.int32(self.pos[slot]),
+            jnp.asarray(self.pos, jnp.int32),
         )
         self.pos[slot] += 1
         return np.asarray(logits[slot])
@@ -110,13 +136,13 @@ class ServingEngine:
                 any_live = True
         if not any_live:
             return
-        # Single shared position per decode step is the common serving case
-        # when slots prefill together; per-slot positions are handled by
-        # stepping lagging slots individually in _admit.
-        pos = int(max(self.pos[i] for i, r in enumerate(self.slot_req)
-                      if r is not None))
+        # Per-slot positions: sequences admitted mid-flight with shorter
+        # prompts decode at their own position (a shared max() position
+        # desynced their KV cache — wrote every row at the longest
+        # sequence's slot and skipped the intermediate positions).
         logits, self.cache = self._decode(
-            self.params, self.cache, jnp.asarray(tokens), jnp.int32(pos)
+            self.params, self.cache, jnp.asarray(tokens),
+            jnp.asarray(self.pos, jnp.int32),
         )
         logits_np = np.asarray(logits)
         for i, r in enumerate(self.slot_req):
@@ -125,6 +151,6 @@ class ServingEngine:
             nxt = self._sample(logits_np[i])
             r.out_tokens.append(nxt)
             r._last_token = nxt
-            self.pos[i] = pos + 1
+            self.pos[i] += 1
             if len(r.out_tokens) >= r.max_new_tokens:
                 r.done = True

@@ -40,8 +40,10 @@ def test_plan_cache_round_trip(tmp_path):
     assert replans == plans  # identical decisions, not just same algorithms
 
     # The file itself is versioned JSON with round-trippable plan records.
+    from repro.core.planner import PLAN_CACHE_VERSION
+
     data = json.load(open(cache))
-    assert data["version"] == 1
+    assert data["version"] == PLAN_CACHE_VERSION
     assert len(data["plans"]) == len(LAYER_CASES)
     for d in data["plans"].values():
         assert ConvPlan.from_json(d).to_json() == d
@@ -164,3 +166,48 @@ def test_planner_threads_through_cnn_forward(tmp_path):
     warm = Planner(cache_path=cache)
     plan_layers(layers, 16, 16, warm, in_channels=3)
     assert warm.stats["tunes"] == 0
+
+
+def test_plan_records_fused_epilogue(tmp_path):
+    """Planner(fuse_epilogue=True) stamps plans, keys them separately from
+    unfused plans, and round-trips the flag through the JSON cache."""
+    cache = os.path.join(tmp_path, "fused.json")
+    spec = ConvSpec(8, 16)
+    fused = Planner(cache_path=cache, fuse_epilogue=True)
+    plain = Planner(cache_path=cache)
+    pf = fused.plan(spec, 20, 20)
+    pu = plain.plan(spec, 20, 20)
+    assert pf.fused_epilogue and not pu.fused_epilogue
+    assert plan_key(spec, 20, 20, 1, "tpu_v5e", "float32", "jax",
+                    fuse_epilogue=True) != plan_key(
+        spec, 20, 20, 1, "tpu_v5e", "float32", "jax")
+    # Both live in the same cache file; a warm fused planner re-tunes nothing.
+    warm = Planner(cache_path=cache, fuse_epilogue=True)
+    assert warm.plan(spec, 20, 20).fused_epilogue
+    assert warm.stats["tunes"] == 0
+
+
+def test_fused_plan_drives_cnn_forward_fusion():
+    """A fused_epilogue plan opts its layer into in-kernel fusion even when
+    cnn_forward isn't asked to fuse globally — outputs must match the
+    unfused path (on bn-folded params)."""
+    import jax
+
+    from repro.models.cnn import (
+        CNNLayer, cnn_forward, fold_batchnorm, init_cnn, plan_layers,
+    )
+
+    layers = (
+        CNNLayer("conv", out_channels=8, kernel=3, stride=1),
+        CNNLayer("conv", out_channels=12, kernel=1, stride=1, pad=0,
+                 batch_norm=False),
+    )
+    planner = Planner(cache_path=None, fuse_epilogue=True)
+    plans = plan_layers(layers, 16, 16, planner, in_channels=3)
+    assert all(p.fused_epilogue for p in plans)
+
+    params = fold_batchnorm(init_cnn(jax.random.PRNGKey(0), layers), layers)
+    x = _rand((1, 16, 16, 3), 11)
+    fused = cnn_forward(params, layers, x, plans=plans)
+    unfused = cnn_forward(params, layers, x)
+    np.testing.assert_allclose(fused, unfused, rtol=2e-4, atol=2e-4)
