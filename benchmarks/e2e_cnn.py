@@ -80,6 +80,36 @@ def run(
     emit(f"e2e_{model}_predicted_total", total_pred,
          f"tunes={planner.stats['tunes']} hits={planner.stats['hits']}")
 
+    # -- 1b. fused-vs-3-pass-vs-im2col over the Winograd-eligible layer set --
+    # Modeled totals for the 3x3/stride-1 layers run three ways: im2col+GEMM,
+    # the 3-pass Winograd pipeline (V/M via HBM), and the single-pass fused
+    # megakernel (V/M in VMEM) — the headline single-kernel win.
+    from repro.core.codesign import predict_conv_time
+    from repro.core.conv_spec import ConvAlgorithm, ConvSpec
+    from repro.models.cnn import conv_layer_dims
+
+    t_im2col = t_3pass = t_fused = 0.0
+    n_elig = 0
+    for d in conv_layer_dims(layers, h, w, in_ch):
+        if d["kernel"] != 3 or d["stride"] != 1:
+            continue
+        spec = ConvSpec(d["cin"], d["cout"], (3, 3), (1, 1), (1, 1))
+        t_im2col += predict_conv_time(
+            spec, d["h"], d["w"], ConvAlgorithm.IM2COL_GEMM, batch=batch)
+        t_3pass += predict_conv_time(
+            spec, d["h"], d["w"], ConvAlgorithm.WINOGRAD, batch=batch,
+            winograd_fused=False)
+        t_fused += predict_conv_time(
+            spec, d["h"], d["w"], ConvAlgorithm.WINOGRAD, batch=batch,
+            winograd_fused=True)
+        n_elig += 1
+    if n_elig:
+        emit(f"e2e_{model}_wino_fused_vs_3pass", t_fused,
+             f"3x3s1_layers={n_elig} im2col_s={t_im2col:.6f} "
+             f"3pass_s={t_3pass:.6f} fused_s={t_fused:.6f} "
+             f"fused_vs_3pass={t_3pass / t_fused:.2f}x "
+             f"fused_vs_im2col={t_im2col / t_fused:.2f}x")
+
     # -- 2. run the network end-to-end through the plans ---------------------
     rng = jax.random.PRNGKey(0)
     params = init_cnn(rng, layers, in_channels=in_ch)

@@ -106,14 +106,17 @@ def predict_conv_time(
     hw: ChipSpec = V5E,
     dtype_bytes: int = 4,
     batch: int = 1,
+    winograd_fused: bool = True,
 ) -> float:
     """Modeled seconds for one conv layer executed with ``algorithm``.
 
     Roofline time max(compute, HBM traffic) at this layer's dims.  GEMM-family
     algorithms (direct / im2col) move the patch matrix, the weights and the
-    output; Winograd moves the tile/transform pipeline with transforms fused
-    in VMEM (the structure of kernels/winograd).  Activation terms scale with
-    ``batch``; weight terms do not.
+    output; Winograd moves the tile/transform pipeline — by default the
+    single-pass megakernel's traffic (transforms and M accumulation fused in
+    VMEM, ``winograd_fused=True``), or the 3-pass pipeline's traffic with the
+    V/M HBM round-trips (``winograd_fused=False``).  Activation terms scale
+    with ``batch``; weight terms do not.
     """
     from repro.core.conv_spec import ConvAlgorithm
     from repro.core.winograd import winograd_flops
@@ -124,11 +127,13 @@ def predict_conv_time(
     peak = hw.peak_flops_fp32 if dtype_bytes == 4 else hw.peak_flops_bf16
     bw = hw.hbm_bandwidth
     if algorithm is ConvAlgorithm.WINOGRAD:
+        from repro.core.vmem_model import winograd_traffic_bytes
+
         fl = winograd_flops(oh, ow, cin, cout)
-        tiles = batch * -(-oh // 6) * -(-ow // 6)
-        fused_bytes = dtype_bytes * (tiles * 64 * cin + 64 * cin * cout
-                                     + tiles * 36 * cout)
-        return max(batch * fl["winograd_flops"] / peak, fused_bytes / bw)
+        wino_bytes = winograd_traffic_bytes(
+            oh, ow, cin, cout, batch, dtype_bytes, fused=winograd_fused
+        )
+        return max(batch * fl["winograd_flops"] / peak, wino_bytes / bw)
     # direct-1x1 and im2col share the GEMM roofline; direct just has K = Cin.
     taps = kh * kw
     gemm_bytes = dtype_bytes * (batch * oh * ow * taps * cin + taps * cin * cout
@@ -138,24 +143,30 @@ def predict_conv_time(
 
 
 def select_algorithm_by_cost(
-    spec: ConvSpec, h: int, w: int, hw: ChipSpec = V5E, dtype_bytes: int = 4
+    spec: ConvSpec, h: int, w: int, hw: ChipSpec = V5E, dtype_bytes: int = 4,
+    winograd_fused: bool = True, batch: int = 1,
 ):
     """Roofline-model-driven per-layer algorithm choice (beyond paper).
 
     The paper selects Winograd for every 3x3/stride-1 layer.  On v5e
     (critical AI ~120 fp32) that rule over-triggers: Winograd's 64/9x
     weight-traffic inflation loses for deep low-resolution layers.  This
-    selector compares modeled times of im2col+GEMM vs the VMEM-fused
-    Winograd pipeline and picks the winner.
+    selector compares modeled times of im2col+GEMM vs the Winograd
+    realization that would actually run (``winograd_fused``: the single-pass
+    megakernel by default, the 3-pass pipeline when a planner forces it)
+    and picks the winner.
     """
     from repro.core.conv_spec import ConvAlgorithm, select_algorithm
 
     base = select_algorithm(dataclasses.replace(spec, algorithm=ConvAlgorithm.AUTO))
     if base is not ConvAlgorithm.WINOGRAD:
         return base
-    t_wino = predict_conv_time(spec, h, w, ConvAlgorithm.WINOGRAD, hw, dtype_bytes)
+    t_wino = predict_conv_time(
+        spec, h, w, ConvAlgorithm.WINOGRAD, hw, dtype_bytes, batch,
+        winograd_fused=winograd_fused,
+    )
     t_im2col = predict_conv_time(
-        spec, h, w, ConvAlgorithm.IM2COL_GEMM, hw, dtype_bytes
+        spec, h, w, ConvAlgorithm.IM2COL_GEMM, hw, dtype_bytes, batch
     )
     return ConvAlgorithm.WINOGRAD if t_wino < t_im2col else ConvAlgorithm.IM2COL_GEMM
 

@@ -41,9 +41,11 @@ from repro.core.vmem_model import BlockConfig, GemmShape, autotune_gemm
 from repro.hw import V5E, ChipSpec
 from repro.util import ceil_to
 
-# v2: plans record whether the conv epilogue (bias + activation) is fused
-# into the kernel's output stage; v1 caches are invalidated (cold start).
-PLAN_CACHE_VERSION = 2
+# v3: Winograd plans record whether the layer runs the single-pass fused
+# megakernel (transform + tuple-GEMM + inverse transform in one pallas_call)
+# and their (bt, bc, bo) tuples are autotuned against the full per-kernel
+# VMEM footprint; v2 caches are invalidated (cold start).
+PLAN_CACHE_VERSION = 3
 
 # Default on-disk location (overridable per Planner and via environment).
 DEFAULT_CACHE_PATH = os.environ.get(
@@ -70,6 +72,8 @@ class ConvPlan:
     predicted_s: float
     source: str = "cost_model"          # cost_model | measured
     fused_epilogue: bool = False        # bias+activation fused in the kernel
+    winograd_fused: bool = False        # single-pass Winograd megakernel
+                                        # (vs the 3-pass V/M-via-HBM pipeline)
 
     def to_json(self) -> Dict[str, Any]:
         return {
@@ -80,6 +84,7 @@ class ConvPlan:
             "predicted_s": self.predicted_s,
             "source": self.source,
             "fused_epilogue": self.fused_epilogue,
+            "winograd_fused": self.winograd_fused,
         }
 
     @classmethod
@@ -92,6 +97,7 @@ class ConvPlan:
             predicted_s=float(d["predicted_s"]),
             source=d.get("source", "cost_model"),
             fused_epilogue=bool(d.get("fused_epilogue", False)),
+            winograd_fused=bool(d.get("winograd_fused", False)),
         )
 
 
@@ -106,8 +112,14 @@ def plan_key(
     mode: str = "cost",
     vmem_budget: Optional[int] = None,
     fuse_epilogue: bool = False,
+    winograd_fused: Optional[bool] = None,
 ) -> str:
-    """Canonical cache key: every field that changes the decision."""
+    """Canonical cache key: every field that changes the decision.
+
+    ``winograd_fused`` is the planner's *policy* (None = auto: the tuner
+    picks fused vs 3-pass; True/False = forced), not the resolved decision —
+    an auto planner must never reuse a plan tuned under a forced policy.
+    """
     return "|".join(
         [
             chip,
@@ -115,6 +127,7 @@ def plan_key(
             impl,
             mode,
             f"e{int(fuse_epilogue)}",
+            f"wf{'a' if winograd_fused is None else int(winograd_fused)}",
             f"v{vmem_budget if vmem_budget is not None else 0}",
             f"b{batch}",
             f"h{h}w{w}",
@@ -174,6 +187,7 @@ class Planner:
         measure_reps: int = 3,
         autosave: bool = True,
         fuse_epilogue: bool = False,
+        winograd_fused: Optional[bool] = None,
     ):
         if mode not in ("cost", "measure"):
             raise ValueError(f"mode must be 'cost' or 'measure', got {mode!r}")
@@ -184,6 +198,11 @@ class Planner:
         # the epilogue inside the kernel exactly when the plan was tuned
         # that way; keyed separately in the cache.
         self.fuse_epilogue = fuse_epilogue
+        # Winograd realization policy: None lets the tuner choose between
+        # the single-pass fused megakernel and the 3-pass pipeline (cost
+        # mode compares modeled traffic; measure mode on the pallas impl
+        # times both); True/False forces one realization.
+        self.winograd_fused = winograd_fused
         self.cache_path = cache_path
         self.vmem_budget = vmem_budget if vmem_budget is not None else hw.vmem_bytes
         self.measure_reps = measure_reps
@@ -278,6 +297,7 @@ class Planner:
         key = plan_key(
             spec, h, w, batch, self.hw.name, _dtype_name(dtype), self.impl,
             self.mode, self.vmem_budget, self.fuse_epilogue,
+            self.winograd_fused,
         )
         cached = self._plans.get(key)
         if cached is not None:
@@ -303,12 +323,17 @@ class Planner:
         w: int,
         batch: int,
         dtype_bytes: int,
+        winograd_fused: bool = True,
     ) -> Tuple[BlockConfig, Tuple[int, int, int]]:
         """(GEMM BlockConfig, kernel block tuple) for one algorithm choice.
 
         The BlockConfig is autotuned on the GEMM exactly as the kernel runs
         it (direct: (B*OH*OW, O, C); im2col: K = kh*kw*C; winograd: the
-        per-position tuple multiply (tiles, O, C)).
+        per-position tuple multiply (tiles, O, C)).  Winograd kernel blocks
+        (bt, bc, bo) are autotuned per realization — the fused megakernel's
+        M-accumulator scratch (8*8*bt*bo*4 bytes) is budgeted alongside the
+        tile and weight blocks, so the fused and 3-pass variants can land on
+        different tuples.
         """
         oh, ow = spec.out_hw(h, w)
         cin, cout = spec.in_channels, spec.out_channels
@@ -327,10 +352,11 @@ class Planner:
             min(cfg.bk, ceil_to(shape.k, self.hw.lane_width)),
         )
         if algo is ConvAlgorithm.WINOGRAD:
-            from repro.kernels.winograd.ops import pick_blocks
+            from repro.core.vmem_model import autotune_winograd_blocks
 
-            kernel_blocks = pick_blocks(
-                shape.m, cin, cout, vmem_budget=self.vmem_budget
+            kernel_blocks, _ = autotune_winograd_blocks(
+                shape.m, cin, cout, self.hw, self.vmem_budget, dtype_bytes,
+                fused=winograd_fused,
             )
         elif algo is ConvAlgorithm.IM2COL_GEMM:
             from repro.kernels.im2col_gemm.ops import pick_blocks
@@ -352,13 +378,39 @@ class Planner:
 
         dtype_bytes = _dtype_bytes(dtype)
         if spec.algorithm in (ConvAlgorithm.AUTO, ConvAlgorithm.AUTO_COST):
-            algo = select_algorithm_by_cost(spec, h, w, self.hw, dtype_bytes)
+            # Selection must model the Winograd realization this planner's
+            # policy would actually run: a forced-3-pass planner competes
+            # im2col against the 3-pass pipeline, not the megakernel.
+            # Batch matters too: the im2col-vs-winograd crossover shifts as
+            # activation traffic amortizes the weight term.
+            algo = select_algorithm_by_cost(
+                spec, h, w, self.hw, dtype_bytes,
+                winograd_fused=(self.winograd_fused
+                                if self.winograd_fused is not None else True),
+                batch=batch,
+            )
         else:
             algo = select_algorithm(spec)
+        wf = False
+        if algo is ConvAlgorithm.WINOGRAD:
+            if self.winograd_fused is None:
+                # Auto: the megakernel wins whenever its eliminated V/M
+                # round-trips beat the 3-pass pipeline's modeled time.
+                wf = predict_conv_time(
+                    spec, h, w, algo, self.hw, dtype_bytes, batch,
+                    winograd_fused=True,
+                ) <= predict_conv_time(
+                    spec, h, w, algo, self.hw, dtype_bytes, batch,
+                    winograd_fused=False,
+                )
+            else:
+                wf = self.winograd_fused
         cfg, kernel_blocks = self._resolve_blocks(
-            spec, algo, h, w, batch, dtype_bytes
+            spec, algo, h, w, batch, dtype_bytes, winograd_fused=wf
         )
-        t = predict_conv_time(spec, h, w, algo, self.hw, dtype_bytes, batch)
+        t = predict_conv_time(
+            spec, h, w, algo, self.hw, dtype_bytes, batch, winograd_fused=wf
+        )
         return ConvPlan(
             algorithm=algo,
             impl=self.impl,
@@ -367,6 +419,7 @@ class Planner:
             predicted_s=t,
             source="cost_model",
             fused_epilogue=self.fuse_epilogue,
+            winograd_fused=wf,
         )
 
     def _tune_measured(
@@ -394,10 +447,36 @@ class Planner:
             * 0.05,
             dtype,
         )
+        # A fuse_epilogue planner stamps plans that will replay with the
+        # bias+activation kernel variants — time those same variants, not
+        # the bias-less ones (the costs differ per output-stage shape).
+        epi = None
+        if self.fuse_epilogue:
+            from repro.core.conv_spec import Epilogue
+
+            epi = Epilogue(
+                bias=jnp.asarray(
+                    rng.normal(size=(spec.out_channels,)), dtype
+                ),
+                activation="relu",
+            )
         best: Tuple[Optional[ConvPlan], float] = (None, float("inf"))
+        candidates = []
         for algo in _eligible_algorithms(spec):
+            if algo is ConvAlgorithm.WINOGRAD:
+                if self.winograd_fused is not None:
+                    candidates.append((algo, self.winograd_fused))
+                elif self.impl == "pallas":
+                    # Both realizations exist only on the Pallas path: time
+                    # the fused megakernel against the 3-pass pipeline.
+                    candidates += [(algo, True), (algo, False)]
+                else:
+                    candidates.append((algo, True))
+            else:
+                candidates.append((algo, False))
+        for algo, wf in candidates:
             cfg, kernel_blocks = self._resolve_blocks(
-                spec, algo, h, w, batch, dtype_bytes
+                spec, algo, h, w, batch, dtype_bytes, winograd_fused=wf
             )
             candidate = ConvPlan(
                 algorithm=algo,
@@ -407,8 +486,12 @@ class Planner:
                 predicted_s=0.0,
                 source="measured",
                 fused_epilogue=self.fuse_epilogue,
+                winograd_fused=wf,
             )
-            fn = jax.jit(lambda a, b, p=candidate: conv2d(a, b, spec, plan=p))
+            fn = jax.jit(
+                lambda a, b, p=candidate: conv2d(a, b, spec, plan=p,
+                                                 epilogue=epi)
+            )
             try:
                 jax.block_until_ready(fn(x, wts))  # compile + warm
                 times = []

@@ -154,9 +154,19 @@ def autotune_gemm(
 
 
 def winograd_traffic_bytes(
-    oh: int, ow: int, cin: int, cout: int, batch: int = 1, dtype_bytes: int = 4
+    oh: int, ow: int, cin: int, cout: int, batch: int = 1, dtype_bytes: int = 4,
+    fused: bool = False,
 ) -> int:
     """HBM traffic of the winograd pipeline (input/V/M/output + U once).
+
+    ``fused=False`` models the 3-pass realization (input transform, tuple
+    multiply, output transform as separate kernels): the V and M
+    intermediates, each (64, tiles, C) fp32, round-trip through HBM between
+    kernels — ``2*tiles*64*(cin+cout)`` elements that dominate the layer.
+    ``fused=True`` models the single-pass megakernel
+    (kernels/winograd/kernel.py:fused_winograd_pallas): V lives in registers
+    and M in a VMEM scratch accumulator, so both round-trips vanish and only
+    the tile reads, the pre-transformed weights and the output remain.
 
     Winograd's working set per stage is smaller than im2col's K-panel —
     the reason the paper finds it needs less cache (§VII.B).
@@ -164,8 +174,141 @@ def winograd_traffic_bytes(
     nth, ntw = -(-oh // 6), -(-ow // 6)
     tiles = batch * nth * ntw
     x_bytes = tiles * 64 * cin            # overlapping 8x8 reads
-    v_bytes = 2 * tiles * 64 * cin        # V write + read
     u_bytes = 64 * cin * cout             # pre-transformed weights, read once
-    m_bytes = 2 * tiles * 64 * cout       # M write + read
     y_bytes = tiles * 36 * cout           # output write
+    if fused:
+        return dtype_bytes * (x_bytes + u_bytes + y_bytes)
+    v_bytes = 2 * tiles * 64 * cin        # V write + read
+    m_bytes = 2 * tiles * 64 * cout       # M write + read
     return dtype_bytes * (x_bytes + v_bytes + u_bytes + m_bytes + y_bytes)
+
+
+def winograd_kernel_vmem_bytes(
+    bt: int, bc: int, bo: int, fused: bool = True, dtype_bytes: int = 4,
+    double_buffer: bool = True,
+) -> int:
+    """Per-program VMEM footprint of the Winograd Pallas kernels.
+
+    ``fused=True``: the single-pass megakernel holds the (bt, 8, 8, bc) tile
+    block and the (8, 8, bc, bo) weight block (both double-buffered across
+    the Cin grid axis), the (8, 8, bt, bo) fp32 M accumulator scratch, and
+    the (bt, 6, 6, bo) output block.
+
+    ``fused=False``: the 3-pass pipeline's footprint is the max over its
+    three kernels — each one's in/out blocks are live simultaneously (plus
+    the tuple-multiply's fp32 accumulator scratch).
+    """
+    buf = 2 if double_buffer else 1
+    if fused:
+        return (
+            buf * bt * 64 * bc * dtype_bytes        # input tile block
+            + buf * 64 * bc * bo * dtype_bytes      # transformed weight block
+            + 64 * bt * bo * 4                      # M accumulator scratch
+            + buf * bt * 36 * bo * dtype_bytes      # output block
+        )
+    input_tf = buf * bt * 64 * bc * dtype_bytes + buf * 64 * bt * bc * dtype_bytes
+    tuple_mul = (
+        buf * (bt * bc + bc * bo) * dtype_bytes
+        + buf * bt * bo * dtype_bytes
+        + bt * bo * 4
+    )
+    output_tf = buf * 64 * bt * bo * dtype_bytes + buf * bt * 36 * bo * dtype_bytes
+    return max(input_tf, tuple_mul, output_tf)
+
+
+# Candidate (bt, bc, bo) grids for the Winograd kernels: tiles on sublanes,
+# channels on lanes — the same HW granularity the GEMM candidates use.
+WINOGRAD_BTS = (8, 16, 32, 64, 128, 256)
+WINOGRAD_BCS = (128, 256, 512)
+WINOGRAD_BOS = (128, 256, 512)
+
+
+def predict_winograd(
+    tiles: int,
+    cin: int,
+    cout: int,
+    blocks: Tuple[int, int, int],
+    hw: ChipSpec = V5E,
+    dtype_bytes: int = 4,
+    fused: bool = True,
+) -> GemmEstimate:
+    """First-order time prediction for the Winograd kernels at one blocking.
+
+    The traffic term is block-aware (BLIS-style panel re-reads: the tile
+    panel per out-channel panel, the weight panel per tile panel), unlike
+    ``winograd_traffic_bytes`` which reports the ideal-reuse totals; the
+    3-pass variant additionally pays the V/M round trips and a 64x larger
+    grid for the tuple-multiply stage.
+    """
+    bt, bc, bo = blocks
+    tp = ceil_to(tiles, bt)
+    cp = ceil_to(cin, bc)
+    op = ceil_to(cout, bo)
+    nt, nc, no = tp // bt, cp // bc, op // bo
+    peak = hw.peak_flops_fp32 if dtype_bytes == 4 else hw.peak_flops_bf16
+    # The tuple multiply dominates compute: 64 GEMMs of (tp, cp) x (cp, op).
+    compute_s = 2.0 * 64 * tp * cp * op / peak
+    x_bytes = tiles * 64 * cin * dtype_bytes
+    u_bytes = 64 * cin * cout * dtype_bytes
+    y_bytes = tiles * 36 * cout * dtype_bytes
+    if fused:
+        grid = nt * no * nc
+        traffic = x_bytes * no + u_bytes * nt + y_bytes
+    else:
+        v_bytes = tiles * 64 * cin * dtype_bytes
+        m_bytes = tiles * 64 * cout * dtype_bytes
+        grid = nt * nc + 64 * nt * no * nc + nt * no
+        traffic = (
+            (x_bytes + v_bytes)                       # input transform
+            + (v_bytes * no + u_bytes * nt + m_bytes)  # tuple multiply
+            + (m_bytes + y_bytes)                      # output transform
+        )
+    return GemmEstimate(
+        compute_s=compute_s,
+        memory_s=traffic / hw.hbm_bandwidth,
+        startup_s=grid * hw.grid_step_overhead_s,
+        vmem_bytes=winograd_kernel_vmem_bytes(bt, bc, bo, fused, dtype_bytes),
+        hbm_bytes=traffic,
+        mxu_utilization=(tiles * cin * cout) / float(tp * cp * op),
+    )
+
+
+def autotune_winograd_blocks(
+    tiles: int,
+    cin: int,
+    cout: int,
+    hw: ChipSpec = V5E,
+    vmem_budget: Optional[int] = None,
+    dtype_bytes: int = 4,
+    fused: bool = True,
+) -> Tuple[Tuple[int, int, int], GemmEstimate]:
+    """Pick the predicted-fastest (bt, bc, bo) under a VMEM budget.
+
+    The Winograd instance of the paper's Table-II block-size tuning: every
+    HW-aligned candidate no bigger than the padded problem is scored with
+    ``predict_winograd`` and checked against the *full* per-kernel footprint
+    (``winograd_kernel_vmem_bytes``).  If even the granularity floor
+    (8, 128, 128) overflows the budget it is returned anyway — block shapes
+    cannot shrink below the (sublane, lane) tile.
+    """
+    budget = vmem_budget if vmem_budget is not None else hw.vmem_bytes
+    bt_max = ceil_to(tiles, 8)
+    bc_max = ceil_to(cin, 128)
+    bo_max = ceil_to(cout, 128)
+    candidates = [
+        (bt, bc, bo)
+        for bt in WINOGRAD_BTS
+        for bc in WINOGRAD_BCS
+        for bo in WINOGRAD_BOS
+        if bt <= bt_max and bc <= bc_max and bo <= bo_max
+        and winograd_kernel_vmem_bytes(bt, bc, bo, fused, dtype_bytes) <= budget
+    ]
+    if not candidates:
+        candidates = [(8, 128, 128)]
+    best = min(
+        candidates,
+        key=lambda b: predict_winograd(
+            tiles, cin, cout, b, hw, dtype_bytes, fused
+        ).total_s,
+    )
+    return best, predict_winograd(tiles, cin, cout, best, hw, dtype_bytes, fused)

@@ -65,9 +65,12 @@ def conv2d_pallas(
     if algo is ConvAlgorithm.WINOGRAD:
         from repro.kernels.winograd import conv2d_winograd_pallas
 
+        # The single-pass fused megakernel is the default; a plan can pin
+        # the 3-pass pipeline (e.g. a measure-mode planner that timed both).
+        fused = plan.winograd_fused if plan is not None else True
         return conv2d_winograd_pallas(
             x, w, spec, blocks=blocks, interpret=interpret,
-            bias=bias, activation=activation,
+            bias=bias, activation=activation, fused=fused,
         )
 
     from repro.kernels.im2col_gemm import conv2d_pallas_im2col

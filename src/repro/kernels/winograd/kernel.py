@@ -6,11 +6,22 @@ operand keeps a trailing (tiles, channels) block so the 128-lane axis is
 filled by channels and the 8 sublanes by tiles — the same inter-tile
 parallelization, expressed through BlockSpec tiling instead of `svcntw`.
 
-Three kernels, mirroring the paper's decomposition:
+Two realizations of the same pipeline:
+
+The 3-pass decomposition (one kernel per stage, V and M via HBM):
   input_transform:   V = B^T d B     (per tile x channel)
   tuple_multiply:    M[p] = V[p] @ U[p]  batched GEMM over the 64 positions
                      (the paper's "increase the number of blocks for GEMM")
   output_transform:  Y = A^T M A     (per tile x out-channel)
+
+The single-pass megakernel (``fused_winograd_pallas``): one grid
+(T/bt, O/bo, C/bc) where each program transforms its tile block in
+registers, runs the 64 per-position GEMMs, accumulates M in an
+(8, 8, bt, bo) fp32 VMEM scratch across the Cin (reduction) grid axis, and
+on the last Cin step applies Y = A^T M A plus the fused bias+activation
+epilogue — V and M never touch HBM, which is where Winograd's FLOP
+advantage is won or lost (cf. the follow-up co-design paper).
+
 The weight transform U = G g G^T runs offline (ops.py), as in the paper.
 """
 from __future__ import annotations
@@ -70,6 +81,115 @@ def _output_transform_bias_kernel(at_ref, m_ref, bias_ref, y_ref, *,
     y = jnp.einsum("xa,yb,abto->txyo", at_mat, at_mat, m)
     y = y + bias_ref[...].astype(jnp.float32)
     y_ref[...] = apply_activation(y, activation).astype(y_ref.dtype)
+
+
+def _fused_accumulate(cstep, bt_ref, d_ref, u_ref, acc_ref):
+    """Shared megakernel reduction step: V in registers, M into scratch."""
+
+    @pl.when(cstep == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    bt_mat = bt_ref[...]
+    d = d_ref[...].astype(jnp.float32)
+    # V[a,b,t,c] = sum_ij BT[a,i] d[t,i,j,c] BT[b,j]   (never stored to HBM)
+    v = jnp.einsum("ai,bj,tijc->abtc", bt_mat, bt_mat, d)
+    u = u_ref[...].astype(jnp.float32)
+    # 64 per-position GEMMs, batched over (a, b): M[a,b] += V[a,b] @ U[a,b].
+    acc_ref[...] += jax.lax.dot_general(
+        v, u,
+        dimension_numbers=(((3,), (2,)), ((0, 1), (0, 1))),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def _fused_inverse_transform(at_ref, acc_ref):
+    """Shared megakernel finish: Y = A^T M A on the fp32 accumulator."""
+    at_mat = at_ref[...]
+    return jnp.einsum("xa,yb,abto->txyo", at_mat, at_mat, acc_ref[...])
+
+
+def _fused_winograd_kernel(bt_ref, at_ref, d_ref, u_ref, y_ref, acc_ref, *,
+                           activation: str = "linear"):
+    """Single-pass megakernel body: transform, tuple-GEMM, inverse transform.
+
+    Grid (T/bt, O/bo, C/bc) with Cin innermost (the reduction axis).  The M
+    accumulator scratch (8, 8, bt, bo) fp32 persists across the Cin steps;
+    V exists only as a register-resident einsum result.
+    """
+    cstep = pl.program_id(2)
+    _fused_accumulate(cstep, bt_ref, d_ref, u_ref, acc_ref)
+
+    @pl.when(cstep == pl.num_programs(2) - 1)
+    def _done():
+        y = _fused_inverse_transform(at_ref, acc_ref)
+        y_ref[...] = apply_activation(y, activation).astype(y_ref.dtype)
+
+
+def _fused_winograd_bias_kernel(bt_ref, at_ref, d_ref, u_ref, bias_ref,
+                                y_ref, acc_ref, *, activation: str):
+    """Fused megakernel with the bias (1, bo) + activation epilogue applied
+    to the fp32 inverse-transform result before the store."""
+    cstep = pl.program_id(2)
+    _fused_accumulate(cstep, bt_ref, d_ref, u_ref, acc_ref)
+
+    @pl.when(cstep == pl.num_programs(2) - 1)
+    def _done():
+        y = _fused_inverse_transform(at_ref, acc_ref)
+        y = y + bias_ref[...].astype(jnp.float32)
+        y_ref[...] = apply_activation(y, activation).astype(y_ref.dtype)
+
+
+def fused_winograd_pallas(
+    tiles: jnp.ndarray,  # (T, 8, 8, C)
+    u: jnp.ndarray,      # (8, 8, C, O) pre-transformed weights
+    bt: int,
+    bc: int,
+    bo: int,
+    interpret: bool = False,
+    bias=None,           # (1, O) or None
+    activation: str = "linear",
+) -> jnp.ndarray:
+    """(T, 8, 8, C) x (8, 8, C, O) -> (T, 6, 6, O) in one pallas_call.
+
+    T % bt == 0, C % bc == 0, O % bo == 0 (ops.py pads).  Cin is the
+    innermost ('arbitrary') grid axis so the per-(tile, out-channel) block's
+    M accumulator survives in scratch between reduction steps; the tile and
+    weight blocks stream through VMEM double-buffered.
+    """
+    t, _, _, c = tiles.shape
+    o = u.shape[-1]
+    assert bias is None or bias.shape == (1, o), (o, getattr(bias, "shape", None))
+    in_specs = [
+        pl.BlockSpec((8, 8), lambda i, j, k: (0, 0)),
+        pl.BlockSpec((6, 8), lambda i, j, k: (0, 0)),
+        pl.BlockSpec((bt, 8, 8, bc), lambda i, j, k: (i, 0, 0, k)),
+        pl.BlockSpec((8, 8, bc, bo), lambda i, j, k: (0, 0, k, j)),
+    ]
+    inputs = [jnp.asarray(BT, jnp.float32), jnp.asarray(AT, jnp.float32),
+              tiles, u]
+    if bias is not None:
+        kernel = functools.partial(
+            _fused_winograd_bias_kernel, activation=activation
+        )
+        in_specs.append(pl.BlockSpec((1, bo), lambda i, j, k: (0, j)))
+        inputs.append(bias)
+    else:
+        kernel = functools.partial(
+            _fused_winograd_kernel, activation=activation
+        )
+    return pl.pallas_call(
+        kernel,
+        grid=(t // bt, o // bo, c // bc),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bt, 6, 6, bo), lambda i, j, k: (i, 0, 0, j)),
+        out_shape=jax.ShapeDtypeStruct((t, 6, 6, o), tiles.dtype),
+        scratch_shapes=[pltpu.VMEM((8, 8, bt, bo), jnp.float32)],
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")
+        ),
+        interpret=interpret,
+    )(*inputs)
 
 
 def input_transform_pallas(

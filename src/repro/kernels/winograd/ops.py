@@ -2,8 +2,10 @@
 
 Pipeline (paper §IV.B):  tile -> input transform -> tuple multiply ->
 output transform -> untile.  The overlapping 8x8 tile extraction and the
-offline weight transform are plain XLA data-movement ops; the three
-compute stages run as Pallas kernels with channels-on-lanes blocking.
+offline weight transform are plain XLA data-movement ops.  The compute
+stages run either as the single-pass fused megakernel (``fused=True``, the
+default: transforms and M accumulation never leave VMEM) or as the 3-pass
+kernel pipeline whose V/M intermediates round-trip through HBM.
 """
 from __future__ import annotations
 
@@ -14,29 +16,56 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.conv_spec import ConvSpec
+from repro.core.vmem_model import winograd_kernel_vmem_bytes
 from repro.core.winograd import OUT_TILE, TILE, _tile_input, transform_weights
 from repro.hw import V5E
 from repro.util import ceil_to
 
 
 def pick_blocks(
-    t: int, c: int, o: int, vmem_budget: Optional[int] = None
+    t: int, c: int, o: int, vmem_budget: Optional[int] = None,
+    fused: bool = True, dtype_bytes: int = 4,
 ) -> Tuple[int, int, int]:
-    """(bt, bc, bo) aligned to (sublane, lane) granularity, VMEM-bounded."""
+    """(bt, bc, bo) aligned to (sublane, lane) granularity, VMEM-bounded.
+
+    Budgets the **full** per-kernel footprint via
+    ``vmem_model.winograd_kernel_vmem_bytes`` — for the fused megakernel the
+    double-buffered tile + weight blocks, the (8, 8, bt, bo) fp32 M
+    accumulator scratch and the output block; for the 3-pass pipeline the
+    max footprint across its three kernels.  (The old heuristic budgeted
+    only the input-transform block, 2*bt*64*bc*4 bytes, and silently
+    overflowed VMEM through the weight block and tuple-multiply scratch.)
+    The channel blocks shrink first (they are what the weight block is
+    quadratic in), then the tile block; nothing shrinks below the
+    (sublane, lane) granularity floor (8, 128, 128).
+    """
     budget = vmem_budget if vmem_budget is not None else V5E.vmem_bytes
     bt = min(ceil_to(t, 8), 256)
     bc = min(ceil_to(c, 128), 512)
     bo = min(ceil_to(o, 128), 512)
-    # input-transform block: bt*8*8*bc*4 bytes x2 buffers must fit VMEM.
-    while bt > 8 and 2 * bt * 64 * bc * 4 > budget // 2:
-        bt //= 2
+
+    def fits() -> bool:
+        return winograd_kernel_vmem_bytes(
+            bt, bc, bo, fused=fused, dtype_bytes=dtype_bytes
+        ) <= budget
+
+    # Shrink in granularity multiples: halving a non-power-of-two start
+    # (e.g. bc = ceil_to(384, 128)) must land back on a 128-lane multiple,
+    # never below the (8, 128, 128) floor.
+    while not fits() and (bc > 128 or bo > 128):
+        if bc >= bo and bc > 128:
+            bc = max(128, ceil_to(bc // 2, 128))
+        else:
+            bo = max(128, ceil_to(bo // 2, 128))
+    while not fits() and bt > 8:
+        bt = max(8, ceil_to(bt // 2, 8))
     return bt, bc, bo
 
 
 @functools.partial(
     jax.jit,
     static_argnames=("spec", "blocks", "interpret", "pretransformed",
-                     "activation"),
+                     "activation", "fused"),
 )
 def conv2d_winograd_pallas(
     x: jnp.ndarray,
@@ -47,12 +76,22 @@ def conv2d_winograd_pallas(
     interpret: bool = False,
     bias: Optional[jnp.ndarray] = None,
     activation: str = "linear",
+    fused: bool = True,
 ) -> jnp.ndarray:
     """x (B,H,W,C), w (3,3,C,O) [or (8,8,C,O) pretransformed] -> (B,OH,OW,O).
 
-    ``bias`` (O,) and ``activation`` form the fused epilogue, applied in the
-    output-transform kernel on the fp32 accumulator before the store."""
+    ``fused=True`` (default) runs the single-pass megakernel: one
+    pallas_call whose grid is (T/bt, O/bo, C/bc) and whose V and M
+    intermediates stay in VMEM.  ``fused=False`` runs the 3-pass pipeline
+    (input transform -> tuple multiply -> output transform), each stage a
+    separate kernel with (64, T, C)-shaped HBM intermediates — kept for
+    measure-mode comparison and as the reference realization of the paper's
+    decomposition.
+
+    ``bias`` (O,) and ``activation`` form the fused epilogue, applied on the
+    fp32 accumulator after the inverse transform, before the store."""
     from repro.kernels.winograd.kernel import (
+        fused_winograd_pallas,
         input_transform_pallas,
         output_transform_pallas,
         tuple_multiply_pallas,
@@ -70,25 +109,34 @@ def conv2d_winograd_pallas(
     t = b * nth * ntw
     tiles = tiles.reshape(t, TILE, TILE, c)
 
-    bt, bc, bo = blocks or pick_blocks(t, c, o)
+    bt, bc, bo = blocks or pick_blocks(
+        t, c, o, fused=fused, dtype_bytes=jnp.dtype(x.dtype).itemsize
+    )
     tp, cp, op = ceil_to(t, bt), ceil_to(c, bc), ceil_to(o, bo)
     tiles = jnp.pad(tiles, ((0, tp - t), (0, 0), (0, 0), (0, cp - c)))
 
     u = w if pretransformed else transform_weights(w, x.dtype)  # (8,8,C,O)
     u = jnp.pad(u, ((0, 0), (0, 0), (0, cp - c), (0, op - o)))
 
-    v = input_transform_pallas(tiles, bt, bc, interpret=interpret)
-    v = v.reshape(TILE * TILE, tp, cp)
-    m = tuple_multiply_pallas(
-        v, u.reshape(TILE * TILE, cp, op), bt, bc, bo, interpret=interpret
-    )
     bias_p = None
     if bias is not None:
         bias_p = jnp.pad(bias, (0, op - o)).reshape(1, op)
-    y = output_transform_pallas(
-        m.reshape(TILE, TILE, tp, op), bt, bo, interpret=interpret,
-        bias=bias_p, activation=activation,
-    )  # (tp, 6, 6, op)
+
+    if fused:
+        y = fused_winograd_pallas(
+            tiles, u, bt, bc, bo, interpret=interpret,
+            bias=bias_p, activation=activation,
+        )  # (tp, 6, 6, op)
+    else:
+        v = input_transform_pallas(tiles, bt, bc, interpret=interpret)
+        v = v.reshape(TILE * TILE, tp, cp)
+        m = tuple_multiply_pallas(
+            v, u.reshape(TILE * TILE, cp, op), bt, bc, bo, interpret=interpret
+        )
+        y = output_transform_pallas(
+            m.reshape(TILE, TILE, tp, op), bt, bo, interpret=interpret,
+            bias=bias_p, activation=activation,
+        )  # (tp, 6, 6, op)
 
     y = y[:t, :, :, :o].reshape(b, nth, ntw, OUT_TILE, OUT_TILE, o)
     y = y.transpose(0, 1, 3, 2, 4, 5).reshape(b, nth * OUT_TILE, ntw * OUT_TILE, o)

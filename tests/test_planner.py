@@ -187,6 +187,70 @@ def test_plan_records_fused_epilogue(tmp_path):
     assert warm.stats["tunes"] == 0
 
 
+def test_winograd_plan_records_fused_megakernel(tmp_path):
+    """Cache v3: Winograd plans record the single-pass megakernel decision,
+    autotune (bt, bc, bo) against the fused footprint, persist it, and a warm
+    planner re-tunes nothing."""
+    from repro.core.vmem_model import winograd_kernel_vmem_bytes
+
+    cache = os.path.join(tmp_path, "wino.json")
+    spec = ConvSpec(64, 128, (3, 3), (1, 1), (1, 1))
+    planner = Planner(cache_path=cache)
+    plan = planner.plan(spec, 152, 152)
+    assert plan.algorithm is ConvAlgorithm.WINOGRAD
+    assert plan.winograd_fused          # model: fused never loses
+    bt, bc, bo = plan.kernel_blocks
+    assert winograd_kernel_vmem_bytes(bt, bc, bo, fused=True) \
+        <= planner.vmem_budget
+
+    # Round-trips through the JSON cache, zero re-tunes on a warm planner.
+    warm = Planner(cache_path=cache)
+    replan = warm.plan(spec, 152, 152)
+    assert warm.stats == {"hits": 1, "tunes": 0}
+    assert replan == plan and replan.winograd_fused
+
+    data = json.load(open(cache))
+    assert data["version"] == 3
+    (record,) = data["plans"].values()
+    assert record["winograd_fused"] is True
+
+
+def test_winograd_fused_policy_keys_separately():
+    """The wf policy (auto / forced-on / forced-off) is part of the cache
+    key, and forcing the 3-pass pipeline changes the plan."""
+    spec = ConvSpec(64, 128, (3, 3), (1, 1), (1, 1))
+    base = plan_key(spec, 152, 152, 1, "tpu_v5e", "float32", "jax")
+    assert plan_key(spec, 152, 152, 1, "tpu_v5e", "float32", "jax",
+                    winograd_fused=True) != base
+    assert plan_key(spec, 152, 152, 1, "tpu_v5e", "float32", "jax",
+                    winograd_fused=False) != base
+
+    forced_off = Planner(cache_path=None, winograd_fused=False)
+    plan = forced_off.plan(spec, 152, 152)
+    assert not plan.winograd_fused
+    # The 3-pass pipeline pays the V/M round-trips in the model.
+    auto = Planner(cache_path=None).plan(spec, 152, 152)
+    assert auto.predicted_s <= plan.predicted_s
+
+
+def test_measure_mode_times_both_winograd_realizations():
+    """On the pallas impl, measure mode times the megakernel against the
+    3-pass pipeline; whichever wins, the plan stays numerically correct."""
+    spec = ConvSpec(4, 8, (3, 3), (1, 1), (1, 1),
+                    algorithm=ConvAlgorithm.WINOGRAD)
+    planner = Planner(cache_path=None, mode="measure", impl="pallas",
+                      measure_reps=1)
+    plan = planner.plan(spec, 12, 12)
+    assert plan.source == "measured"
+    assert plan.algorithm is ConvAlgorithm.WINOGRAD
+    x, wt = _rand((1, 12, 12, 4), 15), _rand((3, 3, 4, 8), 16)
+    np.testing.assert_allclose(
+        conv2d(x, wt, spec, plan=plan, interpret=True),
+        conv2d_reference(x, wt, spec),
+        rtol=5e-4, atol=5e-4,
+    )
+
+
 def test_fused_plan_drives_cnn_forward_fusion():
     """A fused_epilogue plan opts its layer into in-kernel fusion even when
     cnn_forward isn't asked to fuse globally — outputs must match the
