@@ -48,6 +48,7 @@ def run(
     mode: str = "cost",
     cache_path: Optional[str] = None,
     reps: int = 2,
+    batch_sweep: Optional[Tuple[int, ...]] = None,
 ) -> None:
     import jax
     import jax.numpy as jnp
@@ -140,14 +141,51 @@ def run(
          f"{model} {h}x{w} b{batch} impl={impl} bn-folded fused epilogue "
          f"({speedup:.2f}x vs unfused)")
 
+    # -- 2c. network executor: whole-graph planned, layout-persistent --------
+    # The NetworkPlan elides the crop+re-pad pairs between compatible conv
+    # layers (channel-block persistence, row tiles snapped to divisors of
+    # OH) and the executor prepares params offline (fold + pad + Winograd
+    # pre-transform).  The honest per-layer baseline is the *fused* path on
+    # bn-folded params with plans re-resolved at each batch (plans are
+    # batch-keyed) — so the ratio isolates the layer-boundary work, not
+    # epilogue fusion the per-layer path also has.
+    from repro.core.netplan import NetworkExecutor, plan_network
+
+    for bn in (batch_sweep or (batch,)):
+        planner_b = Planner(mode=mode, impl=impl, cache_path=cache,
+                            autosave=False)
+        netplan = plan_network(layers, h, w, planner_b, in_channels=in_ch,
+                               batch=bn)
+        plans_b = plan_layers(layers, h, w, planner_b, in_channels=in_ch,
+                              batch=bn)
+        planner_b.save()
+        executor = NetworkExecutor(netplan, params)
+        xb = jax.random.normal(jax.random.PRNGKey(2), (bn, h, w, in_ch))
+        t_exec = time_jit(executor, xb, reps=reps, warmup=1)
+        fwd_b = jax.jit(lambda xx, pb=tuple(plans_b): cnn_forward(
+            folded, layers, xx, impl=impl, plans=pb, fuse_epilogue=True))
+        t_perlayer = time_jit(fwd_b, xb, reps=reps, warmup=1)
+        emit(f"e2e_{model}_b{bn}_perlayer", t_perlayer,
+             f"{model} {h}x{w} b{bn} impl={impl} per-layer planned (fused, "
+             f"bn-folded)")
+        emit(f"e2e_{model}_b{bn}_executor", t_exec,
+             f"{model} {h}x{w} b{bn} impl={impl} network executor "
+             f"elided={netplan.elided_boundaries} "
+             f"vs_perlayer={t_perlayer / t_exec if t_exec > 0 else 0:.2f}x")
+
     # -- 3. warm-cache proof: a fresh planner must re-tune nothing -----------
     planner2 = Planner(mode=mode, impl=impl, cache_path=cache)
     plan_layers(layers, h, w, planner2, in_channels=in_ch, batch=batch)
+    plan_network(layers, h, w, planner2, in_channels=in_ch, batch=batch)
     retunes = planner2.stats["tunes"]
     emit(f"e2e_{model}_warm_retunes", 0.0,
-         f"retunes={retunes} hits={planner2.stats['hits']}")
+         f"retunes={retunes} hits={planner2.stats['hits']} "
+         f"network_hits={planner2.network_hits}")
     assert retunes == 0, (
         f"warm plan cache re-tuned {retunes} layers — persistence is broken"
+    )
+    assert planner2.network_hits >= 1, (
+        "warm network-level cache entry missing — netplan persistence broken"
     )
 
 
@@ -164,6 +202,11 @@ def main() -> None:
                     help="plan-cache JSON path (default: REPRO_PLAN_CACHE or "
                          ".cache/conv_plans.json)")
     ap.add_argument("--reps", type=int, default=2)
+    ap.add_argument("--batch-sweep", default=None,
+                    help="comma list of batch sizes, e.g. 1,4,8: emit an "
+                         "e2e_<model>_b<N>_executor row (network executor, "
+                         "layout persistence) next to the per-layer planned "
+                         "total for each N")
     args = ap.parse_args()
     run(
         model=args.model,
@@ -173,6 +216,8 @@ def main() -> None:
         mode=args.mode,
         cache_path=args.cache,
         reps=args.reps,
+        batch_sweep=(tuple(int(b) for b in args.batch_sweep.split(","))
+                     if args.batch_sweep else None),
     )
 
 

@@ -36,3 +36,15 @@ def plan_network(planner, input_hw=INPUT_HW, batch=1, in_channels=3,
 
     return plan_layers(LAYERS, *input_hw, planner, in_channels=in_channels,
                        batch=batch, dtype=dtype)
+
+
+def network_plan(planner, input_hw=INPUT_HW, batch=1, in_channels=3,
+                 dtype="float32"):
+    """Whole-network NetworkPlan for VGG16 (see core/netplan.py): per-layer
+    ConvPlans plus the inter-layer layout-persistence decisions, warm-cached
+    as a v4 network entry.  Feed to ``NetworkExecutor`` for the planned
+    end-to-end inference path."""
+    from repro.core.netplan import plan_network
+
+    return plan_network(LAYERS, *input_hw, planner, in_channels=in_channels,
+                        batch=batch, dtype=dtype)

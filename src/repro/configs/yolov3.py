@@ -78,6 +78,18 @@ def plan_network(planner, layers=LAYERS_20, input_hw=INPUT_HW, batch=1,
     return plan_layers(layers, *input_hw, planner, in_channels=in_channels,
                        batch=batch, dtype=dtype)
 
+
+def network_plan(planner, layers=LAYERS_20, input_hw=INPUT_HW, batch=1,
+                 in_channels=3, dtype="float32"):
+    """Whole-network NetworkPlan for a YOLOv3 layer table (core/netplan.py):
+    per-layer ConvPlans plus inter-layer layout persistence, warm-cached as
+    a v4 network entry.  Pass ``layers=TINY_LAYERS,
+    input_hw=TINY_INPUT_HW`` for full YOLOv3-tiny."""
+    from repro.core.netplan import plan_network
+
+    return plan_network(layers, *input_hw, planner, in_channels=in_channels,
+                        batch=batch, dtype=dtype)
+
 # Paper Table IV: the 14 discrete YOLOv3 conv-layer GEMMs (M, N, K) with the
 # paper's measured AI and % of A64FX single-core peak.
 TABLE_IV = (

@@ -7,6 +7,8 @@
 - vmem_model: analytical TPU memory-hierarchy model (the gem5 analogue)
 - codesign:   vector-length / cache-size / lanes co-design sweeps (paper §V/§VI)
 - planner:    per-layer ConvPlan resolution + persistent autotuning cache
+- netplan:    whole-network planning: inter-layer layout persistence +
+              the NetworkExecutor (sharded batch execution)
 """
 from repro.core.conv_spec import (
     ConvAlgorithm,
@@ -18,10 +20,22 @@ from repro.core.conv_spec import (
 )
 from repro.core.conv2d import conv2d, conv2d_reference
 from repro.core.im2col import conv2d_im2col, im2col
+from repro.core.netplan import (
+    Layout,
+    NetworkExecutor,
+    NetworkPlan,
+    build_network_plan,
+    plan_network,
+)
 from repro.core.planner import ConvPlan, Planner
 from repro.core.winograd import conv2d_winograd, transform_weights
 
 __all__ = [
+    "Layout",
+    "NetworkExecutor",
+    "NetworkPlan",
+    "build_network_plan",
+    "plan_network",
     "ConvAlgorithm",
     "ConvSpec",
     "Epilogue",

@@ -24,6 +24,7 @@ from repro.core.im2col import conv2d_direct_1x1, conv2d_im2col
 from repro.core.winograd import conv2d_winograd
 
 if TYPE_CHECKING:  # import cycle: planner imports conv2d for measure mode
+    from repro.core.netplan import Layout
     from repro.core.planner import ConvPlan, Planner
 
 
@@ -36,6 +37,8 @@ def conv2d(
     plan: Optional["ConvPlan"] = None,
     planner: Optional["Planner"] = None,
     epilogue: Optional[Epilogue] = None,
+    in_layout: Optional["Layout"] = None,
+    out_layout: Optional["Layout"] = None,
 ) -> jnp.ndarray:
     """Convolve ``x`` (B,H,W,C) with ``w`` (kh,kw,C,O) per ``spec``.
 
@@ -45,6 +48,13 @@ def conv2d(
     choice and ``impl``, and its block sizes are forwarded to the Pallas
     kernels — no per-call re-selection happens.  ``epilogue`` (bias +
     activation) is fused into the output stage of whichever path runs.
+
+    ``in_layout``/``out_layout`` (core/netplan.Layout) are the network
+    executor's inter-layer layout contract: with a non-trivial ``in_layout``
+    the input (and the offline-prepared ``w``/``epilogue.bias``) already
+    carry block-padded channels and the kernel wrappers pad nothing; with a
+    non-trivial ``out_layout`` the channel crop is deferred and the padded
+    activation flows to the next planned layer (pallas impl only).
     """
     if plan is None and planner is not None:
         plan = planner.plan(
@@ -64,12 +74,24 @@ def conv2d(
         from repro.kernels import conv_ops
 
         return conv_ops.conv2d_pallas(
-            x, w, spec, algo, interpret=interpret, plan=plan, epilogue=epilogue
+            x, w, spec, algo, interpret=interpret, plan=plan,
+            epilogue=epilogue, in_layout=in_layout, out_layout=out_layout,
+        )
+    if (in_layout is not None and in_layout.pad_c) or (
+        out_layout is not None and out_layout.pad_c
+    ):
+        raise ValueError(
+            "block-padded channel layouts require impl='pallas' — the pure "
+            "jnp paths have no block padding to persist"
         )
     if algo is ConvAlgorithm.DIRECT:
         return conv2d_direct_1x1(x, w, spec, epilogue=epilogue)
     if algo is ConvAlgorithm.WINOGRAD:
-        return conv2d_winograd(x, w, spec, epilogue=epilogue)
+        # Offline-prepared weights may arrive pre-transformed as (8,8,C,O).
+        return conv2d_winograd(
+            x, w, spec, pretransformed=(w.shape[0] != spec.kh),
+            epilogue=epilogue,
+        )
     return conv2d_im2col(x, w, spec, epilogue=epilogue)
 
 

@@ -1,0 +1,680 @@
+"""Network-level inference planning and execution.
+
+The paper's co-design argument is end-to-end: the 5x win comes from tuning
+the kernels *and* the memory system across the whole layer set, not one conv
+at a time — and the follow-up RISC-V study makes the same point that
+per-layer-optimal choices are not network-optimal.  Executing layer-by-layer
+through ``core.conv2d`` leaves pure HBM elementwise traffic between
+consecutive convs: every layer crops its block-padded kernel output back to
+logical channels and the next layer immediately re-pads it to *its* block
+multiple.  This module plans the network once and makes those boundaries a
+planner decision:
+
+  Layout        the physical channel layout an NHWC activation carries
+                relative to its logical shape (trailing zero channels from
+                block alignment).  Trailing *row* padding is never carried:
+                the kernels' tail rows hold act(bias), not zeros, so the
+                network plan instead snaps each im2col row tile ``toh`` to a
+                divisor of OH — the row-block pad/crop pair vanishes
+                identically instead of being elided.
+  NetworkPlan   the whole network resolved ahead of time: per-layer
+                ConvPlans (reusing the planner's persistent cache, keyed by
+                batch), network-adjusted kernel blocks, and the inter-layer
+                layout decisions — which crop+re-pad pairs are elided so the
+                padded activation flows straight into the next pallas_call,
+                with a single channel crop at network exit.
+  NetworkExecutor  runs a NetworkPlan: offline parameter preparation
+                (batchnorm folding, block padding, Winograd weight
+                pre-transform), a jitted whole-network forward, and
+                data-parallel batch execution via shard_map over a device
+                mesh on the batch axis (single-device fallback).
+
+Elision is legal exactly when the padded region stays zero and divisible:
+the producer's weight/bias pads make its extra output channels
+act(0 + 0) = 0 (relu/leaky/linear all fix 0), maxpool/upsample preserve
+zero channels, and the consumer's zero weight pads ignore them — so a
+producer's physical channel count that divides the consumer's channel block
+can flow through unchanged.  Any consumer that needs logical channels
+(route concat, shortcut add, fc, avgpool, or a layer referenced by one)
+forces a crop back to logical.
+
+Whole-network decisions persist as a "networks" entry in the planner's v4
+cache (keyed by a layer-table digest + batch/chip/dtype/impl/policy), so a
+warm process rebuilds the NetworkPlan with zero re-tunes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.conv_spec import (
+    ConvAlgorithm,
+    ConvSpec,
+    Epilogue,
+    apply_activation,
+    select_algorithm,
+)
+from repro.core.planner import ConvPlan, Planner
+from repro.util import ceil_to
+
+
+# ---------------------------------------------------------------------------
+# Layout
+
+
+@dataclasses.dataclass(frozen=True)
+class Layout:
+    """Physical channel layout of an NHWC activation.
+
+    ``c`` logical channels plus ``pad_c`` trailing zero channels (block
+    alignment).  The invariant every producer maintains — and every consumer
+    may rely on — is that the ``pad_c`` tail is exactly zero.
+    """
+
+    c: int
+    pad_c: int = 0
+
+    @property
+    def phys_c(self) -> int:
+        return self.c + self.pad_c
+
+    @property
+    def trivial(self) -> bool:
+        return self.pad_c == 0
+
+    def to_json(self) -> List[int]:
+        return [self.c, self.pad_c]
+
+    @classmethod
+    def from_json(cls, d: Sequence[int]) -> "Layout":
+        return cls(int(d[0]), int(d[1]))
+
+
+# ---------------------------------------------------------------------------
+# NetworkPlan
+
+
+@dataclasses.dataclass(frozen=True)
+class NetStep:
+    """One planned layer: its spec/plan plus the layouts it consumes and
+    produces.  ``in_layout``/``out_layout`` are only non-trivial for planned
+    pallas convs (and the pools between them, which pass layouts through)."""
+
+    index: int
+    layer: Any                      # CNNLayer (duck-typed: .kind, ...)
+    spec: Optional[ConvSpec]
+    plan: Optional[ConvPlan]
+    in_hw: Tuple[int, int]
+    out_hw: Tuple[int, int]
+    in_layout: Layout
+    out_layout: Layout
+
+
+@dataclasses.dataclass(frozen=True)
+class NetworkPlan:
+    """A whole network resolved for one (input shape, batch, impl, dtype)."""
+
+    steps: Tuple[NetStep, ...]
+    input_hw: Tuple[int, int]
+    in_channels: int
+    batch: int
+    impl: str
+    dtype_name: str
+
+    @property
+    def layers(self) -> Tuple[Any, ...]:
+        return tuple(s.layer for s in self.steps)
+
+    @property
+    def elided_boundaries(self) -> int:
+        """Conv boundaries whose crop+re-pad pair was elided (padded
+        channels flow straight into the next layer)."""
+        return sum(
+            1 for s in self.steps
+            if s.layer.kind == "conv" and not s.out_layout.trivial
+        )
+
+    @property
+    def exit_layout(self) -> Layout:
+        return self.steps[-1].out_layout if self.steps else Layout(0)
+
+
+# ---------------------------------------------------------------------------
+# Algorithm / block helpers
+
+
+def _conv_spec(layer, in_ch: int) -> ConvSpec:
+    pad = layer.pad if layer.pad is not None else layer.kernel // 2
+    return ConvSpec(
+        in_channels=in_ch,
+        out_channels=layer.out_channels,
+        kernel_size=(layer.kernel, layer.kernel),
+        stride=(layer.stride, layer.stride),
+        padding=(pad, pad),
+    )
+
+
+def resolve_algorithm(
+    spec: ConvSpec, plan: Optional[ConvPlan], h: int, w: int
+) -> ConvAlgorithm:
+    """The algorithm ``conv2d`` would route this layer to (same priority)."""
+    if plan is not None:
+        return plan.algorithm
+    if spec.algorithm is ConvAlgorithm.AUTO_COST:
+        from repro.core.codesign import select_algorithm_by_cost
+
+        return select_algorithm_by_cost(spec, h, w)
+    return select_algorithm(spec)
+
+
+def _in_channel_multiple(plan: ConvPlan, algo: ConvAlgorithm) -> int:
+    """The input-channel block the layer's Pallas kernel reduces over."""
+    if algo is ConvAlgorithm.DIRECT:
+        return plan.kernel_blocks[2]        # (bm, bn, bk) -> bk
+    return plan.kernel_blocks[1]            # (toh|bt, bc, bo) -> bc
+
+
+def _out_channel_multiple(plan: ConvPlan, algo: ConvAlgorithm) -> int:
+    """The out-channel block the layer's kernel emits in multiples of."""
+    if algo is ConvAlgorithm.DIRECT:
+        return plan.kernel_blocks[1]        # bn
+    return plan.kernel_blocks[2]            # bo
+
+
+def _snap_row_tile(plan: ConvPlan, algo: ConvAlgorithm, oh: int) -> ConvPlan:
+    """Network-level adjustment: make the im2col row tile divide OH.
+
+    The kernel's row-tiled grid emits ceil(OH/toh)*toh rows; rows past OH
+    hold act(bias), so they cannot flow to the next layer and the wrapper
+    must crop them.  Snapping toh to the largest divisor of OH no bigger
+    than the autotuned tile makes the row-block pad/crop pair vanish
+    identically — a decision only visible at network scope.  The crop it
+    saves is one cheap elementwise op, so the snap is only taken when the
+    divisor keeps at least half the tuned tile: a prime OH (best divisor 1)
+    must not explode the grid into one program per output row — the
+    executor's im2col path crops the row tail exactly like the wrapper.
+    """
+    if algo is not ConvAlgorithm.IM2COL_GEMM:
+        return plan
+    toh, bc, bo = plan.kernel_blocks
+    snapped = min(toh, oh)
+    while oh % snapped:
+        snapped -= 1
+    if snapped < min(toh, oh) / 2 or (snapped, bc, bo) == plan.kernel_blocks:
+        return plan
+    return dataclasses.replace(plan, kernel_blocks=(snapped, bc, bo))
+
+
+# ---------------------------------------------------------------------------
+# Building the plan
+
+
+def _propagate_shapes(
+    layers: Tuple[Any, ...], h: int, w: int, in_channels: int
+) -> List[Dict[str, Any]]:
+    """Per-layer {'spec', 'in': (h,w,c), 'out': (h,w,c)} — the single shape
+    walk shared by planning and layout resolution (mirrors
+    models/cnn.cnn_forward)."""
+    infos: List[Dict[str, Any]] = []
+    shapes: List[Tuple[int, int, int]] = []
+    cur_c, cur_h, cur_w = in_channels, h, w
+    for i, l in enumerate(layers):
+        in_shape = (cur_h, cur_w, cur_c)
+        spec = None
+        if l.kind == "conv":
+            spec = _conv_spec(l, cur_c)
+            cur_h, cur_w = spec.out_hw(cur_h, cur_w)
+            cur_c = l.out_channels
+        elif l.kind == "maxpool":
+            cur_h, cur_w = -(-cur_h // l.stride), -(-cur_w // l.stride)
+        elif l.kind == "upsample":
+            cur_h, cur_w = cur_h * l.size, cur_w * l.size
+        elif l.kind == "route":
+            cur_c = sum(shapes[j][2] for j in l.from_layers)
+            cur_h, cur_w = shapes[l.from_layers[0]][:2]
+        elif l.kind == "avgpool":
+            cur_h, cur_w = 1, 1
+        elif l.kind == "fc":
+            cur_h, cur_w = 1, 1
+            cur_c = l.out_channels
+        shapes.append((cur_h, cur_w, cur_c))
+        infos.append({"spec": spec, "in": in_shape, "out": shapes[i]})
+    return infos
+
+
+def build_network_plan(
+    layers: Sequence[Any],
+    h: int,
+    w: int,
+    in_channels: int = 3,
+    batch: int = 1,
+    plans: Optional[Sequence[Optional[ConvPlan]]] = None,
+    impl: str = "jax",
+    dtype: Any = "float32",
+    snap_rows: bool = True,
+) -> NetworkPlan:
+    """Pure layout resolution: layer table + per-layer plans -> NetworkPlan.
+
+    No planner and no tuning — ``plan_network`` wraps this with plan
+    resolution and the persistent network cache entry.  Deterministic given
+    (layers, shapes, plans), so it can also run at trace time (cnn_infer).
+    """
+    layers = tuple(layers)
+    n = len(layers)
+    plans = tuple(plans) if plans is not None else (None,) * n
+    assert len(plans) == n, (len(plans), n)
+    referenced = {j for l in layers for j in getattr(l, "from_layers", ())}
+    infos = _propagate_shapes(layers, h, w, in_channels)
+
+    def next_conv(i: int):
+        """Follow ``cur`` from layer i through layout-transparent layers.
+
+        Returns ('conv', j) when the next consumer is conv j and no
+        intermediate output is referenced by a route/shortcut (padded
+        tensors must not land in the saved-outputs list of a logical
+        consumer); ('exit',) when the padded activation runs straight off
+        the network's end (single crop at exit); ('stop',) otherwise.
+        """
+        j = i + 1
+        while j < n:
+            kind = layers[j].kind
+            if kind == "conv":
+                if any(x in referenced for x in range(i, j)):
+                    return ("stop",)
+                return ("conv", j)
+            if kind in ("maxpool", "upsample"):
+                j += 1
+                continue
+            return ("stop",)
+        if any(x in referenced for x in range(i, n)):
+            return ("stop",)
+        return ("exit",)
+
+    # Pass 2: layout decisions along the ``cur`` chain.
+    steps: List[NetStep] = []
+    carry = Layout(in_channels)             # layout of `cur` entering layer i
+    for i, l in enumerate(layers):
+        info = infos[i]
+        ih, iw, ic = info["in"]
+        oh_, ow_, oc = info["out"]
+        plan = plans[i]
+        if l.kind == "conv":
+            spec = info["spec"]
+            algo = resolve_algorithm(spec, plan, ih, iw)
+            eff_impl = plan.impl if plan is not None else impl
+            planned_pallas = plan is not None and eff_impl == "pallas"
+            if planned_pallas and snap_rows:
+                plan = _snap_row_tile(plan, algo, oh_)
+            if planned_pallas:
+                in_mult = _in_channel_multiple(plan, algo)
+                if carry.pad_c and carry.phys_c % in_mult == 0:
+                    in_layout = carry       # producer elided into us
+                else:
+                    in_layout = Layout(ic, ceil_to(ic, in_mult) - ic)
+                out_phys = ceil_to(oc, _out_channel_multiple(plan, algo))
+                nxt = next_conv(i)
+                elide = nxt[0] == "exit"
+                if nxt[0] == "conv":
+                    j = nxt[1]
+                    pj = plans[j]
+                    specj = infos[j]["spec"]
+                    if pj is not None and pj.impl == "pallas":
+                        algoj = resolve_algorithm(
+                            specj, pj, *infos[j]["in"][:2]
+                        )
+                        elide = out_phys % _in_channel_multiple(pj, algoj) == 0
+                out_layout = (
+                    Layout(oc, out_phys - oc) if elide else Layout(oc)
+                )
+            else:
+                if not carry.trivial:       # pragma: no cover - by invariant
+                    raise AssertionError(
+                        "padded activation reached an unplanned conv"
+                    )
+                in_layout = Layout(ic)
+                out_layout = Layout(oc)
+            carry = out_layout
+        elif l.kind in ("maxpool", "upsample"):
+            # Channel-preserving: zero pad channels stay zero (max over an
+            # all-zero channel window is 0; repeat copies zeros).
+            in_layout = carry
+            out_layout = carry
+        else:
+            if not carry.trivial:           # pragma: no cover - by invariant
+                raise AssertionError(
+                    f"padded activation reached logical consumer {l.kind!r}"
+                )
+            in_layout = Layout(ic)
+            out_layout = Layout(oc)
+            carry = out_layout
+        steps.append(
+            NetStep(
+                index=i,
+                layer=l,
+                spec=info["spec"],
+                plan=plan,
+                in_hw=(ih, iw),
+                out_hw=(oh_, ow_),
+                in_layout=in_layout,
+                out_layout=out_layout,
+            )
+        )
+    dtype_name = getattr(dtype, "__name__", None) or getattr(
+        dtype, "name", None
+    ) or str(dtype)
+    return NetworkPlan(
+        steps=tuple(steps),
+        input_hw=(h, w),
+        in_channels=in_channels,
+        batch=batch,
+        impl=impl,
+        dtype_name=dtype_name,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Planner-backed entry point with the persistent network cache
+
+
+def network_key(
+    layers: Sequence[Any],
+    h: int,
+    w: int,
+    in_channels: int,
+    batch: int,
+    planner: Planner,
+    dtype: Any = "float32",
+) -> str:
+    """Cache key for a whole-network entry: a digest of the layer table plus
+    every planner field that changes per-layer decisions (chip, dtype, impl,
+    mode, VMEM budget, policies) and the batch — batch-keyed plans."""
+    digest = hashlib.sha1(repr(tuple(layers)).encode()).hexdigest()[:16]
+    dtype_name = getattr(dtype, "__name__", None) or getattr(
+        dtype, "name", None
+    ) or str(dtype)
+    return "|".join(
+        [
+            "net", digest, f"h{h}w{w}", f"ci{in_channels}", f"b{batch}",
+            planner.hw.name, dtype_name, planner.impl, planner.mode,
+            f"e{int(planner.fuse_epilogue)}",
+            "wf" + ("a" if planner.winograd_fused is None
+                    else str(int(planner.winograd_fused))),
+            f"v{planner.vmem_budget}",
+        ]
+    )
+
+
+def plan_network(
+    layers: Sequence[Any],
+    h: int,
+    w: int,
+    planner: Planner,
+    in_channels: int = 3,
+    batch: int = 1,
+    dtype: Any = "float32",
+) -> NetworkPlan:
+    """Resolve a NetworkPlan through a Planner, warm-cached at network scope.
+
+    Cold: resolves every conv's ConvPlan (per-layer cache or tune), builds
+    the layout decisions, and stores the whole record as a v4 "networks"
+    cache entry.  Warm: reconstructs the NetworkPlan straight from the
+    entry — zero per-layer lookups, zero tunes, the layout decisions exactly
+    as first planned.
+    """
+    layers = tuple(layers)
+    key = network_key(layers, h, w, in_channels, batch, planner, dtype)
+    entry = planner.network_entry(key)
+    if entry is not None:
+        try:
+            netplan = _netplan_from_entry(layers, entry)
+        except (KeyError, ValueError, TypeError, IndexError):
+            pass                            # corrupt entry -> replan
+        else:
+            planner.network_hits += 1       # counted only once validated
+            return netplan
+    plans: List[Optional[ConvPlan]] = [
+        (planner.plan(info["spec"], info["in"][0], info["in"][1],
+                      batch=batch, dtype=dtype)
+         if l.kind == "conv" else None)
+        for l, info in zip(layers, _propagate_shapes(layers, h, w,
+                                                     in_channels))
+    ]
+    netplan = build_network_plan(
+        layers, h, w, in_channels=in_channels, batch=batch, plans=plans,
+        impl=planner.impl, dtype=dtype,
+    )
+    planner.put_network_entry(key, _entry_from_netplan(netplan))
+    return netplan
+
+
+def _entry_from_netplan(netplan: NetworkPlan) -> Dict[str, Any]:
+    return {
+        "input_hw": list(netplan.input_hw),
+        "in_channels": netplan.in_channels,
+        "batch": netplan.batch,
+        "impl": netplan.impl,
+        "dtype": netplan.dtype_name,
+        "steps": [
+            {
+                "plan": s.plan.to_json() if s.plan is not None else None,
+                "in_hw": list(s.in_hw),
+                "out_hw": list(s.out_hw),
+                "in_layout": s.in_layout.to_json(),
+                "out_layout": s.out_layout.to_json(),
+            }
+            for s in netplan.steps
+        ],
+    }
+
+
+def _netplan_from_entry(
+    layers: Tuple[Any, ...], entry: Dict[str, Any]
+) -> NetworkPlan:
+    recs = entry["steps"]
+    if len(recs) != len(layers):
+        raise ValueError("network entry does not match the layer table")
+    steps = []
+    for i, (l, r) in enumerate(zip(layers, recs)):
+        spec = None
+        if l.kind == "conv":
+            in_c = Layout.from_json(r["in_layout"]).c
+            spec = _conv_spec(l, in_c)
+        steps.append(
+            NetStep(
+                index=i,
+                layer=l,
+                spec=spec,
+                plan=(ConvPlan.from_json(r["plan"])
+                      if r["plan"] is not None else None),
+                in_hw=tuple(r["in_hw"]),
+                out_hw=tuple(r["out_hw"]),
+                in_layout=Layout.from_json(r["in_layout"]),
+                out_layout=Layout.from_json(r["out_layout"]),
+            )
+        )
+    return NetworkPlan(
+        steps=tuple(steps),
+        input_hw=tuple(entry["input_hw"]),
+        in_channels=entry["in_channels"],
+        batch=entry["batch"],
+        impl=entry["impl"],
+        dtype_name=entry["dtype"],
+    )
+
+
+# ---------------------------------------------------------------------------
+# Parameter preparation (offline: folding, padding, weight pre-transform)
+
+
+def prepare_net_params(
+    netplan: NetworkPlan,
+    params: Sequence[Dict],
+    pretransform: bool = False,
+) -> List[Dict]:
+    """Offline parameter preparation for a NetworkPlan.
+
+    Folds inference batchnorm into conv weights + bias, pads every conv's
+    weights/bias to the step's physical channel layouts (so no weight pads
+    appear at layer boundaries in the jitted forward), and — with
+    ``pretransform`` — applies the offline Winograd weight transform
+    (paper §VII.A excludes it from timing for the same reason).
+    """
+    from repro.models.cnn import fold_batchnorm
+
+    params = fold_batchnorm(params, [s.layer for s in netplan.steps])
+    out: List[Dict] = []
+    for s, p in zip(netplan.steps, params):
+        if s.layer.kind != "conv":
+            out.append(p)
+            continue
+        w, b = p["w"], p["b"]
+        cin_pad = s.in_layout.phys_c - w.shape[2]
+        o_pad = s.out_layout.phys_c - w.shape[3]
+        if cin_pad or o_pad:
+            w = jnp.pad(w, ((0, 0), (0, 0), (0, cin_pad), (0, o_pad)))
+            b = jnp.pad(b, (0, o_pad))
+        if pretransform:
+            algo = resolve_algorithm(s.spec, s.plan, *s.in_hw)
+            if algo is ConvAlgorithm.WINOGRAD:
+                from repro.core.winograd import transform_weights
+
+                w = transform_weights(w, w.dtype)       # (8, 8, Cp, Op)
+        out.append({"w": w, "b": b})
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Execution
+
+
+def _align_channels(x: jnp.ndarray, want_phys: int) -> jnp.ndarray:
+    have = x.shape[-1]
+    if have == want_phys:
+        return x
+    if have < want_phys:
+        pad = [(0, 0)] * (x.ndim - 1) + [(0, want_phys - have)]
+        return jnp.pad(x, pad)
+    return x[..., :want_phys]
+
+
+def run_network(
+    netplan: NetworkPlan,
+    params: Sequence[Dict],
+    x: jnp.ndarray,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """The planned whole-network forward on prepared params.
+
+    Pads once at entry (the first conv's input layout), flows block-padded
+    activations across every elided boundary, crops once at exit.  Pure
+    function of (params, x) given the static NetworkPlan — jit it, or let
+    NetworkExecutor do so.
+    """
+    from repro.core.conv2d import conv2d
+
+    outputs: List[jnp.ndarray] = []
+    cur = x
+    for s in netplan.steps:
+        l = s.layer
+        if l.kind == "conv":
+            p = params[s.index]
+            cur = _align_channels(cur, s.in_layout.phys_c)
+            epi = Epilogue(bias=p["b"], activation=l.activation)
+            eff_impl = s.plan.impl if s.plan is not None else netplan.impl
+            if s.plan is not None and eff_impl == "pallas":
+                # The executor owns the boundary: channels arrive block-
+                # padded per in_layout, the crop defers per out_layout.
+                cur = conv2d(
+                    cur, p["w"], s.spec, impl=eff_impl, interpret=interpret,
+                    plan=s.plan, epilogue=epi,
+                    in_layout=s.in_layout, out_layout=s.out_layout,
+                )
+            else:
+                cur = conv2d(
+                    cur, p["w"], s.spec, impl=eff_impl, interpret=interpret,
+                    plan=s.plan, epilogue=epi,
+                )
+        elif l.kind == "maxpool":
+            cur = jax.lax.reduce_window(
+                cur, -jnp.inf, jax.lax.max,
+                (1, l.size, l.size, 1),
+                (1, l.stride, l.stride, 1), "SAME",
+            )
+        elif l.kind == "avgpool":
+            cur = cur.mean(axis=(1, 2))
+        elif l.kind == "upsample":
+            cur = jnp.repeat(jnp.repeat(cur, l.size, axis=1), l.size, axis=2)
+        elif l.kind == "shortcut":
+            cur = cur + outputs[l.from_layers[0]]
+        elif l.kind == "route":
+            cur = jnp.concatenate(
+                [outputs[j] for j in l.from_layers], axis=-1
+            )
+        elif l.kind == "fc":
+            p = params[s.index]
+            if cur.ndim == 4:
+                cur = cur.mean(axis=(1, 2))
+            cur = apply_activation(cur @ p["w"] + p["b"], l.activation)
+        outputs.append(cur)
+    exit_layout = netplan.exit_layout
+    if exit_layout.pad_c:
+        cur = cur[..., :exit_layout.c]      # the single crop at network exit
+    return cur
+
+
+class NetworkExecutor:
+    """Jitted whole-network inference over a NetworkPlan.
+
+    Prepares parameters offline (fold + pad + optional Winograd
+    pre-transform), compiles one forward for the plan's batch shape, and —
+    when more than one device is visible and the batch divides — runs
+    data-parallel over a 1-D device mesh on the batch axis via shard_map
+    (params replicated, activations batch-sharded; single-device fallback
+    is a plain jit).
+    """
+
+    def __init__(
+        self,
+        netplan: NetworkPlan,
+        params: Sequence[Dict],
+        interpret: Optional[bool] = None,
+        devices: Optional[Sequence[Any]] = None,
+        pretransform: bool = True,
+        prepared: bool = False,
+    ):
+        self.netplan = netplan
+        self.params = (
+            list(params) if prepared
+            else prepare_net_params(netplan, params, pretransform=pretransform)
+        )
+        if devices is None:
+            devices = jax.devices()
+        self.mesh = None
+
+        def fwd(prms, xx):
+            return run_network(netplan, prms, xx, interpret=interpret)
+
+        if len(devices) > 1 and netplan.batch % len(devices) == 0:
+            import numpy as np
+            from jax.experimental.shard_map import shard_map
+            from jax.sharding import Mesh, PartitionSpec as P
+
+            self.mesh = Mesh(np.array(devices), ("batch",))
+            fwd = shard_map(
+                fwd, mesh=self.mesh,
+                in_specs=(P(), P("batch")), out_specs=P("batch"),
+                check_rep=False,
+            )
+        self._fn = jax.jit(fwd)
+
+    def __call__(self, x: jnp.ndarray) -> jnp.ndarray:
+        b, h, w = x.shape[0], x.shape[1], x.shape[2]
+        assert (h, w) == self.netplan.input_hw and b == self.netplan.batch, (
+            f"executor planned for batch {self.netplan.batch} at "
+            f"{self.netplan.input_hw}, got {x.shape}"
+        )
+        return self._fn(self.params, x)

@@ -41,11 +41,15 @@ from repro.core.vmem_model import BlockConfig, GemmShape, autotune_gemm
 from repro.hw import V5E, ChipSpec
 from repro.util import ceil_to
 
-# v3: Winograd plans record whether the layer runs the single-pass fused
-# megakernel (transform + tuple-GEMM + inverse transform in one pallas_call)
-# and their (bt, bc, bo) tuples are autotuned against the full per-kernel
-# VMEM footprint; v2 caches are invalidated (cold start).
-PLAN_CACHE_VERSION = 3
+# v4: the cache gains a "networks" section — whole-network entries (written
+# by core/netplan.plan_network, keyed by a layer-table digest + the same
+# batch/chip/dtype/impl/policy fields as plan keys) recording the per-layer
+# plans *after* network-level adjustment (row tiles snapped to divisors of
+# OH) plus the inter-layer layout-elision decisions, so a warm process
+# rebuilds a NetworkPlan with zero re-tunes and zero re-derivation.  im2col
+# (toh, bc, bo) tuples are now budgeted against the full per-program
+# footprint (weight block + bias row included); v3 caches are invalidated.
+PLAN_CACHE_VERSION = 4
 
 # Default on-disk location (overridable per Planner and via environment).
 DEFAULT_CACHE_PATH = os.environ.get(
@@ -212,6 +216,11 @@ class Planner:
         self.autosave = autosave
         self._dirty = False
         self._plans: Dict[str, ConvPlan] = {}
+        # Whole-network entries (core/netplan.plan_network): opaque JSON
+        # records keyed by the caller's network key.  Persisted alongside
+        # the per-layer plans in the same versioned cache file.
+        self._networks: Dict[str, Any] = {}
+        self.network_hits = 0
         self.stats = {"hits": 0, "tunes": 0}
         if cache_path and os.path.exists(cache_path):
             self._load()
@@ -231,6 +240,9 @@ class Planner:
                 self._plans[key] = ConvPlan.from_json(d)
             except (KeyError, ValueError, TypeError):
                 continue
+        nets = data.get("networks", {})
+        if isinstance(nets, dict):
+            self._networks.update(nets)
 
     def save(self) -> None:
         """Atomically write the cache (tmp file + rename).
@@ -253,19 +265,23 @@ class Planner:
             except ImportError:  # non-POSIX: best-effort, merge still helps
                 pass
             plans: Dict[str, Any] = {}
+            networks: Dict[str, Any] = {}
             if os.path.exists(self.cache_path):
                 try:
                     with open(self.cache_path) as f:
                         disk = json.load(f)
                     if disk.get("version") == PLAN_CACHE_VERSION:
                         plans.update(disk.get("plans", {}))
+                        networks.update(disk.get("networks", {}))
                 except (OSError, json.JSONDecodeError):
                     pass
             plans.update({k: p.to_json() for k, p in self._plans.items()})
+            networks.update(self._networks)
             payload = {
                 "version": PLAN_CACHE_VERSION,
                 "chip": self.hw.name,
                 "plans": plans,
+                "networks": networks,
             }
             fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp")
             try:
@@ -282,6 +298,26 @@ class Planner:
 
     def __len__(self) -> int:
         return len(self._plans)
+
+    # -- network-level entries (consumed by core/netplan) --------------------
+
+    def network_entry(self, key: str) -> Optional[Dict[str, Any]]:
+        """The stored whole-network record for ``key``, or None (cold).
+
+        ``network_hits`` is NOT counted here: the consumer
+        (core/netplan.plan_network) increments it only after the entry
+        validates and reconstructs — a corrupt record that falls back to
+        replanning must not report warm persistence.
+        """
+        return self._networks.get(key)
+
+    def put_network_entry(self, key: str, entry: Dict[str, Any]) -> None:
+        """Store a whole-network record (must be plain JSON-able data)."""
+        self._networks[key] = entry
+        if self.autosave:
+            self.save()
+        else:
+            self._dirty = True
 
     # -- planning ------------------------------------------------------------
 
@@ -364,7 +400,7 @@ class Planner:
             ph, pw = spec.padding
             kernel_blocks = pick_blocks(
                 h + 2 * ph, w + 2 * pw, cin, cout, oh, ow, dtype_bytes,
-                vmem_budget=self.vmem_budget,
+                vmem_budget=self.vmem_budget, kh=spec.kh, kw=spec.kw,
             )
         else:
             kernel_blocks = (cfg.bm, cfg.bn, cfg.bk)

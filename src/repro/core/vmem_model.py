@@ -183,6 +183,33 @@ def winograd_traffic_bytes(
     return dtype_bytes * (x_bytes + v_bytes + u_bytes + m_bytes + y_bytes)
 
 
+def im2col_kernel_vmem_bytes(
+    hp: int, wp: int, toh: int, ow: int, bc: int, bo: int,
+    kh: int = 3, kw: int = 3, dtype_bytes: int = 4,
+    double_buffer: bool = True, bias: bool = True,
+) -> int:
+    """Per-program VMEM footprint of the fused im2col+GEMM conv kernel.
+
+    The kernel (kernels/im2col_gemm/kernel.py) keeps live at once: the
+    (1, Hp, Wp, bc) input channel slab and the (kh, kw, bc, bo) weight block
+    (both double-buffered across the in-channel grid axis), the optional
+    (1, bo) bias row, the (1, toh, OW, bo) output block and the
+    (toh, OW, bo) fp32 accumulator scratch.  The old pick_blocks heuristic
+    budgeted only the input slab and the accumulator — the weight block
+    (quadratic in the channel blocks) and the bias row silently overflowed
+    the budget for deep layers, exactly the bug the Winograd pick_blocks
+    had before PR 3.
+    """
+    buf = 2 if double_buffer else 1
+    return (
+        buf * hp * wp * bc * dtype_bytes          # input channel slab
+        + buf * kh * kw * bc * bo * dtype_bytes   # weight block
+        + (bo * dtype_bytes if bias else 0)       # bias row
+        + buf * toh * ow * bo * dtype_bytes       # output block
+        + toh * ow * bo * 4                       # fp32 accumulator scratch
+    )
+
+
 def winograd_kernel_vmem_bytes(
     bt: int, bc: int, bo: int, fused: bool = True, dtype_bytes: int = 4,
     double_buffer: bool = True,

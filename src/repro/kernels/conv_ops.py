@@ -4,6 +4,13 @@ Routes per the paper's selector: 1x1 -> blocked GEMM (direct), 3x3 stride-1
 -> Winograd kernels, everything else -> fused im2col+GEMM kernel.  When a
 ``ConvPlan`` is supplied the kernels run with its autotuned block sizes
 instead of their built-in heuristics.
+
+With an explicit ``Layout`` pair (core/netplan.py) the dispatcher runs the
+network executor's contract instead of the self-contained wrappers: the
+input activation (and the offline-prepared weights/bias) already carry
+block-padded channels, so no channel pads enter the jaxpr here, and with a
+non-trivial ``out_layout`` the channel crop is deferred — the padded
+activation flows straight into the next layer's pallas_call.
 """
 from __future__ import annotations
 
@@ -12,8 +19,10 @@ from typing import Optional, TYPE_CHECKING
 import jax.numpy as jnp
 
 from repro.core.conv_spec import ConvAlgorithm, ConvSpec, Epilogue
+from repro.util import ceil_to, pad_bias_row
 
 if TYPE_CHECKING:
+    from repro.core.netplan import Layout
     from repro.core.planner import ConvPlan
 
 
@@ -25,6 +34,8 @@ def conv2d_pallas(
     interpret: Optional[bool] = None,
     plan: Optional["ConvPlan"] = None,
     epilogue: Optional[Epilogue] = None,
+    in_layout: Optional["Layout"] = None,
+    out_layout: Optional["Layout"] = None,
 ) -> jnp.ndarray:
     """x (B,H,W,C), w (kh,kw,C,O) -> (B,OH,OW,O) via Pallas kernels.
 
@@ -38,6 +49,12 @@ def conv2d_pallas(
     blocks = plan.kernel_blocks if plan is not None else None
     bias = epilogue.bias if epilogue is not None else None
     activation = epilogue.activation if epilogue is not None else "linear"
+
+    if in_layout is not None or out_layout is not None:
+        return _conv2d_pallas_laidout(
+            x, w, spec, algo, blocks, interpret, bias, activation,
+            in_layout, out_layout, plan,
+        )
 
     if algo is ConvAlgorithm.DIRECT:
         from repro.kernels.gemm import blocked_matmul
@@ -70,6 +87,7 @@ def conv2d_pallas(
         fused = plan.winograd_fused if plan is not None else True
         return conv2d_winograd_pallas(
             x, w, spec, blocks=blocks, interpret=interpret,
+            pretransformed=(w.shape[0] != spec.kh),
             bias=bias, activation=activation, fused=fused,
         )
 
@@ -79,3 +97,136 @@ def conv2d_pallas(
         x, w, spec, blocks=blocks, interpret=interpret,
         bias=bias, activation=activation,
     )
+
+
+def _conv2d_pallas_laidout(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    spec: ConvSpec,
+    algo: ConvAlgorithm,
+    blocks,
+    interpret: bool,
+    bias: Optional[jnp.ndarray],
+    activation: str,
+    in_layout: Optional["Layout"],
+    out_layout: Optional["Layout"],
+    plan: Optional["ConvPlan"],
+) -> jnp.ndarray:
+    """Executor path: channels pre-padded in, channel crop deferred out.
+
+    Contract (enforced by core/netplan): ``x``'s channel count equals
+    ``in_layout.phys_c`` and divides the plan's channel block; ``w``/``bias``
+    were padded offline to (in phys, out phys); the out-channel padding is
+    zeros-in → act(0 + 0) = 0 out, so a deferred crop is exact.  Whatever
+    padding remains here (row-tile tails, tile-count alignment, the M tail
+    of the direct GEMM) is intra-layer data movement the boundary cannot
+    remove.
+    """
+    o_keep = (
+        out_layout.phys_c
+        if out_layout is not None and out_layout.pad_c
+        else spec.out_channels
+    )
+    if in_layout is not None:
+        assert x.shape[-1] == in_layout.phys_c, (x.shape, in_layout)
+    assert w.shape[2] == x.shape[-1], (w.shape, x.shape)
+
+    if algo is ConvAlgorithm.DIRECT:
+        from repro.kernels.gemm.ops import (
+            default_block,
+            matmul_padded_call,
+            pad_gemm_operands,
+        )
+
+        sh, sw = spec.stride
+        ph, pw = spec.padding
+        if ph or pw:
+            x = jnp.pad(x, ((0, 0), (ph, ph), (pw, pw), (0, 0)))
+        if (sh, sw) != (1, 1):
+            x = x[:, ::sh, ::sw, :]
+        b, oh, ow, cp = x.shape
+        a = x.reshape(b * oh * ow, cp)
+        w2 = w.reshape(cp, w.shape[-1])
+        m = a.shape[0]
+        if blocks is None:
+            cfg = default_block(
+                m, w2.shape[1], cp, jnp.dtype(x.dtype).itemsize
+            )
+            blocks = (cfg.bm, cfg.bn, cfg.bk)
+        a_p, b_p, bias_p = pad_gemm_operands(a, w2, blocks, bias=bias)
+        out = matmul_padded_call(
+            a_p, b_p, blocks, interpret=interpret,
+            bias_p=bias_p, activation=activation,
+        )
+        if out.shape != (m, o_keep):
+            out = out[:m, :o_keep]
+        return out.reshape(b, oh, ow, o_keep)
+
+    if algo is ConvAlgorithm.WINOGRAD:
+        from repro.core.winograd import transform_weights
+        from repro.kernels.winograd.ops import (
+            conv2d_winograd_padded_call,
+            pick_blocks,
+        )
+
+        b, h, ww, cp = x.shape
+        oh, ow = spec.out_hw(h, ww)
+        ph, pw = spec.padding
+        if ph or pw:
+            x = jnp.pad(x, ((0, 0), (ph, ph), (pw, pw), (0, 0)))
+        # Offline-prepared weights arrive pre-transformed as (8, 8, Cp, Op).
+        u = w if w.shape[0] != spec.kh else transform_weights(w, x.dtype)
+        if blocks is None:
+            t = b * -(-oh // 6) * -(-ow // 6)
+            blocks = pick_blocks(
+                t, cp, u.shape[-1], dtype_bytes=jnp.dtype(x.dtype).itemsize
+            )
+        bt, bc, bo = blocks
+        op = ceil_to(u.shape[-1], bo)
+        if op != u.shape[-1]:
+            u = jnp.pad(u, ((0, 0), (0, 0), (0, 0), (0, op - u.shape[-1])))
+        bias_p = pad_bias_row(bias, op)
+        fused = plan.winograd_fused if plan is not None else True
+        y = conv2d_winograd_padded_call(
+            x, u, oh, ow, blocks, interpret=interpret,
+            bias_p=bias_p, activation=activation, fused=fused,
+        )
+        return y[..., :o_keep] if y.shape[-1] != o_keep else y
+
+    from repro.kernels.im2col_gemm.ops import (
+        conv2d_im2col_padded_call,
+        padded_input_hw,
+        pick_blocks,
+    )
+
+    b, h, ww, cp = x.shape
+    kh, kw, _, o_phys = w.shape
+    oh, ow = spec.out_hw(h, ww)
+    ph, pw = spec.padding
+    if blocks is None:
+        blocks = pick_blocks(
+            h + 2 * ph, ww + 2 * pw, cp, o_phys, oh, ow,
+            jnp.dtype(x.dtype).itemsize, kh=kh, kw=kw,
+        )
+    toh, bc, bo = blocks
+    _, need_h, need_w = padded_input_hw(h, ww, spec, toh)
+    pads = (
+        (0, 0),
+        (ph, max(need_h - h - ph, 0)),
+        (pw, max(need_w - ww - pw, 0)),
+        (0, 0),
+    )
+    x_p = jnp.pad(x, pads) if any(p != (0, 0) for p in pads) else x
+    op = ceil_to(o_phys, bo)
+    w_p = (
+        jnp.pad(w, ((0, 0), (0, 0), (0, 0), (0, op - o_phys)))
+        if op != o_phys else w
+    )
+    bias_p = pad_bias_row(bias, op)
+    out = conv2d_im2col_padded_call(
+        x_p, w_p, spec, oh, ow, blocks, interpret=interpret,
+        bias_p=bias_p, activation=activation,
+    )
+    if out.shape[1] != oh:
+        out = out[:, :oh]
+    return out[..., :o_keep] if out.shape[-1] != o_keep else out

@@ -15,7 +15,7 @@ import jax.numpy as jnp
 from repro.core.vmem_model import BlockConfig, GemmShape, autotune_gemm
 from repro.hw import V5E
 from repro.kernels.gemm.kernel import matmul_pallas
-from repro.util import ceil_to
+from repro.util import ceil_to, pad_bias_row
 
 
 def default_block(m: int, n: int, k: int, dtype_bytes: int = 4) -> BlockConfig:
@@ -26,6 +26,54 @@ def default_block(m: int, n: int, k: int, dtype_bytes: int = 4) -> BlockConfig:
     bn = min(cfg.bn, ceil_to(n, 128))
     bk = min(cfg.bk, ceil_to(k, 128))
     return BlockConfig(bm, bn, bk)
+
+
+def pad_gemm_operands(
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    block: Tuple[int, int, int],
+    bias: Optional[jnp.ndarray] = None,
+):
+    """Block-align (a, b, bias) for ``matmul_padded_call``.
+
+    Runs under the caller's jit.  Split out of ``blocked_matmul`` so the
+    network executor (core/netplan.py) can skip it when the operands already
+    satisfy the planned layout (pre-padded activations / offline-padded
+    weights) and no pad ops enter the jaxpr at the layer boundary.
+    """
+    m, k = a.shape
+    _, n = b.shape
+    bm, bn, bk = block
+    mp, np_, kp = ceil_to(m, bm), ceil_to(n, bn), ceil_to(k, bk)
+    a_p = jnp.pad(a, ((0, mp - m), (0, kp - k))) if (mp, kp) != (m, k) else a
+    b_p = jnp.pad(b, ((0, kp - k), (0, np_ - n))) if (kp, np_) != (k, n) else b
+    bias_p = pad_bias_row(bias, np_)
+    return a_p, b_p, bias_p
+
+
+def matmul_padded_call(
+    a_p: jnp.ndarray,
+    b_p: jnp.ndarray,
+    block: Tuple[int, int, int],
+    variant: str = "6loop",
+    out_dtype=None,
+    interpret: bool = False,
+    bias_p: Optional[jnp.ndarray] = None,
+    activation: str = "linear",
+) -> jnp.ndarray:
+    """The kernel call on block-aligned operands: no padding, no cropping.
+
+    a_p (Mp, Kp), b_p (Kp, Np) with Mp % bm == Kp % bk == Np % bn == 0;
+    bias_p (1, Np) or None.  Returns the raw (Mp, Np) kernel output — the
+    caller owns any crop back to logical dims.
+    """
+    bm, bn, bk = block
+    if variant == "3loop":
+        bk = a_p.shape[1]
+    return matmul_pallas(
+        a_p, b_p, bm, bn, bk, variant=variant, out_dtype=out_dtype,
+        interpret=interpret, bias=bias_p, activation=activation,
+    )
 
 
 @functools.partial(
@@ -56,19 +104,10 @@ def blocked_matmul(
     _, n = b.shape
     if block is None:
         cfg = default_block(m, n, k, jnp.dtype(a.dtype).itemsize)
-        bm, bn, bk = cfg.bm, cfg.bn, cfg.bk
-    else:
-        bm, bn, bk = block
-    mp, np_, kp = ceil_to(m, bm), ceil_to(n, bn), ceil_to(k, bk)
-    a_p = jnp.pad(a, ((0, mp - m), (0, kp - k))) if (mp, kp) != (m, k) else a
-    b_p = jnp.pad(b, ((0, kp - k), (0, np_ - n))) if (kp, np_) != (k, n) else b
-    bias_p = None
-    if bias is not None:
-        bias_p = jnp.pad(bias, (0, np_ - n)).reshape(1, np_)
-    if variant == "3loop":
-        bk = kp
-    out = matmul_pallas(
-        a_p, b_p, bm, bn, bk, variant=variant, out_dtype=out_dtype,
-        interpret=interpret, bias=bias_p, activation=activation,
+        block = (cfg.bm, cfg.bn, cfg.bk)
+    a_p, b_p, bias_p = pad_gemm_operands(a, b, block, bias=bias)
+    out = matmul_padded_call(
+        a_p, b_p, block, variant=variant, out_dtype=out_dtype,
+        interpret=interpret, bias_p=bias_p, activation=activation,
     )
     return out[:m, :n]

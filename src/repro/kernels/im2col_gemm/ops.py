@@ -1,8 +1,15 @@
 """Jitted wrapper for the fused im2col+GEMM conv kernel.
 
 Pads input/weights to HW-aligned block multiples, picks block sizes from the
-co-design model (channel blocks sized so the input slab + accumulator fit
-the VMEM budget), runs the kernel, crops the output.
+co-design model (channel blocks sized so the *full* per-program footprint —
+input slab, weight block, bias row, output block and accumulator — fits the
+VMEM budget), runs the kernel, crops the output.
+
+The pad/crop bookkeeping is split out of the jitted body
+(`pad_conv_operands` / `conv2d_im2col_padded_call` / the final crop) so the
+network executor (core/netplan.py) can own the layer boundaries: a planned
+network pads once at entry, flows block-padded activations between layers,
+and crops once at exit.
 """
 from __future__ import annotations
 
@@ -13,32 +20,122 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.conv_spec import ConvSpec
+from repro.core.vmem_model import im2col_kernel_vmem_bytes
 from repro.hw import V5E
 from repro.kernels.im2col_gemm.kernel import conv2d_im2col_gemm_pallas
-from repro.util import ceil_to
+from repro.util import ceil_to, pad_bias_row
 
 
 def pick_blocks(
     hp: int, wp: int, c: int, o: int, oh: int, ow: int, dtype_bytes: int = 4,
-    vmem_budget: Optional[int] = None,
+    vmem_budget: Optional[int] = None, kh: int = 3, kw: int = 3,
 ) -> Tuple[int, int, int]:
     """(toh, bc, bo): biggest channel slab + row tile fitting the VMEM budget.
 
     This is the conv-kernel instance of the paper's block-size tuning
     (Table II): the input slab (Hp*Wp*bc) plays the role of the packed B
-    panel, the accumulator (toh*OW*bo) the role of the C block.
+    panel, the accumulator (toh*OW*bo) the role of the C block.  Budgets the
+    **full** per-program footprint via
+    ``vmem_model.im2col_kernel_vmem_bytes`` — including the (kh, kw, bc, bo)
+    weight block and the bias row the old heuristic ignored (mirroring the
+    PR 3 fix to the Winograd ``pick_blocks``).  The channel slab shrinks
+    first (it is what the weight block is quadratic in), then the
+    out-channel block, then the row tile; nothing shrinks below the
+    (sublane, lane) granularity floor (8, 128).
     """
     budget = vmem_budget if vmem_budget is not None else V5E.vmem_bytes
     bc = min(ceil_to(c, 8), 128)
-    # Shrink the channel slab until it takes at most ~2/3 of VMEM (x2 for
-    # double buffering).
-    while bc > 8 and 2 * hp * wp * bc * dtype_bytes > 2 * budget // 3:
-        bc //= 2
     bo = min(ceil_to(o, 128), 256)
     toh = min(oh, 64)
-    while toh > 8 and toh * ow * bo * 4 > budget // 3:
-        toh //= 2
+
+    def fits() -> bool:
+        return im2col_kernel_vmem_bytes(
+            hp, wp, toh, ow, bc, bo, kh, kw, dtype_bytes
+        ) <= budget
+
+    while not fits() and bc > 8:
+        bc = max(8, bc // 2)
+    while not fits() and bo > 128:
+        bo = max(128, ceil_to(bo // 2, 128))
+    while not fits() and toh > 1:
+        toh = max(1, toh // 2)
     return max(toh, 1), max(bc, 8), bo
+
+
+def padded_input_hw(
+    h: int, w: int, spec: ConvSpec, toh: int
+) -> Tuple[int, int, int]:
+    """(ohp, need_h, need_w): the kernel's row-tiled output height and the
+    physical input dims every row tile's window needs to stay in bounds."""
+    oh, ow = spec.out_hw(h, w)
+    sh, sw = spec.stride
+    ohp = ceil_to(oh, min(toh, oh))
+    need_h = (ohp - 1) * sh + spec.kh
+    need_w = (ow - 1) * sw + spec.kw
+    return ohp, need_h, need_w
+
+
+def pad_conv_operands(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    spec: ConvSpec,
+    blocks: Tuple[int, int, int],
+    bias: Optional[jnp.ndarray] = None,
+):
+    """Block-align (x, w, bias) for ``conv2d_im2col_padded_call``.
+
+    Applies the conv's own spatial padding plus the trailing row/column pad
+    the row-tiled grid needs, and pads channels to the (bc, bo) block
+    multiples.  Runs under the caller's jit; the executor skips it entirely
+    when the incoming activation already satisfies the layout.
+    """
+    b, h, ww, c = x.shape
+    o = w.shape[-1]
+    toh, bc, bo = blocks
+    ph, pw = spec.padding
+    _, need_h, need_w = padded_input_hw(h, ww, spec, toh)
+    cp, op = ceil_to(c, bc), ceil_to(o, bo)
+    x_p = jnp.pad(
+        x,
+        (
+            (0, 0),
+            (ph, max(need_h - h - ph, 0)),
+            (pw, max(need_w - ww - pw, 0)),
+            (0, cp - c),
+        ),
+    )
+    w_p = jnp.pad(w, ((0, 0), (0, 0), (0, cp - c), (0, op - o)))
+    bias_p = pad_bias_row(bias, op)
+    return x_p, w_p, bias_p
+
+
+def conv2d_im2col_padded_call(
+    x_p: jnp.ndarray,
+    w_p: jnp.ndarray,
+    spec: ConvSpec,
+    oh: int,
+    ow: int,
+    blocks: Tuple[int, int, int],
+    out_dtype=None,
+    interpret: bool = False,
+    bias_p: Optional[jnp.ndarray] = None,
+    activation: str = "linear",
+) -> jnp.ndarray:
+    """The kernel call on pre-padded operands: no padding, no cropping.
+
+    ``x_p`` must already carry the conv's spatial padding, the trailing
+    row/col pad from ``padded_input_hw`` and channels padded to the bc
+    multiple; ``w_p``/``bias_p`` must be padded to the same channel blocks.
+    Returns the raw (B, OHp, OW, Op) kernel output — the caller (public
+    wrapper or network executor) owns the row/channel crops.
+    """
+    toh, bc, bo = blocks
+    sh, sw = spec.stride
+    return conv2d_im2col_gemm_pallas(
+        x_p, w_p, sh, sw, oh, ow, min(toh, oh), bc, bo,
+        out_dtype=out_dtype, interpret=interpret,
+        bias=bias_p, activation=activation,
+    )
 
 
 @functools.partial(
@@ -61,34 +158,17 @@ def conv2d_pallas_im2col(
     the kernel's output stage (see kernel.py)."""
     b, h, ww, c = x.shape
     kh, kw, _, o = w.shape
-    sh, sw = spec.stride
     ph, pw = spec.padding
     oh, ow = spec.out_hw(h, ww)
 
-    toh, bc, bo = blocks or pick_blocks(
-        h + 2 * ph, ww + 2 * pw, c, o, oh, ow, jnp.dtype(x.dtype).itemsize
+    blocks = blocks or pick_blocks(
+        h + 2 * ph, ww + 2 * pw, c, o, oh, ow, jnp.dtype(x.dtype).itemsize,
+        kh=kh, kw=kw,
     )
-    toh = min(toh, oh)
-    ohp = ceil_to(oh, toh)
-    cp, op = ceil_to(c, bc), ceil_to(o, bo)
-    need_h = (ohp - 1) * sh + kh
-    need_w = (ow - 1) * sw + kw
-    x_p = jnp.pad(
-        x,
-        (
-            (0, 0),
-            (ph, max(need_h - h - ph, 0)),
-            (pw, max(need_w - ww - pw, 0)),
-            (0, cp - c),
-        ),
-    )
-    w_p = jnp.pad(w, ((0, 0), (0, 0), (0, cp - c), (0, op - o)))
-    bias_p = None
-    if bias is not None:
-        bias_p = jnp.pad(bias, (0, op - o)).reshape(1, op)
-    out = conv2d_im2col_gemm_pallas(
-        x_p, w_p, sh, sw, oh, ow, toh, bc, bo,
+    x_p, w_p, bias_p = pad_conv_operands(x, w, spec, blocks, bias=bias)
+    out = conv2d_im2col_padded_call(
+        x_p, w_p, spec, oh, ow, blocks,
         out_dtype=out_dtype, interpret=interpret,
-        bias=bias_p, activation=activation,
+        bias_p=bias_p, activation=activation,
     )
     return out[:, :oh, :, :o]

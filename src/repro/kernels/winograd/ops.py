@@ -19,7 +19,7 @@ from repro.core.conv_spec import ConvSpec
 from repro.core.vmem_model import winograd_kernel_vmem_bytes
 from repro.core.winograd import OUT_TILE, TILE, _tile_input, transform_weights
 from repro.hw import V5E
-from repro.util import ceil_to
+from repro.util import ceil_to, pad_bias_row
 
 
 def pick_blocks(
@@ -62,6 +62,74 @@ def pick_blocks(
     return bt, bc, bo
 
 
+def conv2d_winograd_padded_call(
+    x_sp: jnp.ndarray,
+    u_p: jnp.ndarray,
+    oh: int,
+    ow: int,
+    blocks: Tuple[int, int, int],
+    interpret: bool = False,
+    bias_p: Optional[jnp.ndarray] = None,
+    activation: str = "linear",
+    fused: bool = True,
+) -> jnp.ndarray:
+    """The Winograd compute stages on channel-pre-padded operands.
+
+    ``x_sp`` (B, H+2ph, W+2pw, Cp) already carries the conv's spatial
+    padding and channels padded to the bc multiple; ``u_p`` (8, 8, Cp, Op)
+    is the pre-transformed weight padded to the same channel blocks, and
+    ``bias_p`` (1, Op) or None.  The overlapping-tile extraction and the
+    tile-count padding to the bt multiple are intra-layer data movement and
+    stay here; the *channel* pad/crop pair is what the network executor
+    (core/netplan.py) elides between consecutive layers.  Returns
+    (B, OH, OW, Op): rows/cols cropped to logical (the 6-multiple tail rows
+    carry act(bias), never zeros, so they must not flow on), channels kept
+    padded for the caller to crop — or to hand straight to the next layer.
+    """
+    from repro.kernels.winograd.kernel import (
+        fused_winograd_pallas,
+        input_transform_pallas,
+        output_transform_pallas,
+        tuple_multiply_pallas,
+    )
+
+    b = x_sp.shape[0]
+    cp = x_sp.shape[-1]
+    op = u_p.shape[-1]
+    bt, bc, bo = blocks
+    assert cp % bc == 0 and op % bo == 0, (cp, bc, op, bo)
+
+    tiles, nth, ntw = _tile_input(x_sp, oh, ow)  # (B, nTH, nTW, 8, 8, Cp)
+    t = b * nth * ntw
+    tiles = tiles.reshape(t, TILE, TILE, cp)
+    tp = ceil_to(t, bt)
+    if tp != t:
+        tiles = jnp.pad(tiles, ((0, tp - t), (0, 0), (0, 0), (0, 0)))
+
+    if fused:
+        y = fused_winograd_pallas(
+            tiles, u_p, bt, bc, bo, interpret=interpret,
+            bias=bias_p, activation=activation,
+        )  # (tp, 6, 6, op)
+    else:
+        v = input_transform_pallas(tiles, bt, bc, interpret=interpret)
+        v = v.reshape(TILE * TILE, tp, cp)
+        m = tuple_multiply_pallas(
+            v, u_p.reshape(TILE * TILE, cp, op), bt, bc, bo,
+            interpret=interpret,
+        )
+        y = output_transform_pallas(
+            m.reshape(TILE, TILE, tp, op), bt, bo, interpret=interpret,
+            bias=bias_p, activation=activation,
+        )  # (tp, 6, 6, op)
+
+    y = y[:t].reshape(b, nth, ntw, OUT_TILE, OUT_TILE, op)
+    y = y.transpose(0, 1, 3, 2, 4, 5).reshape(
+        b, nth * OUT_TILE, ntw * OUT_TILE, op
+    )
+    return y[:, :oh, :ow, :]
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("spec", "blocks", "interpret", "pretransformed",
@@ -90,13 +158,6 @@ def conv2d_winograd_pallas(
 
     ``bias`` (O,) and ``activation`` form the fused epilogue, applied on the
     fp32 accumulator after the inverse transform, before the store."""
-    from repro.kernels.winograd.kernel import (
-        fused_winograd_pallas,
-        input_transform_pallas,
-        output_transform_pallas,
-        tuple_multiply_pallas,
-    )
-
     assert spec.kernel_size == (3, 3) and spec.stride == (1, 1)
     b, h, ww, c = x.shape
     o = w.shape[-1]
@@ -105,39 +166,22 @@ def conv2d_winograd_pallas(
     if ph or pw:
         x = jnp.pad(x, ((0, 0), (ph, ph), (pw, pw), (0, 0)))
 
-    tiles, nth, ntw = _tile_input(x, oh, ow)  # (B, nTH, nTW, 8, 8, C)
+    nth, ntw = -(-oh // OUT_TILE), -(-ow // OUT_TILE)
     t = b * nth * ntw
-    tiles = tiles.reshape(t, TILE, TILE, c)
-
     bt, bc, bo = blocks or pick_blocks(
         t, c, o, fused=fused, dtype_bytes=jnp.dtype(x.dtype).itemsize
     )
-    tp, cp, op = ceil_to(t, bt), ceil_to(c, bc), ceil_to(o, bo)
-    tiles = jnp.pad(tiles, ((0, tp - t), (0, 0), (0, 0), (0, cp - c)))
+    cp, op = ceil_to(c, bc), ceil_to(o, bo)
+    if cp != c:
+        x = jnp.pad(x, ((0, 0), (0, 0), (0, 0), (0, cp - c)))
 
     u = w if pretransformed else transform_weights(w, x.dtype)  # (8,8,C,O)
     u = jnp.pad(u, ((0, 0), (0, 0), (0, cp - c), (0, op - o)))
 
-    bias_p = None
-    if bias is not None:
-        bias_p = jnp.pad(bias, (0, op - o)).reshape(1, op)
+    bias_p = pad_bias_row(bias, op)
 
-    if fused:
-        y = fused_winograd_pallas(
-            tiles, u, bt, bc, bo, interpret=interpret,
-            bias=bias_p, activation=activation,
-        )  # (tp, 6, 6, op)
-    else:
-        v = input_transform_pallas(tiles, bt, bc, interpret=interpret)
-        v = v.reshape(TILE * TILE, tp, cp)
-        m = tuple_multiply_pallas(
-            v, u.reshape(TILE * TILE, cp, op), bt, bc, bo, interpret=interpret
-        )
-        y = output_transform_pallas(
-            m.reshape(TILE, TILE, tp, op), bt, bo, interpret=interpret,
-            bias=bias_p, activation=activation,
-        )  # (tp, 6, 6, op)
-
-    y = y[:t, :, :, :o].reshape(b, nth, ntw, OUT_TILE, OUT_TILE, o)
-    y = y.transpose(0, 1, 3, 2, 4, 5).reshape(b, nth * OUT_TILE, ntw * OUT_TILE, o)
-    return y[:, :oh, :ow, :]
+    y = conv2d_winograd_padded_call(
+        x, u, oh, ow, (bt, bc, bo), interpret=interpret,
+        bias_p=bias_p, activation=activation, fused=fused,
+    )
+    return y[:, :, :, :o]

@@ -269,19 +269,39 @@ def cnn_infer(
 ) -> jnp.ndarray:
     """Jitted whole-network inference entry point (the deployment path).
 
-    One compilation covers the entire network: batchnorm folding
-    (``fold_bn``), every planned conv with its fused bias + activation
-    epilogue (``fuse_epilogue``), and all the glue layers.  ``layers`` and
-    ``plans`` must be tuples (they are static, hashable arguments; the
-    configs' layer tables already are).  Used by ``benchmarks/e2e_cnn.py``
-    and ``examples/cnn_inference.py`` to report fused vs unfused latency.
+    Rides the network executor (core/netplan.py): one compilation covers
+    batchnorm folding (``fold_bn``), the whole-network layout resolution
+    (inter-layer channel-padding persistence for planned pallas convs, row
+    tiles snapped to divisors of OH), and every conv with its fused bias +
+    activation epilogue.  ``layers`` and ``plans`` must be tuples (static,
+    hashable; the configs' layer tables already are).  With
+    ``fuse_epilogue=False`` — or unfolded batchnorm params, which the
+    executor cannot fuse — it falls back to the per-layer ``cnn_forward``
+    path.  Standing-process serving should prefer ``NetworkExecutor``
+    directly: it additionally prepares parameters offline (block padding +
+    Winograd weight pre-transform) and shards the batch over a device mesh.
     """
     if fold_bn:
         params = fold_batchnorm(params, layers)
-    return cnn_forward(
-        params, layers, x, impl=impl, interpret=interpret, plans=plans,
-        fuse_epilogue=fuse_epilogue,
+    if not fuse_epilogue or any(
+        l.kind == "conv" and "bn" in p for l, p in zip(layers, params)
+    ):
+        return cnn_forward(
+            params, layers, x, impl=impl, interpret=interpret, plans=plans,
+            fuse_epilogue=fuse_epilogue,
+        )
+    from repro.core.netplan import (
+        build_network_plan,
+        prepare_net_params,
+        run_network,
     )
+
+    netplan = build_network_plan(
+        layers, x.shape[1], x.shape[2], in_channels=x.shape[3],
+        batch=x.shape[0], plans=plans, impl=impl, dtype=x.dtype,
+    )
+    prepared = prepare_net_params(netplan, params)
+    return run_network(netplan, prepared, x, interpret=interpret)
 
 
 def conv_layer_dims(layers: Sequence[CNNLayer], h: int, w: int, in_ch: int = 3):

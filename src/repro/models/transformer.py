@@ -82,6 +82,24 @@ def _init_layer(cfg: ModelConfig, rng, btype: str) -> Params:
     return p
 
 
+def _mask_state_update(
+    new_cache: Params, old_cache: Params, live: jnp.ndarray
+) -> Params:
+    """Per-row state write mask: rows where ``live`` is False keep their old
+    state.  This is what makes continuous batching legal for *recurrent*
+    blocks (rglru/mlstm/slstm): their state update is not
+    overwrite-before-read like a KV ring slot, so a slot-local prefill step
+    would otherwise fold garbage tokens into every other row's state with
+    no way to undo it.  Applied uniformly to attention caches too — a
+    masked row's ring slot is simply written one step later, at the same
+    per-row position it would have been overwritten at anyway."""
+    def mask(new, old):
+        m = live.reshape(live.shape + (1,) * (new.ndim - 1))
+        return jnp.where(m, new, old)
+
+    return jax.tree_util.tree_map(mask, new_cache, old_cache)
+
+
 def _apply_layer(
     cfg: ModelConfig,
     p: Params,
@@ -91,6 +109,7 @@ def _apply_layer(
     cache: Optional[Params],
     cache_pos: Optional[jnp.ndarray],
     fill_capacity: Optional[int] = None,
+    live: Optional[jnp.ndarray] = None,
 ) -> Tuple[jnp.ndarray, Optional[Params], Dict[str, jnp.ndarray]]:
     aux: Dict[str, jnp.ndarray] = {}
     h = rms_norm(x, p["norm1"], cfg.norm_eps)
@@ -124,6 +143,8 @@ def _apply_layer(
         out, new_cache = xlstm_lib.apply_slstm_block(
             p["mixer"], h, cfg.num_heads, cache=cache, fill_state=fill
         )
+    if live is not None and cache is not None and new_cache is not None:
+        new_cache = _mask_state_update(new_cache, cache, live)
     if cfg.use_post_norm:
         out = rms_norm(out, p["post_norm1"], cfg.norm_eps)
     x = x + out
@@ -366,6 +387,32 @@ def init_cache(cfg: ModelConfig, batch: int, capacity: int) -> Params:
     return cache
 
 
+def reset_cache_rows(cache: Params, fresh: Params, row) -> Params:
+    """Reinitialize batch row(s) of a decode cache from a fresh one.
+
+    A freshly admitted request must not inherit the previous occupant's
+    *recurrent* state: KV ring slots tolerate staleness (per-row positions
+    mask unwritten slots out of every read), but rglru/mlstm/slstm state is
+    read unconditionally, so the slot has to start from the init state.
+    ``fresh`` may be a **batch-1** cache (rows are identical at init, so
+    its row 0 serves every slot) — callers should prefer that over pinning
+    a full-batch pristine copy alive.  ``cache['period']`` leaves are
+    stacked (n_periods, B, ...) by ``init_cache``'s vmap while
+    ``cache['tail']`` leaves lead with B — hence the two index patterns.
+    """
+    out: Params = {}
+    if "period" in cache:
+        out["period"] = jax.tree_util.tree_map(
+            lambda c, z: c.at[:, row].set(z[:, 0]),
+            cache["period"], fresh["period"],
+        )
+    if "tail" in cache:
+        out["tail"] = jax.tree_util.tree_map(
+            lambda c, z: c.at[row].set(z[0]), cache["tail"], fresh["tail"]
+        )
+    return out
+
+
 def decode_step(
     cfg: ModelConfig,
     params: Params,
@@ -373,6 +420,9 @@ def decode_step(
     tokens: jnp.ndarray,   # (B, 1) int32
     pos: jnp.ndarray,      # scalar or (B,) int32: absolute position of the
                            # new token (per-row for continuous batching)
+    live: Optional[jnp.ndarray] = None,  # (B,) bool: rows whose state may
+                           # advance this step (continuous batching); None =
+                           # every row is live (single-stream decode)
 ) -> Tuple[jnp.ndarray, Params]:
     """One-token decode with cache update.  Returns (logits (B,V), cache')."""
     x = embed(params["embed"], tokens, scale_by_dim=cfg.embed_scale)
@@ -386,7 +436,9 @@ def decode_step(
             ncc = {}
             for j, bt in enumerate(pat):
                 key = f"{j}:{bt}"
-                xx, nc, _ = _apply_layer(cfg, pp[key], xx, bt, None, cc[key], pos)
+                xx, nc, _ = _apply_layer(
+                    cfg, pp[key], xx, bt, None, cc[key], pos, live=live
+                )
                 ncc[key] = nc
             return xx, ncc
 
@@ -399,7 +451,8 @@ def decode_step(
         for j, bt in enumerate(tail):
             key = f"{j}:{bt}"
             x, nc, _ = _apply_layer(
-                cfg, params["tail"][key], x, bt, None, cache["tail"][key], pos
+                cfg, params["tail"][key], x, bt, None, cache["tail"][key],
+                pos, live=live,
             )
             new_cache["tail"][key] = nc
 

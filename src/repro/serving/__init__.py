@@ -1,1 +1,2 @@
 from repro.serving.engine import ServingEngine, Request
+from repro.serving.cnn_engine import CNNServingEngine, ImageRequest

@@ -1,0 +1,164 @@
+"""CNN serving engine: dynamic batching into planner-known batch buckets.
+
+The LM engine (serving/engine.py) keeps one fixed decode batch; image
+serving has the opposite shape problem — requests are independent
+single-image forwards, and the efficient batch size is a *planner* decision
+(plans are batch-keyed: the im2col-vs-Winograd crossover and the block
+tuples shift as activation traffic amortizes the weight terms).  This
+engine bridges the two:
+
+  buckets      a small ladder of batch sizes (default 1/4/8).  Each bucket
+               gets its own NetworkPlan (core/netplan.plan_network — warm
+               v4 network cache entry) and its own NetworkExecutor
+               (offline-prepared params, jitted once, shard_map over the
+               device mesh when the bucket divides the device count).  No
+               shape outside the ladder is ever compiled — the standard
+               serving discipline of bounded compilation.
+  dispatch     ``submit`` enqueues; ``step`` drains the queue through the
+               **largest bucket that fills completely**, falling back to
+               the smallest bucket that covers the remainder (padded with
+               zero images whose outputs are dropped).  ``run`` loops
+               ``step`` until the queue is empty; ``infer`` is the
+               synchronous whole-array convenience wrapper.
+
+Stats record per-bucket batch counts and padded slots, so a deployment can
+check its bucket ladder against its real arrival distribution.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.netplan import NetworkExecutor, plan_network
+from repro.core.planner import DEFAULT_CACHE_PATH, Planner
+
+
+@dataclasses.dataclass
+class ImageRequest:
+    uid: int
+    image: np.ndarray               # (H, W, C) float32
+
+
+class CNNServingEngine:
+    """Batched CNN inference over a fixed bucket ladder of batch sizes."""
+
+    def __init__(
+        self,
+        layers: Sequence[Any],
+        params: Sequence[Dict],
+        input_hw: Tuple[int, int],
+        in_channels: int = 3,
+        buckets: Sequence[int] = (1, 4, 8),
+        impl: str = "jax",
+        mode: str = "cost",
+        cache_path: Optional[str] = DEFAULT_CACHE_PATH,
+        interpret: Optional[bool] = None,
+        dtype: Any = "float32",
+        planner: Optional[Planner] = None,
+        devices: Optional[Sequence[Any]] = None,
+    ):
+        if not buckets or any(b <= 0 for b in buckets):
+            raise ValueError(f"buckets must be positive, got {buckets!r}")
+        self.layers = tuple(layers)
+        self.input_hw = tuple(input_hw)
+        self.in_channels = in_channels
+        self.buckets = tuple(sorted(set(int(b) for b in buckets)))
+        self.dtype = dtype
+        # One planner serves every bucket; plans are batch-keyed, so each
+        # bucket resolves its own per-layer plans and network entry.  A
+        # warm cache file makes a fresh engine re-tune nothing.
+        own_planner = planner is None
+        if own_planner:
+            planner = Planner(
+                mode=mode, impl=impl, cache_path=cache_path, autosave=False,
+                fuse_epilogue=True,
+            )
+        self.planner = planner
+        self._executors: Dict[int, NetworkExecutor] = {}
+        for b in self.buckets:
+            netplan = plan_network(
+                self.layers, *self.input_hw, planner,
+                in_channels=in_channels, batch=b, dtype=dtype,
+            )
+            self._executors[b] = NetworkExecutor(
+                netplan, params, interpret=interpret, devices=devices,
+            )
+        if own_planner and cache_path:
+            planner.save()      # one merge+write covering every bucket
+        self.queue: List[ImageRequest] = []
+        self._uid = 0
+        self.stats = {
+            "batches": {b: 0 for b in self.buckets},
+            "padded_slots": 0,
+            "requests": 0,
+        }
+
+    # -- public api ---------------------------------------------------------
+
+    def submit(self, image: np.ndarray) -> int:
+        """Enqueue one (H, W, C) image; returns its uid."""
+        image = np.asarray(image)
+        want = (*self.input_hw, self.in_channels)
+        if image.shape != want:
+            raise ValueError(f"expected image shape {want}, got {image.shape}")
+        self._uid += 1
+        self.stats["requests"] += 1
+        self.queue.append(ImageRequest(self._uid, image))
+        return self._uid
+
+    def step(self) -> Dict[int, np.ndarray]:
+        """Serve one batch from the queue.  Returns uid -> output row.
+
+        Bucket policy: the largest bucket that fills completely from the
+        queue; when even the smallest bucket cannot fill, the smallest
+        bucket that covers what is pending runs padded (zero images, their
+        rows dropped) — latency over utilization at the tail.
+        """
+        if not self.queue:
+            return {}
+        pending = len(self.queue)
+        full = [b for b in self.buckets if b <= pending]
+        bucket = max(full) if full else min(
+            b for b in self.buckets if b >= pending
+        )
+        reqs = self.queue[:bucket]
+        del self.queue[:len(reqs)]
+        pad = bucket - len(reqs)
+        batch = np.stack([r.image for r in reqs])
+        if pad:
+            batch = np.concatenate(
+                [batch, np.zeros((pad, *batch.shape[1:]), batch.dtype)]
+            )
+            self.stats["padded_slots"] += pad
+        self.stats["batches"][bucket] += 1
+        out = np.asarray(
+            jax.block_until_ready(
+                self._executors[bucket](jnp.asarray(batch, self.dtype))
+            )
+        )
+        return {r.uid: out[i] for i, r in enumerate(reqs)}
+
+    def run(self, max_steps: int = 10_000) -> Dict[int, np.ndarray]:
+        """Drain the queue.  Returns uid -> output for every request."""
+        results: Dict[int, np.ndarray] = {}
+        for _ in range(max_steps):
+            if not self.queue:
+                break
+            results.update(self.step())
+        return results
+
+    def infer(self, images: np.ndarray) -> np.ndarray:
+        """Synchronous convenience: submit a (N, H, W, C) stack, run, and
+        return outputs in submission order."""
+        uids = [self.submit(img) for img in np.asarray(images)]
+        results = self.run()
+        return np.stack([results[u] for u in uids])
+
+    @property
+    def warm(self) -> bool:
+        """True when every bucket planned from the cache (zero tunes)."""
+        return self.planner.stats["tunes"] == 0

@@ -31,20 +31,6 @@ class ServingEngine:
     def __init__(self, cfg: ModelConfig, params, batch_size: int,
                  capacity: int, temperature: float = 0.0, seed: int = 0):
         assert cfg.supports_decode, f"{cfg.name} is encoder-only"
-        # Continuous batching is only correct for attention (KV ring) caches:
-        # per-row positions make every ring-slot write overwrite-before-read.
-        # Recurrent state (rglru/mlstm/slstm) is updated unconditionally per
-        # decode step, so batched slot-local prefill would feed garbage
-        # tokens into other rows' states with no way to undo it.
-        recurrent = {b for b in cfg.pattern_layers
-                     if b not in ("attn", "local")}
-        if recurrent and batch_size > 1:
-            raise ValueError(
-                f"{cfg.name} has recurrent blocks {sorted(recurrent)}: "
-                "continuous batching would corrupt their per-row state; "
-                "use batch_size=1 (or the global-batch prefill in "
-                "launch/serve.py)"
-            )
         self.cfg = cfg
         self.params = params
         self.batch = batch_size
@@ -53,12 +39,24 @@ class ServingEngine:
         self.rng = jax.random.PRNGKey(seed)
 
         self.cache = tf.init_cache(cfg, batch_size, capacity)
+        # Batch-1 pristine cache: admission resets a freed slot's rows from
+        # its row 0 (recurrent state must not leak between occupants) at
+        # 1/batch of the memory a full pristine copy would pin.
+        self._fresh_cache = tf.init_cache(cfg, 1, capacity)
         self.pos = np.zeros(batch_size, np.int64)      # per-slot next position
         self.slot_req: List[Optional[Request]] = [None] * batch_size
         self.queue: List[Request] = []
         self._uid = 0
 
-        self._decode = jax.jit(lambda p, c, t, pos: tf.decode_step(cfg, p, c, t, pos))
+        # Every decode passes a live-slot mask: rows not decoding this step
+        # keep their state (jnp.where around every state write).  KV ring
+        # caches tolerated garbage writes via overwrite-before-read, but
+        # recurrent state (rglru/mlstm/slstm) does not — the mask is what
+        # makes continuous batching correct for recurrent stacks too.
+        self._decode = jax.jit(
+            lambda p, c, t, pos, live: tf.decode_step(cfg, p, c, t, pos,
+                                                      live=live)
+        )
 
     # -- public api -----------------------------------------------------------
 
@@ -98,6 +96,12 @@ class ServingEngine:
                 req = self.queue.pop(0)
                 self.slot_req[i] = req
                 self.pos[i] = 0
+                # The freed slot's recurrent state (rglru/mlstm/slstm) and
+                # ring slots start from init — no leakage from the slot's
+                # previous occupant.
+                self.cache = tf.reset_cache_rows(
+                    self.cache, self._fresh_cache, i
+                )
                 # Feed the prompt through decode steps for this slot.
                 for t in req.prompt[:-1]:
                     self._step_slot(i, int(t))
@@ -105,18 +109,19 @@ class ServingEngine:
 
     def _step_slot(self, slot: int, token: int):
         """Advance one lagging slot (prompt prefill) through the batched
-        decode.  Every row passes its *own* position, so other live rows'
-        KV ring slots are written at positions they will legitimately
-        overwrite on their next real decode step — never at a foreign
-        slot's position (which is what corrupted mid-flight admissions
-        before).  This overwrite-before-read argument only holds for
-        attention caches; recurrent blocks are rejected at __init__ for
-        batch_size > 1."""
+        decode.  Only ``slot`` is live: every other row's state — KV ring
+        *and* recurrent (rglru/mlstm/slstm) — is masked out of the update,
+        so the garbage token this step feeds them never touches their
+        caches.  (Before the mask, correctness leaned on the KV ring's
+        overwrite-before-read property, which recurrent state lacks; the
+        engine rejected batch_size > 1 for recurrent stacks outright.)"""
         tokens = np.zeros((self.batch, 1), np.int32)
         tokens[slot, 0] = token
+        live = np.zeros(self.batch, bool)
+        live[slot] = True
         logits, self.cache = self._decode(
             self.params, self.cache, jnp.asarray(tokens),
-            jnp.asarray(self.pos, jnp.int32),
+            jnp.asarray(self.pos, jnp.int32), jnp.asarray(live),
         )
         self.pos[slot] += 1
         return np.asarray(logits[slot])
@@ -139,10 +144,12 @@ class ServingEngine:
         # Per-slot positions: sequences admitted mid-flight with shorter
         # prompts decode at their own position (a shared max() position
         # desynced their KV cache — wrote every row at the longest
-        # sequence's slot and skipped the intermediate positions).
+        # sequence's slot and skipped the intermediate positions).  The
+        # live mask keeps empty slots' state frozen.
+        live = np.array([r is not None for r in self.slot_req], bool)
         logits, self.cache = self._decode(
             self.params, self.cache, jnp.asarray(tokens),
-            jnp.asarray(self.pos, jnp.int32),
+            jnp.asarray(self.pos, jnp.int32), jnp.asarray(live),
         )
         logits_np = np.asarray(logits)
         for i, r in enumerate(self.slot_req):

@@ -5,3 +5,21 @@ from __future__ import annotations
 def ceil_to(x: int, q: int) -> int:
     """Round ``x`` up to the next multiple of ``q``."""
     return -(-x // q) * q
+
+
+def pad_bias_row(bias, n_padded: int):
+    """(O,) bias -> (1, n_padded) kernel bias row, zero-padded on the tail.
+
+    The single definition of the fused-epilogue bias layout contract, shared
+    by the gemm / im2col / winograd wrappers and the layout-aware conv
+    dispatch.  The pad is conditional on purpose: a zero-width jnp.pad still
+    emits a pad eqn, which would break the network executor's
+    no-interior-pad jaxpr guarantee (tests/test_netplan.py).
+    """
+    if bias is None:
+        return None
+    import jax.numpy as jnp
+
+    n = bias.shape[0]
+    return (jnp.pad(bias, (0, n_padded - n)) if n_padded != n
+            else bias).reshape(1, n_padded)

@@ -205,6 +205,45 @@ def test_winograd_pick_blocks_budgets_full_footprint():
                 assert footprint <= budget or (bt, bc, bo) == (8, 128, 128)
 
 
+def test_im2col_pick_blocks_budgets_full_footprint():
+    """Satellite: the im2col pick_blocks must budget the whole per-program
+    footprint — the (kh, kw, bc, bo) weight block and the bias row on top
+    of the input slab and accumulator the old heuristic stopped at
+    (mirroring the PR 3 fix to the Winograd pick_blocks)."""
+    from repro.core.vmem_model import im2col_kernel_vmem_bytes
+    from repro.kernels.im2col_gemm.ops import pick_blocks
+
+    for hp, wp, c, o, oh, ow in (
+        (18, 18, 512, 1024, 16, 16),      # deep layer: weight block dominates
+        (226, 226, 64, 64, 224, 224),     # shallow layer: slab dominates
+        (34, 34, 384, 768, 32, 32),
+    ):
+        for budget in (1 << 20, 3 << 20, 8 << 20, 64 << 20):
+            toh, bc, bo = pick_blocks(
+                hp, wp, c, o, oh, ow, vmem_budget=budget
+            )
+            assert toh >= 1 and bc % 8 == 0 and bo % 128 == 0
+            footprint = im2col_kernel_vmem_bytes(hp, wp, toh, ow, bc, bo)
+            # Either the full footprint fits, or every knob is at its floor.
+            assert footprint <= budget or (toh, bc, bo) == (1, 8, 128), (
+                (hp, wp, c, o), budget, (toh, bc, bo), footprint
+            )
+
+    # The confirmed gap: a config where the old heuristic (input slab +
+    # accumulator only) accepts blocks whose *full* footprint overflows.
+    budget = 3 << 20
+    toh, bc, bo = pick_blocks(18, 18, 512, 1024, 16, 16, vmem_budget=budget)
+    assert im2col_kernel_vmem_bytes(18, 18, toh, 16, bc, bo) <= budget
+    old_slab_only = (
+        2 * 18 * 18 * 128 * 4 <= 2 * budget // 3     # old bc check passes
+        and 16 * 16 * 256 * 4 <= budget // 3         # old toh check passes
+    )
+    overflow = im2col_kernel_vmem_bytes(18, 18, 16, 16, 128, 256) > budget
+    assert old_slab_only and overflow, (
+        "test setup: the old heuristic should overflow here"
+    )
+
+
 def test_pallas_direct_1x1_padding_regression():
     """The confirmed DIRECT-path bug: kernels/conv_ops.py subsampled
     x[:, ::sh, ::sw, :] without ever applying spec.padding, so a padded 1x1

@@ -61,17 +61,21 @@ def test_engine_rejects_encoder_archs():
         ServingEngine(cfg, {}, 1, 16)
 
 
-def test_engine_rejects_recurrent_continuous_batching():
-    """Slot-local prefill can't undo recurrent-state updates on other rows,
-    so batch_size > 1 must be rejected for rglru/xlstm stacks (batch 1 is
-    fine: there are no other rows to corrupt)."""
+def test_engine_batches_recurrent_archs():
+    """Recurrent stacks (rglru here) now continuous-batch: the live-slot
+    mask (jnp.where around every state write in decode_step) keeps
+    non-decoding rows' state frozen during slot-local prefill, and
+    admission resets the freed slot's state rows — so batch_size > 1 is
+    legal where it used to raise."""
     cfg = configs.smoke_config("recurrentgemma-9b", seq_len=32)
-    with pytest.raises(ValueError, match="recurrent"):
-        ServingEngine(cfg, {}, batch_size=2, capacity=32)
     params = tf.init_params(cfg, jax.random.PRNGKey(0))
-    eng = ServingEngine(cfg, params, batch_size=1, capacity=32)
-    eng.submit(np.array([3, 1, 4], np.int32), max_new_tokens=2)
-    assert all(len(t) == 2 for t in eng.run().values())
+    eng = ServingEngine(cfg, params, batch_size=2, capacity=32)
+    rng = np.random.default_rng(1)
+    uids = [eng.submit(rng.integers(1, cfg.vocab_size, 4), max_new_tokens=2)
+            for _ in range(3)]
+    results = eng.run()
+    assert set(results) == set(uids)
+    assert all(len(t) == 2 for t in results.values())
 
 
 def test_engine_rejects_empty_prompt(setup):
@@ -109,12 +113,21 @@ class _RecordingEngine(ServingEngine):
         return super()._sample(logits)
 
 
-def test_continuous_batching_matches_single_request(setup):
+@pytest.mark.parametrize(
+    "arch", ["llama3.2-1b", "recurrentgemma-9b", "xlstm-125m"]
+)
+def test_continuous_batching_matches_single_request(setup, arch):
     """Mixed prompt lengths + mid-flight admission: the per-step logits of
     every request must match its single-request decode.  Regression test
     for the shared-max-position KV-cache desync and the mid-flight
-    admission corrupting live slots' caches."""
-    cfg, params = setup
+    admission corrupting live slots' caches — and, for the recurrent archs
+    (rglru / mlstm+slstm), for the masked per-row state updates plus the
+    admission-time slot state reset that make batching them legal at all."""
+    if arch == "llama3.2-1b":
+        cfg, params = setup
+    else:
+        cfg = configs.smoke_config(arch, seq_len=64)
+        params = tf.init_params(cfg, jax.random.PRNGKey(0))
     prompts = [np.array([5, 9, 2, 7], np.int32),
                np.array([3, 1], np.int32),
                np.array([11, 4, 6, 8, 2, 10], np.int32)]
