@@ -1,12 +1,19 @@
 """Shared benchmark utilities: timing, CSV emission, layer-dim sources."""
 from __future__ import annotations
 
+import json
+import os
 import time
-from typing import Callable, Dict, List
+from typing import Any, Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+# Every emit() lands here as a structured row so drivers can dump the whole
+# run as machine-readable JSON (write_bench_json) — the perf trajectory is
+# tracked from files, not scraped from stdout.
+ROWS: List[Dict[str, Any]] = []
 
 
 def time_jit(fn: Callable, *args, reps: int = 5, warmup: int = 2) -> float:
@@ -23,9 +30,42 @@ def time_jit(fn: Callable, *args, reps: int = 5, warmup: int = 2) -> float:
     return float(np.median(times))
 
 
-def emit(name: str, seconds: float, derived: str = "") -> None:
-    """CSV row: name,us_per_call,derived — the contract of benchmarks.run."""
+def emit(name: str, seconds: float, derived: str = "", **meta: Any) -> None:
+    """CSV row: name,us_per_call,derived — the contract of benchmarks.run.
+
+    Keyword ``meta`` (e.g. ``provenance={"source": plan.source, ...}``) is
+    not printed; it rides along into the JSON row for machine consumers.
+    """
     print(f"{name},{seconds * 1e6:.1f},{derived}")
+    row: Dict[str, Any] = {"name": name, "seconds": seconds,
+                           "derived": derived}
+    row.update(meta)
+    ROWS.append(row)
+
+
+def write_bench_json(path: str = "BENCH_e2e.json",
+                     extra: Optional[Dict[str, Any]] = None,
+                     rows: Optional[List[Dict[str, Any]]] = None) -> str:
+    """Dump benchmark rows (plus run-level ``extra`` fields) as JSON:
+    {"rows": [{name, seconds, derived, ...}], ...}.
+
+    ``rows`` defaults to everything emitted so far in this process; a
+    benchmark that labels its output (e.g. with a model name) should pass
+    its own slice — ``ROWS[start:]`` from before its first emit — so
+    earlier sections' rows are not mislabeled into its file.
+    """
+    payload: Dict[str, Any] = {
+        "backend": jax.default_backend(),
+        "jax_version": jax.__version__,
+        "rows": list(ROWS if rows is None else rows),
+    }
+    payload.update(extra or {})
+    d = os.path.dirname(path)
+    if d:
+        os.makedirs(d, exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, sort_keys=True)
+    return path
 
 
 def yolov3_20_gemms(input_hw=(608, 608)):

@@ -1,18 +1,21 @@
-"""End-to-end planned CNN inference: the planner driving a whole network.
+"""End-to-end planned CNN inference through the `repro.api` facade.
 
 The paper's bottom line is a fully co-designed network run: every conv layer
 executes the algorithm + blocking the per-layer analysis chose (§VII, Figs
-9-10).  This benchmark reproduces that shape with the planning subsystem
-(core/planner.py):
+9-10).  This benchmark reproduces that shape through the public entry point:
 
-  1. A Planner resolves a ConvPlan per conv layer (cost-model autotune on a
-     cold cache; pure lookups on a warm one) — printed as a per-layer table
-     of (algorithm, block config, predicted cost).
-  2. The network runs end-to-end through ``cnn_forward(plans=...)`` and the
-     total latency is reported.
-  3. A second Planner is opened on the same cache file and re-plans the
-     network: it must hit the persistent cache with **zero re-tunes**, which
-     the emitted ``warm_retunes`` row asserts.
+  1. ``repro.compile(model, params, options)`` plans the whole network
+     (cost-model autotune on a cold cache; pure lookups on a warm one) —
+     ``plan_report()`` is printed as a per-layer table of (algorithm, block
+     config, predicted cost, provenance).
+  2. The network runs end-to-end three ways: per-layer planned (unfused),
+     per-layer fused (bn folded, epilogue in-kernel), and the compiled
+     executor (``compiled.run``: layout persistence + offline-prepared
+     params), per batch-sweep entry.
+  3. A second ``repro.compile`` on the same cache must re-plan the network
+     with **zero re-tunes**, which the emitted ``warm_retunes`` row asserts.
+  4. Every row also lands in machine-readable ``BENCH_e2e.json``
+     (name/seconds/plan provenance) so the perf trajectory is tracked.
 
 Models: vgg16 (default, paper's classification network), yolov3-tiny, and
 yolov3-20 (the first-20-layer Darknet-53 slice the paper sweeps in gem5).
@@ -24,19 +27,19 @@ from __future__ import annotations
 import argparse
 from typing import Optional, Tuple
 
-from benchmarks.common import emit, time_jit
+from benchmarks.common import emit, time_jit, write_bench_json
 
 
-def _network(model: str):
-    """(layer table, default input hw, in_channels) for a model name."""
+def _model(model: str):
+    """The facade CNNModel descriptor for a model name."""
     from repro.configs import vgg16, yolov3
 
     if model == "vgg16":
-        return vgg16.LAYERS, vgg16.INPUT_HW, 3
+        return vgg16.MODEL
     if model == "yolov3-tiny":
-        return yolov3.TINY_LAYERS, yolov3.TINY_INPUT_HW, 3
+        return yolov3.TINY_MODEL
     if model == "yolov3-20":
-        return yolov3.LAYERS_20, yolov3.INPUT_HW, 3
+        return yolov3.MODEL_20
     raise ValueError(f"unknown model {model!r}")
 
 
@@ -49,37 +52,44 @@ def run(
     cache_path: Optional[str] = None,
     reps: int = 2,
     batch_sweep: Optional[Tuple[int, ...]] = None,
+    json_path: Optional[str] = None,
 ) -> None:
     import jax
-    import jax.numpy as jnp
 
-    from repro.core.planner import DEFAULT_CACHE_PATH, Planner
-    from repro.models.cnn import cnn_forward, cnn_infer, init_cnn, plan_layers
+    import repro
+    from benchmarks import common
+    from repro.core.planner import DEFAULT_CACHE_PATH
+    from repro.models.cnn import cnn_forward, fold_batchnorm, init_cnn
 
-    layers, default_hw, in_ch = _network(model)
-    h, w = input_hw or default_hw
+    rows_start = len(common.ROWS)       # this run's slice of the row log
+    desc = _model(model)
+    if input_hw is not None:
+        desc = desc.with_input_hw(input_hw)
+    h, w = desc.input_hw
+    layers, in_ch = desc.layers, desc.in_channels
     cache = cache_path if cache_path is not None else DEFAULT_CACHE_PATH
+    options = repro.ExecutionOptions(
+        impl=impl, mode=mode, cache_path=cache, batch=batch,
+    )
 
-    # -- 1. plan the whole network (cold: tunes; warm: pure cache hits) ------
-    planner = Planner(mode=mode, impl=impl, cache_path=cache, autosave=False)
-    plans = plan_layers(layers, h, w, planner, in_channels=in_ch, batch=batch)
-    planner.save()   # one merge+write for the whole net, not one per layer
-    conv_i = 0
-    for i, (l, plan) in enumerate(zip(layers, plans)):
-        if plan is None:
-            continue
-        blk = plan.block
+    # -- 1. compile: plan the whole network (cold: tunes; warm: hits) --------
+    rng = jax.random.PRNGKey(0)
+    params = init_cnn(rng, layers, in_channels=in_ch)
+    compiled = repro.compile(desc, params, options)
+    report = compiled.plan_report()
+    for conv_i, row in enumerate(report["layers"]):
         emit(
             f"e2e_{model}_L{conv_i:02d}",
-            plan.predicted_s,
-            f"{plan.algorithm.value} {l.kernel}x{l.kernel}/s{l.stride} "
-            f"bm{blk.bm} bn{blk.bn} bk{blk.bk} "
-            f"kblocks={'x'.join(map(str, plan.kernel_blocks))} [{plan.source}]",
+            row["predicted_s"],
+            f"{row['algorithm']} {row['kernel']}x{row['kernel']}"
+            f"/s{row['stride']} "
+            f"kblocks={'x'.join(map(str, row['kernel_blocks']))} "
+            f"[{row['source']}]",
+            provenance=row,
         )
-        conv_i += 1
-    total_pred = sum(p.predicted_s for p in plans if p is not None)
-    emit(f"e2e_{model}_predicted_total", total_pred,
-         f"tunes={planner.stats['tunes']} hits={planner.stats['hits']}")
+    emit(f"e2e_{model}_predicted_total", report["predicted_total_s"],
+         f"tunes={report['tunes']} hits={report['hits']}",
+         provenance={"tunes": report["tunes"], "hits": report["hits"]})
 
     # -- 1b. fused-vs-3-pass-vs-im2col over the Winograd-eligible layer set --
     # Modeled totals for the 3x3/stride-1 layers run three ways: im2col+GEMM,
@@ -111,12 +121,11 @@ def run(
              f"fused_vs_3pass={t_3pass / t_fused:.2f}x "
              f"fused_vs_im2col={t_im2col / t_fused:.2f}x")
 
-    # -- 2. run the network end-to-end through the plans ---------------------
-    rng = jax.random.PRNGKey(0)
-    params = init_cnn(rng, layers, in_channels=in_ch)
+    # -- 2. per-layer planned run (unfused): the pre-executor reference ------
     x = jax.random.normal(jax.random.PRNGKey(1), (batch, h, w, in_ch))
+    plans_t = tuple(s.plan for s in compiled.network_plan(batch).steps)
     fwd = jax.jit(
-        lambda xx: cnn_forward(params, layers, xx, impl=impl, plans=plans)
+        lambda xx: cnn_forward(params, layers, xx, impl=impl, plans=plans_t)
     )
     t = time_jit(fwd, x, reps=reps, warmup=1)
     emit(f"e2e_{model}_total", t,
@@ -125,15 +134,12 @@ def run(
     # -- 2b. fused epilogue: batchnorm folded offline, bias+act in-kernel ----
     # Folding runs once ahead of serving (like the paper's offline Winograd
     # weight transform, §VII.A), so it is excluded from the timed loop.
-    from repro.models.cnn import fold_batchnorm
-
     folded = jax.block_until_ready(
         jax.jit(lambda p: fold_batchnorm(p, layers))(params)
     )
-    plans_t = tuple(plans)
     fused = jax.jit(
-        lambda xx: cnn_infer(folded, layers, xx, impl=impl, plans=plans_t,
-                             fold_bn=False)
+        lambda xx: cnn_forward(folded, layers, xx, impl=impl, plans=plans_t,
+                               fuse_epilogue=True)
     )
     t_fused = time_jit(fused, x, reps=reps, warmup=1)
     speedup = t / t_fused if t_fused > 0 else float("inf")
@@ -141,52 +147,53 @@ def run(
          f"{model} {h}x{w} b{batch} impl={impl} bn-folded fused epilogue "
          f"({speedup:.2f}x vs unfused)")
 
-    # -- 2c. network executor: whole-graph planned, layout-persistent --------
-    # The NetworkPlan elides the crop+re-pad pairs between compatible conv
-    # layers (channel-block persistence, row tiles snapped to divisors of
-    # OH) and the executor prepares params offline (fold + pad + Winograd
-    # pre-transform).  The honest per-layer baseline is the *fused* path on
+    # -- 2c. the compiled executor: whole-graph planned, layout-persistent ---
+    # ``compiled.run`` is the facade's deployment path: NetworkPlan (layout
+    # elision, row tiles snapped to divisors of OH) + offline-prepared
+    # params.  The honest per-layer baseline is the *fused* path on
     # bn-folded params with plans re-resolved at each batch (plans are
     # batch-keyed) — so the ratio isolates the layer-boundary work, not
     # epilogue fusion the per-layer path also has.
-    from repro.core.netplan import NetworkExecutor, plan_network
-
     for bn in (batch_sweep or (batch,)):
-        planner_b = Planner(mode=mode, impl=impl, cache_path=cache,
-                            autosave=False)
-        netplan = plan_network(layers, h, w, planner_b, in_channels=in_ch,
-                               batch=bn)
-        plans_b = plan_layers(layers, h, w, planner_b, in_channels=in_ch,
-                              batch=bn)
-        planner_b.save()
-        executor = NetworkExecutor(netplan, params)
+        netplan_b = compiled.network_plan(bn)
         xb = jax.random.normal(jax.random.PRNGKey(2), (bn, h, w, in_ch))
-        t_exec = time_jit(executor, xb, reps=reps, warmup=1)
-        fwd_b = jax.jit(lambda xx, pb=tuple(plans_b): cnn_forward(
+        t_exec = time_jit(compiled.run, xb, reps=reps, warmup=1)
+        plans_b = tuple(s.plan for s in netplan_b.steps)
+        fwd_b = jax.jit(lambda xx, pb=plans_b: cnn_forward(
             folded, layers, xx, impl=impl, plans=pb, fuse_epilogue=True))
         t_perlayer = time_jit(fwd_b, xb, reps=reps, warmup=1)
         emit(f"e2e_{model}_b{bn}_perlayer", t_perlayer,
              f"{model} {h}x{w} b{bn} impl={impl} per-layer planned (fused, "
              f"bn-folded)")
         emit(f"e2e_{model}_b{bn}_executor", t_exec,
-             f"{model} {h}x{w} b{bn} impl={impl} network executor "
-             f"elided={netplan.elided_boundaries} "
-             f"vs_perlayer={t_perlayer / t_exec if t_exec > 0 else 0:.2f}x")
+             f"{model} {h}x{w} b{bn} impl={impl} compiled executor "
+             f"elided={netplan_b.elided_boundaries} "
+             f"vs_perlayer={t_perlayer / t_exec if t_exec > 0 else 0:.2f}x",
+             provenance={"elided_boundaries": netplan_b.elided_boundaries,
+                         "batch": bn})
+    compiled.save_plans()
 
-    # -- 3. warm-cache proof: a fresh planner must re-tune nothing -----------
-    planner2 = Planner(mode=mode, impl=impl, cache_path=cache)
-    plan_layers(layers, h, w, planner2, in_channels=in_ch, batch=batch)
-    plan_network(layers, h, w, planner2, in_channels=in_ch, batch=batch)
-    retunes = planner2.stats["tunes"]
+    # -- 3. warm-cache proof: a fresh compile must re-tune nothing -----------
+    compiled2 = repro.compile(desc, params, options)
+    for bn in (batch_sweep or (batch,)):
+        compiled2.network_plan(bn)
+    report2 = compiled2.plan_report()
+    retunes = report2["tunes"]
     emit(f"e2e_{model}_warm_retunes", 0.0,
-         f"retunes={retunes} hits={planner2.stats['hits']} "
-         f"network_hits={planner2.network_hits}")
+         f"retunes={retunes} hits={report2['hits']} "
+         f"network_hits={report2['network_hits']}",
+         provenance={"retunes": retunes,
+                     "network_hits": report2["network_hits"]})
     assert retunes == 0, (
         f"warm plan cache re-tuned {retunes} layers — persistence is broken"
     )
-    assert planner2.network_hits >= 1, (
+    assert report2["network_hits"] >= 1, (
         "warm network-level cache entry missing — netplan persistence broken"
     )
+
+    if json_path:
+        print(f"# wrote "
+              f"{write_bench_json(json_path, extra={'model': model}, rows=common.ROWS[rows_start:])}")
 
 
 def main() -> None:
@@ -204,9 +211,11 @@ def main() -> None:
     ap.add_argument("--reps", type=int, default=2)
     ap.add_argument("--batch-sweep", default=None,
                     help="comma list of batch sizes, e.g. 1,4,8: emit an "
-                         "e2e_<model>_b<N>_executor row (network executor, "
+                         "e2e_<model>_b<N>_executor row (compiled executor, "
                          "layout persistence) next to the per-layer planned "
                          "total for each N")
+    ap.add_argument("--json", default="BENCH_e2e.json",
+                    help="machine-readable output path (empty to disable)")
     args = ap.parse_args()
     run(
         model=args.model,
@@ -218,6 +227,7 @@ def main() -> None:
         reps=args.reps,
         batch_sweep=(tuple(int(b) for b in args.batch_sweep.split(","))
                      if args.batch_sweep else None),
+        json_path=args.json or None,
     )
 
 

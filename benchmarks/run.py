@@ -50,6 +50,11 @@ def main() -> None:
             failures += 1
             print(f"{name},0.0,ERROR")
             traceback.print_exc()
+    # Every emitted row, machine-readable — the perf trajectory is tracked
+    # from this file, not scraped from stdout.
+    from benchmarks.common import write_bench_json
+
+    print(f"# wrote {write_bench_json('BENCH_e2e.json', extra={'driver': 'benchmarks.run', 'failures': failures})}")
     if failures:
         sys.exit(1)
 

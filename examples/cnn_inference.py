@@ -1,8 +1,9 @@
 """End-to-end CNN inference (the paper's workload): YOLOv3-tiny + VGG16
-with per-layer algorithm selection, timed per algorithm path, then the same
-networks fully planned (core/planner.py: co-design decided once, cached),
-and finally the fused deployment path (``cnn_infer``: batchnorm folded into
-the conv weights, bias + activation fused into the kernels' output stage).
+through the `repro.api` facade — ``repro.compile`` plans every conv once
+(co-design decided per layer, cached), prepares params offline (batchnorm
+fold, block padding, Winograd weight pre-transform) and jits the
+whole-network forward — timed against the unplanned pure-JAX and XLA-oracle
+per-layer paths.
 
   PYTHONPATH=src python examples/cnn_inference.py [--input 416]
 """
@@ -10,54 +11,38 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 
+import repro
 from repro.configs import vgg16, yolov3
-from repro.core.planner import Planner
 from repro.data import image_batch
-from repro.models.cnn import (
-    cnn_forward,
-    cnn_infer,
-    fold_batchnorm,
-    init_cnn,
-    plan_layers,
-)
+from repro.models.cnn import cnn_forward, init_cnn
 
 
-def bench(name, layers, hw, planner):
-    params = init_cnn(jax.random.PRNGKey(0), layers)
-    x = image_batch(0, 1, *hw)
-    tunes_before = planner.stats["tunes"]
-    plans = plan_layers(layers, *hw, planner)
-    net_tunes = planner.stats["tunes"] - tunes_before
-    plans_t = tuple(plans)
-    folded = fold_batchnorm(params, layers)   # once, offline
+def bench(model, options):
+    params = init_cnn(jax.random.PRNGKey(0), model.layers)
+    x = image_batch(0, 1, *model.input_hw)
+    compiled = repro.compile(model, params, options)
+    report = compiled.plan_report()
     runs = (
-        ("jax", params,
-         lambda p, xx: cnn_forward(p, layers, xx, impl="jax")),
-        ("xla", params,
-         lambda p, xx: cnn_forward(p, layers, xx, impl="xla")),
-        ("jax+plan", params,
-         lambda p, xx: cnn_forward(p, layers, xx, impl="jax", plans=plans_t)),
-        ("jax+fused", folded,
-         lambda p, xx: cnn_infer(p, layers, xx, impl="jax", plans=plans_t,
-                                 fold_bn=False)),
+        ("jax", lambda xx: cnn_forward(params, model.layers, xx, impl="jax")),
+        ("xla", lambda xx: cnn_forward(params, model.layers, xx, impl="xla")),
+        ("compiled", compiled.run),   # planned + folded + fused + prepared
     )
-    for tag, ps, fwd in runs:
-        fn = jax.jit(fwd)
-        out = fn(ps, x)
+    for tag, fwd in runs:
+        fn = jax.jit(fwd) if tag != "compiled" else fwd
+        out = fn(x)
         jax.block_until_ready(out)
         t0 = time.perf_counter()
-        out = fn(ps, x)
+        out = fn(x)
         jax.block_until_ready(out)
         dt = time.perf_counter() - t0
-        print(f"  {name:12s} impl={tag:10s} out={tuple(out.shape)} {dt*1e3:.1f} ms")
+        print(f"  {model.name:12s} impl={tag:10s} out={tuple(out.shape)} "
+              f"{dt*1e3:.1f} ms")
     algos = {}
-    for plan in plans:
-        if plan is not None:
-            algos[plan.algorithm.value] = algos.get(plan.algorithm.value, 0) + 1
-    print(f"  {name:12s} planned conv layers by algorithm: {algos} "
-          f"(tunes={net_tunes})")
+    for row in report["layers"]:
+        algos[row["algorithm"]] = algos.get(row["algorithm"], 0) + 1
+    print(f"  {model.name:12s} planned conv layers by algorithm: {algos} "
+          f"(tunes={report['tunes']}, elided={report['elided_boundaries']})")
 
 
 def main():
@@ -65,11 +50,13 @@ def main():
     ap.add_argument("--input", type=int, default=224)
     args = ap.parse_args()
     hw = (args.input, args.input)
-    planner = Planner()   # persistent cache: second invocation re-tunes nothing
+    # One persistent cache serves both models: the second invocation of this
+    # example re-tunes nothing.
+    options = repro.ExecutionOptions(impl="jax")
     print("== YOLOv3-tiny ==")
-    bench("yolov3-tiny", yolov3.TINY_LAYERS, hw, planner)
+    bench(yolov3.TINY_MODEL.with_input_hw(hw), options)
     print("== VGG16 ==")
-    bench("vgg16", vgg16.LAYERS, hw, planner)
+    bench(vgg16.MODEL.with_input_hw(hw), options)
 
 
 if __name__ == "__main__":

@@ -7,10 +7,14 @@
 2. Run the same convs through the Pallas TPU kernels (interpret mode here).
 3. Autotune GEMM blocking for a YOLOv3 layer under a VMEM budget — the
    paper's co-design loop (§V/§VI) on TPU terms.
+4. The whole lifecycle through the public facade: ``repro.compile`` plans,
+   prepares, and jits a network once; ``.run`` / ``.serve`` /
+   ``.plan_report`` / ``.save`` are the four verbs deployment needs.
 """
 import jax
 import jax.numpy as jnp
 
+import repro
 from repro.core import ConvSpec, conv2d, conv2d_reference, select_algorithm
 from repro.core.codesign import MB
 from repro.core.vmem_model import GemmShape, autotune_gemm
@@ -38,3 +42,23 @@ for budget in (1 * MB, 4 * MB, 16 * MB):
     cfg, est = autotune_gemm(shape, vmem_budget=budget)
     print(f"  VMEM {budget // MB:>2}MB -> block ({cfg.bm},{cfg.bn},{cfg.bk}) "
           f"t={est.total_s * 1e6:.0f}us bound={est.bound}")
+
+print("== 4. the facade: compile -> run / serve / plan_report ==")
+from repro.configs import yolov3  # noqa: E402
+
+model = yolov3.TINY_MODEL.with_input_hw((64, 64))     # small for the demo
+params = model.init_params(jax.random.PRNGKey(2))
+compiled = repro.compile(model, params,
+                         repro.ExecutionOptions(impl="jax", cache_path=None))
+y = compiled.run(jax.random.normal(jax.random.PRNGKey(3), (1, 64, 64, 3)))
+report = compiled.plan_report()
+algos = {}
+for row in report["layers"]:
+    algos[row["algorithm"]] = algos.get(row["algorithm"], 0) + 1
+print(f"  {report['model']}: out {tuple(y.shape)}, "
+      f"planned conv layers by algorithm: {algos} "
+      f"(elided boundaries: {report['elided_boundaries']})")
+engine = compiled.serve(buckets=(1, 2))
+uid = engine.submit(jnp.zeros((64, 64, 3)))
+print(f"  served request {uid} -> {engine.run()[uid].shape} "
+      f"(bucket stats: {engine.stats['batches']})")

@@ -1,4 +1,6 @@
-"""Batched serving example: continuous batching over mixed-length requests.
+"""Batched serving example: continuous batching over mixed-length requests,
+via the facade — LM configs compile through the same ``repro.compile`` entry
+point as CNNs; ``.serve()`` is the prefill/decode engine.
 
   PYTHONPATH=src python examples/serve_lm.py
 """
@@ -7,15 +9,16 @@ import time
 import jax
 import numpy as np
 
+import repro
 from repro import configs
 from repro.models import transformer as tf
-from repro.serving import ServingEngine
 
 
 def main():
     cfg = configs.smoke_config("llama3.2-1b", seq_len=64)
     params = tf.init_params(cfg, jax.random.PRNGKey(0))
-    engine = ServingEngine(cfg, params, batch_size=4, capacity=128)
+    compiled = repro.compile(cfg, params)
+    engine = compiled.serve(batch_size=4, capacity=128)
 
     rng = np.random.default_rng(0)
     t0 = time.monotonic()

@@ -3,5 +3,72 @@ multi-pod JAX training/serving substrate.
 
 Reproduces and extends "Accelerating CNN inference on long vector
 architectures via co-design" (Gupta et al., 2022).
+
+The public surface is the compile-and-run facade::
+
+    import repro
+
+    compiled = repro.compile(model, params, repro.ExecutionOptions(...))
+    y = compiled.run(x)
+    engine = compiled.serve()
+
+plus the co-design building blocks it is made of (``ConvSpec``, ``Planner``,
+``NetworkExecutor``, ...).  See docs/api.md for the lifecycle and the
+migration table from the legacy entry points.
 """
-__version__ = "1.0.0"
+__version__ = "1.1.0"
+
+from repro.api import (
+    CNNModel,
+    CompiledModel,
+    ExecutionOptions,
+    Model,
+    compile,
+    load,
+)
+from repro.core import (
+    ConvAlgorithm,
+    ConvPlan,
+    ConvSpec,
+    Epilogue,
+    Layout,
+    NetworkExecutor,
+    NetworkPlan,
+    Planner,
+    conv2d,
+    conv2d_reference,
+)
+
+__all__ = [
+    # the facade (the documented entry point)
+    "CNNModel",
+    "CompiledModel",
+    "ExecutionOptions",
+    "Model",
+    "compile",
+    "load",
+    # co-design building blocks
+    "ConvAlgorithm",
+    "ConvPlan",
+    "ConvSpec",
+    "Epilogue",
+    "Layout",
+    "NetworkExecutor",
+    "NetworkPlan",
+    "Planner",
+    "conv2d",
+    "conv2d_reference",
+    # lazy (heavy serving stack, loaded on first attribute access)
+    "CNNServingEngine",
+    "ServingEngine",
+]
+
+
+def __getattr__(name):
+    # The serving engines pull in the LM stack; load them lazily so
+    # ``import repro`` stays light and warning-free.
+    if name in ("CNNServingEngine", "ServingEngine"):
+        import repro.serving as _serving
+
+        return getattr(_serving, name)
+    raise AttributeError(f"module 'repro' has no attribute {name!r}")

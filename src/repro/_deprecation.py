@@ -1,0 +1,33 @@
+"""One-shot deprecation warnings for the legacy entry points.
+
+The `repro.api` facade (PR 5) supersedes the per-subsystem entry points
+(``cnn_infer`` / ``plan_layers`` / the configs' ``plan_network`` helpers /
+direct ``CNNServingEngine`` construction).  Each shim keeps working for one
+release and fires **exactly one** ``DeprecationWarning`` per process per
+entry point — loud enough to drive migration, quiet enough not to spam a
+serving loop that calls the shim per request.
+"""
+from __future__ import annotations
+
+import warnings
+from typing import Set
+
+_warned: Set[str] = set()
+
+
+def warn_once(name: str, instead: str, stacklevel: int = 3) -> None:
+    """Emit one DeprecationWarning per process for ``name``."""
+    if name in _warned:
+        return
+    _warned.add(name)
+    warnings.warn(
+        f"{name} is deprecated and will be removed in a future release; "
+        f"use {instead} instead.",
+        DeprecationWarning,
+        stacklevel=stacklevel,
+    )
+
+
+def reset() -> None:
+    """Forget which warnings fired (test helper)."""
+    _warned.clear()

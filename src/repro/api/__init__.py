@@ -1,0 +1,38 @@
+"""repro.api — the unified compile-and-run facade.
+
+    import repro
+
+    compiled = repro.compile(model, params, repro.ExecutionOptions(...))
+    y = compiled.run(x)                  # jitted, planned, sharded
+    engine = compiled.serve()            # bucket-ladder serving
+    report = compiled.plan_report()      # the resolved co-design decisions
+    artifact = compiled.save()           # options + identity; cache v4 holds
+    repro.load(artifact, model, params)  # ... the tuning: zero re-tunes
+
+See docs/api.md for the lifecycle and the migration table from the legacy
+entry points (``cnn_infer`` / ``plan_layers`` / the configs' plan helpers /
+direct ``CNNServingEngine`` construction — all now deprecation shims).
+"""
+from repro.api.compiled import (
+    SAVE_FORMAT,
+    CompiledCNN,
+    CompiledLM,
+    CompiledModel,
+    compile,
+    load,
+)
+from repro.api.model import CNNModel, Model, as_model
+from repro.api.options import ExecutionOptions
+
+__all__ = [
+    "SAVE_FORMAT",
+    "CNNModel",
+    "CompiledCNN",
+    "CompiledLM",
+    "CompiledModel",
+    "ExecutionOptions",
+    "Model",
+    "as_model",
+    "compile",
+    "load",
+]

@@ -1,0 +1,396 @@
+"""``compile(model, params, options) -> CompiledModel`` — the facade core.
+
+One call runs the whole co-design lifecycle the paper argues must be a
+single decision: plan (per-layer ConvPlans + whole-network layout elision,
+warm v4 cache) → prepare (bn fold, block padding, offline Winograd weight
+pre-transform — all outside the jit) → jit (sharded ``run_network`` per
+batch shape).  The result exposes the four verbs serving needs:
+
+  .run(x)          jitted inference at x's batch size (compiled shapes are
+                   cached per batch; ``options.batch`` is compiled eagerly)
+  .serve(...)      a CNNServingEngine (bucket ladder) / ServingEngine
+                   (continuous batching) built *from* this compilation —
+                   no re-plumbing of planner, cache, buckets, or mesh
+  .plan_report()   the resolved co-design decisions, machine-readable
+  .save()/load()   persist the option surface + model identity; the plan
+                   cache (v4) carries the tuning, so load() re-tunes nothing
+
+LM configs (the transformer/recurrent zoo) compile through the same entry
+point: ``run`` is the jitted full-sequence forward, ``serve`` the
+continuous-batching engine's prefill/decode path.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+from repro.api.model import CNNModel, as_model, is_lm_config
+from repro.api.options import ExecutionOptions
+
+SAVE_FORMAT = "repro.api/1"
+
+
+def _jnp_dtype(name: str):
+    import jax.numpy as jnp
+
+    return jnp.dtype(name)
+
+
+class CompiledModel:
+    """Common surface of a compiled model; ``compile`` returns a subclass."""
+
+    model: Any
+    params: Any
+    options: ExecutionOptions
+
+    def run(self, x):
+        raise NotImplementedError
+
+    def __call__(self, x):
+        return self.run(x)
+
+    def serve(self, **kw):
+        raise NotImplementedError
+
+    def plan_report(self) -> Dict[str, Any]:
+        raise NotImplementedError
+
+    def save(self, path: Optional[str] = None) -> str:
+        raise NotImplementedError
+
+    def _save_payload(self, kind: str, model_desc: Dict[str, Any],
+                      path: Optional[str]) -> str:
+        payload = {
+            "format": SAVE_FORMAT,
+            "kind": kind,
+            "model": model_desc,
+            "options": self.options.to_json(),
+        }
+        if path is None:
+            base = os.path.dirname(self.options.cache_path or "") or "."
+            path = os.path.join(
+                base, f"{model_desc.get('name', 'model')}.compiled.json"
+            )
+        d = os.path.dirname(path)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        with open(path, "w") as f:
+            json.dump(payload, f, indent=1, sort_keys=True)
+        return path
+
+
+class CompiledCNN(CompiledModel):
+    """A CNN compiled end-to-end: NetworkPlan + NetworkExecutor per batch.
+
+    ``compile`` plans ``options.batch`` eagerly (the cold-start tunes land
+    in the v4 cache immediately); other batch sizes — ``run`` on a new
+    batch, ``serve``'s bucket ladder — plan and jit on first use and are
+    cached, so the compiled-shape set stays bounded and explicit.
+    """
+
+    def __init__(
+        self,
+        model: CNNModel,
+        params: Sequence[Dict],
+        options: ExecutionOptions,
+        planner=None,
+        devices: Optional[Sequence[Any]] = None,
+    ):
+        self.model = model
+        self.params = list(params)
+        self.options = options
+        # Ownership decides persistence: a planner we created is ours to
+        # save; a caller-supplied (possibly shared) planner keeps its own
+        # persistence discipline — compiling must not rewrite its cache
+        # file as a side effect.
+        self._own_planner = planner is None
+        self.planner = planner if planner is not None else options.make_planner()
+        self._devices = devices
+        self._netplans: Dict[int, Any] = {}
+        self._executors: Dict[int, Any] = {}
+        # Eager by design: compile() means the default batch is planned and
+        # its executor prepared (params folded/padded/pre-transformed) —
+        # cold-start tunes land in the v4 cache now, not at first request.
+        self.executor(options.batch)
+        self.save_plans()
+
+    # -- planning -------------------------------------------------------------
+
+    def network_plan(self, batch: Optional[int] = None):
+        """The (cached) whole-network plan for one batch size."""
+        from repro.core.netplan import plan_network
+
+        b = int(batch) if batch is not None else self.options.batch
+        if b not in self._netplans:
+            self._netplans[b] = plan_network(
+                self.model.layers, *self.model.input_hw, self.planner,
+                in_channels=self.model.in_channels, batch=b,
+                dtype=self.options.dtype,
+            )
+        return self._netplans[b]
+
+    def executor(self, batch: Optional[int] = None):
+        """The (cached) jitted NetworkExecutor for one batch size."""
+        from repro.core.netplan import NetworkExecutor
+
+        b = int(batch) if batch is not None else self.options.batch
+        if b not in self._executors:
+            netplan = self.network_plan(b)
+            devices = self._devices
+            if devices is None and not self.options.shard_batch:
+                import jax
+
+                devices = jax.devices()[:1]
+            self._executors[b] = NetworkExecutor(
+                netplan, self.params, interpret=self.options.interpret,
+                devices=devices, pretransform=self.options.pretransform,
+            )
+            # Persistence stays with the *burst*, not the bucket: __init__,
+            # run(), and the serving engine call save_plans() once after
+            # their planning is done — a cold bucket ladder costs one cache
+            # merge+write, not one per executor.
+        return self._executors[b]
+
+    def save_plans(self, force: bool = False) -> None:
+        """Persist the planner's v4 cache when there is something to write.
+
+        No-op unless this compilation owns the planner (caller-supplied
+        planners manage their own persistence) and new tunes/network
+        entries landed since the last save — so planning bursts cost one
+        merge+write, not one per bucket.
+        """
+        if not self._own_planner or not self.planner.cache_path:
+            return
+        if force or getattr(self.planner, "_dirty", True):
+            self.planner.save()
+
+    # -- the four verbs -------------------------------------------------------
+
+    def run(self, x):
+        """Jitted whole-network inference on an (B, H, W, C) batch."""
+        import jax.numpy as jnp
+
+        x = jnp.asarray(x, _jnp_dtype(self.options.dtype))
+        if x.ndim != 4:
+            raise ValueError(
+                f"run() expects (B, H, W, C), got shape {tuple(x.shape)}"
+            )
+        executor = self.executor(int(x.shape[0]))
+        self.save_plans()       # no-op unless this batch tuned new plans
+        return executor(x)
+
+    def serve(self, buckets: Optional[Tuple[int, ...]] = None):
+        """A CNNServingEngine over this compilation's bucket ladder.
+
+        Everything else the engine needs (impl, interpret, dtype, mesh,
+        planner, cache) comes from this compilation — that is the point.
+        """
+        from repro.serving.cnn_engine import CNNServingEngine
+
+        return CNNServingEngine.from_compiled(self, buckets=buckets)
+
+    def plan_report(self, batch: Optional[int] = None) -> Dict[str, Any]:
+        """The resolved co-design decisions, machine-readable.
+
+        One row per conv layer: algorithm, impl, kernel blocks, predicted
+        (or measured) seconds, plan provenance, and whether the layer's
+        output boundary was elided (padded channels flow to the next
+        pallas_call).  Plus planner/network cache counters — a warm process
+        reports ``tunes == 0``.
+        """
+        netplan = self.network_plan(batch)
+        rows = []
+        for s in netplan.steps:
+            if s.plan is None:
+                continue
+            rows.append({
+                "index": s.index,
+                "algorithm": s.plan.algorithm.value,
+                "impl": s.plan.impl,
+                "kernel": getattr(s.layer, "kernel", None),
+                "stride": getattr(s.layer, "stride", None),
+                "in_hw": list(s.in_hw),
+                "kernel_blocks": list(s.plan.kernel_blocks),
+                "predicted_s": s.plan.predicted_s,
+                "source": s.plan.source,
+                "winograd_fused": s.plan.winograd_fused,
+                "elided": not s.out_layout.trivial,
+            })
+        return {
+            "model": self.model.name,
+            "kind": "cnn",
+            "batch": netplan.batch,
+            "impl": netplan.impl,
+            "dtype": netplan.dtype_name,
+            "elided_boundaries": netplan.elided_boundaries,
+            "predicted_total_s": sum(r["predicted_s"] for r in rows),
+            "layers": rows,
+            "tunes": self.planner.stats["tunes"],
+            "hits": self.planner.stats["hits"],
+            "network_hits": self.planner.network_hits,
+        }
+
+    def save(self, path: Optional[str] = None) -> str:
+        """Persist this compilation: plan cache (the tuning) + a small JSON
+        artifact (model identity + the full option surface).  ``load``
+        reconstructs with zero re-tunes."""
+        self.save_plans()
+        return self._save_payload(
+            "cnn",
+            {
+                "name": self.model.name,
+                "digest": self.model.digest,
+                "input_hw": list(self.model.input_hw),
+                "in_channels": self.model.in_channels,
+            },
+            path,
+        )
+
+
+class CompiledLM(CompiledModel):
+    """An LM config compiled through the same facade: jitted full-sequence
+    forward for ``run``, the continuous-batching engine for ``serve``."""
+
+    def __init__(self, cfg, params, options: ExecutionOptions):
+        import jax
+
+        from repro.models import transformer as tf
+
+        self.model = cfg
+        self.params = params
+        self.options = options
+        self._tf = tf
+        self._fwd = jax.jit(lambda p, batch: tf.forward(cfg, p, batch)[0])
+
+    def run(self, tokens):
+        """Full-sequence logits.  ``tokens``: (B, S) int32, or a model-input
+        dict for frontend architectures (audio frames, vision patches)."""
+        import jax.numpy as jnp
+
+        batch = tokens if isinstance(tokens, dict) else {
+            "tokens": jnp.asarray(tokens, jnp.int32)
+        }
+        return self._fwd(self.params, batch)
+
+    def serve(self, batch_size: Optional[int] = None, capacity: int = 256,
+              **engine_opts):
+        """A continuous-batching ServingEngine (prefill/decode) for this
+        model.  ``batch_size`` defaults to the largest option bucket."""
+        from repro.serving.engine import ServingEngine
+
+        return ServingEngine.from_compiled(
+            self, batch_size=batch_size, capacity=capacity, **engine_opts,
+        )
+
+    def plan_report(self) -> Dict[str, Any]:
+        return {
+            "model": self.model.name,
+            "kind": "lm",
+            "num_layers": self.model.num_layers,
+            "layer_pattern": list(self.model.pattern_layers),
+            "supports_decode": self.model.supports_decode,
+            "dtype": self.options.dtype,
+        }
+
+    def save(self, path: Optional[str] = None) -> str:
+        return self._save_payload("lm", {"name": self.model.name}, path)
+
+
+def compile(  # noqa: A001 - deliberate: repro.compile is the public verb
+    model: Any,
+    params: Any,
+    options: Optional[ExecutionOptions] = None,
+    *,
+    input_hw: Optional[Tuple[int, int]] = None,
+    in_channels: int = 3,
+    name: Optional[str] = None,
+    planner=None,
+    devices: Optional[Sequence[Any]] = None,
+) -> CompiledModel:
+    """The single public entry point: plan → prepare → jit, once.
+
+    ``model``: a ``CNNModel`` (configs export them: ``vgg16.MODEL``,
+    ``yolov3.TINY_MODEL``), an LM ``ModelConfig``, or a bare CNN layer
+    table plus ``input_hw``.  ``options`` defaults to ``ExecutionOptions()``
+    (pure-JAX impl, cost-model planning, persistent cache).  ``planner``
+    and ``devices`` are runtime resources (not serialized): pass a shared
+    Planner to pool caches across compilations, or an explicit device list
+    to pin the batch mesh.
+    """
+    m = as_model(model, input_hw=input_hw, in_channels=in_channels, name=name)
+    opts = options if options is not None else ExecutionOptions()
+    if is_lm_config(m):
+        return CompiledLM(m, params, opts)
+    return CompiledCNN(m, params, opts, planner=planner, devices=devices)
+
+
+def load(
+    path: str,
+    model: Any,
+    params: Any,
+    *,
+    input_hw: Optional[Tuple[int, int]] = None,
+    in_channels: int = 3,
+    planner=None,
+    devices: Optional[Sequence[Any]] = None,
+) -> CompiledModel:
+    """Rebuild a CompiledModel from a ``save()`` artifact.
+
+    The artifact stores the option surface and the model identity; the v4
+    plan cache (``options.cache_path``) holds the tuning, so a warm load
+    re-tunes nothing.  Raises ``ValueError`` when ``model`` does not match
+    the saved identity (layer-table digest for CNNs, config name for LMs).
+    """
+    with open(path) as f:
+        data = json.load(f)
+    if data.get("format") != SAVE_FORMAT:
+        raise ValueError(
+            f"{path}: not a {SAVE_FORMAT} artifact "
+            f"(format={data.get('format')!r})"
+        )
+    opts = ExecutionOptions.from_json(data.get("options", {}))
+    saved = data.get("model", {})
+    if data.get("kind") == "cnn" and input_hw is None and saved.get(
+        "input_hw"
+    ):
+        # The artifact records the geometry; a bare layer table inherits it
+        # rather than demanding it twice.  (A CNNModel descriptor keeps its
+        # own — mismatches are rejected below, with guidance.)
+        input_hw = tuple(saved["input_hw"])
+        in_channels = int(saved.get("in_channels", in_channels))
+    m = as_model(model, input_hw=input_hw, in_channels=in_channels)
+    if data.get("kind") == "cnn":
+        if not isinstance(m, CNNModel):
+            raise ValueError(f"{path} was saved from a CNN; got {type(m)}")
+        if saved.get("digest") and saved["digest"] != m.digest:
+            raise ValueError(
+                f"{path}: saved layer-table digest {saved['digest']} does "
+                f"not match the provided model ({m.digest}) — same artifact, "
+                f"different network"
+            )
+        # Geometry is identity too: plans are (H, W, C)-keyed, so a silent
+        # mismatch would cold-retune everything instead of loading warm.
+        if saved.get("input_hw") and tuple(saved["input_hw"]) != tuple(
+            m.input_hw
+        ):
+            raise ValueError(
+                f"{path}: saved at input_hw {tuple(saved['input_hw'])} but "
+                f"the provided model targets {tuple(m.input_hw)} — pass "
+                f"model.with_input_hw({tuple(saved['input_hw'])}) (or omit "
+                f"input_hw to inherit the artifact's)"
+            )
+        if saved.get("in_channels") and int(saved["in_channels"]) != int(
+            m.in_channels
+        ):
+            raise ValueError(
+                f"{path}: saved with in_channels={saved['in_channels']}, "
+                f"provided model has {m.in_channels}"
+            )
+    elif data.get("kind") == "lm":
+        if getattr(m, "name", None) != saved.get("name"):
+            raise ValueError(
+                f"{path}: saved LM config {saved.get('name')!r} does not "
+                f"match the provided {getattr(m, 'name', None)!r}"
+            )
+    return compile(m, params, opts, planner=planner, devices=devices)

@@ -1,0 +1,109 @@
+"""The facade's model descriptors.
+
+``compile`` accepts anything satisfying the :class:`Model` protocol — in
+practice one of the two families this repo grows:
+
+  CNNModel      a Darknet-style layer table (configs/vgg16.py,
+                configs/yolov3.py) plus its input geometry.  The configs
+                export ready-made instances (``vgg16.MODEL``,
+                ``yolov3.TINY_MODEL``, ``yolov3.MODEL_20``).
+  ModelConfig   the transformer/recurrent zoo (configs/base.py) — every
+                LM/audio/VLM architecture already satisfies the protocol
+                as-is; no wrapper needed.
+
+``as_model`` is the coercion used by ``compile``: it also accepts a bare
+layer-table sequence (with an explicit ``input_hw``) so quick experiments
+don't need to build a descriptor first.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Any, Optional, Protocol, Sequence, Tuple, runtime_checkable
+
+
+@runtime_checkable
+class Model(Protocol):
+    """What ``compile`` requires of a model descriptor: a stable ``name``.
+
+    The two concrete families add their own compile-relevant fields —
+    ``CNNModel`` carries (layers, input_hw, in_channels); LM configs are
+    ``repro.configs.base.ModelConfig`` (recognized by ``supports_decode``).
+    """
+
+    name: str
+
+
+@dataclasses.dataclass(frozen=True)
+class CNNModel:
+    """A CNN as the facade sees it: layer table + input geometry."""
+
+    layers: Tuple[Any, ...]
+    input_hw: Tuple[int, int]
+    in_channels: int = 3
+    name: str = "cnn"
+
+    def __post_init__(self) -> None:
+        object.__setattr__(self, "layers", tuple(self.layers))
+        object.__setattr__(self, "input_hw", tuple(self.input_hw))
+        if len(self.input_hw) != 2:
+            raise ValueError(f"input_hw must be (H, W), got {self.input_hw!r}")
+
+    def with_input_hw(self, hw: Tuple[int, int]) -> "CNNModel":
+        return dataclasses.replace(self, input_hw=tuple(hw))
+
+    def init_params(self, rng, dtype: Any = None):
+        """Random params for this layer table (thin init_cnn veneer)."""
+        import jax.numpy as jnp
+
+        from repro.models.cnn import init_cnn
+
+        return init_cnn(
+            rng, self.layers, in_channels=self.in_channels,
+            dtype=dtype if dtype is not None else jnp.float32,
+        )
+
+    @property
+    def digest(self) -> str:
+        """Layer-table digest — the same identity the v4 network cache keys
+        on; ``save()``/``load()`` use it to refuse a mismatched model."""
+        return hashlib.sha1(repr(tuple(self.layers)).encode()).hexdigest()[:16]
+
+
+def is_lm_config(model: Any) -> bool:
+    """True for the transformer/recurrent zoo's ModelConfig (duck-typed so
+    the facade never imports the LM stack for CNN work)."""
+    return hasattr(model, "supports_decode") and hasattr(model, "layer_pattern")
+
+
+def as_model(
+    model: Any,
+    input_hw: Optional[Tuple[int, int]] = None,
+    in_channels: int = 3,
+    name: Optional[str] = None,
+) -> Any:
+    """Coerce ``compile``'s ``model`` argument to a descriptor.
+
+    Accepts a CNNModel / ModelConfig as-is, or a bare CNN layer-table
+    sequence together with ``input_hw``.
+    """
+    if isinstance(model, CNNModel):
+        return model
+    if is_lm_config(model):
+        return model
+    if isinstance(model, Sequence) and model and all(
+        hasattr(l, "kind") for l in model
+    ):
+        if input_hw is None:
+            raise ValueError(
+                "a bare CNN layer table needs input_hw=(H, W); or pass a "
+                "CNNModel (e.g. configs.vgg16.MODEL)"
+            )
+        return CNNModel(
+            layers=tuple(model), input_hw=tuple(input_hw),
+            in_channels=in_channels, name=name or "cnn",
+        )
+    raise TypeError(
+        f"compile() expects a CNNModel, an LM ModelConfig, or a CNN layer "
+        f"table; got {type(model).__name__}"
+    )

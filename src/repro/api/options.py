@@ -1,0 +1,120 @@
+"""ExecutionOptions: the one co-design surface of the `repro.api` facade.
+
+The paper's argument is that algorithm choice, blocking, and hardware
+parameters must be decided *together*; before this facade those decisions
+were scattered across ~10 uncoordinated kwargs (``conv2d``'s routing
+arguments, the planner's policy fields, the executor's interpret/devices,
+the serving engine's bucket ladder).  ``ExecutionOptions`` is the single
+frozen record of every knob that changes how a compiled model executes —
+hashable, JSON round-trippable (``save()``/``load()`` ride it), and the
+only thing ``repro.compile`` needs besides the model and its params.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+from repro.core.planner import DEFAULT_CACHE_PATH, _dtype_name
+
+_IMPLS = ("jax", "pallas")
+_MODES = ("cost", "measure")
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionOptions:
+    """Every execution decision for one compiled model, in one place.
+
+    Planning policy (forwarded to the ``Planner`` / v4 plan cache):
+      impl            'jax' (pure jnp) or 'pallas' (TPU kernels).
+      mode            'cost' (analytic VMEM model) or 'measure' (time each
+                      eligible algorithm on the live backend).
+      cache_path      persistent v4 plan-cache JSON (None = no persistence).
+      vmem_budget     VMEM bytes for block autotuning (None = chip default).
+      fuse_epilogue   bias + activation fused into the kernels' output stage.
+      winograd_fused  single-pass Winograd megakernel policy: None = auto
+                      (tuner decides), True/False = forced.
+
+    Execution:
+      interpret       run Pallas kernels in interpret mode (None = auto:
+                      interpret off-TPU).
+      pretransform    apply the offline Winograd weight transform during
+                      parameter preparation (paper §VII.A excludes it from
+                      timing); the flag is carried explicitly — never
+                      sniffed from weight shapes.
+      batch           the batch size compiled eagerly by ``compile``.
+      buckets         the serving bucket ladder (``CompiledModel.serve``).
+      shard_batch     shard the batch over all visible devices when the
+                      batch divides the device count (shard_map mesh).
+      dtype           activation dtype name ('float32', 'bfloat16', ...).
+    """
+
+    impl: str = "jax"
+    mode: str = "cost"
+    interpret: Optional[bool] = None
+    cache_path: Optional[str] = DEFAULT_CACHE_PATH
+    vmem_budget: Optional[int] = None
+    fuse_epilogue: bool = True
+    winograd_fused: Optional[bool] = None
+    pretransform: bool = True
+    batch: int = 1
+    buckets: Tuple[int, ...] = (1, 4, 8)
+    shard_batch: bool = True
+    dtype: str = "float32"
+
+    def __post_init__(self) -> None:
+        if self.impl not in _IMPLS:
+            raise ValueError(f"impl must be one of {_IMPLS}, got {self.impl!r}")
+        if self.mode not in _MODES:
+            raise ValueError(f"mode must be one of {_MODES}, got {self.mode!r}")
+        if self.batch < 1:
+            raise ValueError(f"batch must be >= 1, got {self.batch}")
+        if not self.buckets or any(int(b) <= 0 for b in self.buckets):
+            raise ValueError(
+                f"buckets must be a non-empty tuple of positive batch "
+                f"sizes, got {self.buckets!r}"
+            )
+        # Normalize: buckets sorted+deduped, dtype to its canonical name —
+        # options that mean the same thing compare (and hash) equal.
+        object.__setattr__(
+            self, "buckets", tuple(sorted({int(b) for b in self.buckets}))
+        )
+        object.__setattr__(self, "dtype", _dtype_name(self.dtype))
+
+    def replace(self, **changes: Any) -> "ExecutionOptions":
+        return dataclasses.replace(self, **changes)
+
+    # -- persistence (CompiledModel.save()/load() ride this) -----------------
+
+    def to_json(self) -> Dict[str, Any]:
+        d = dataclasses.asdict(self)
+        d["buckets"] = list(self.buckets)
+        return d
+
+    @classmethod
+    def from_json(cls, d: Dict[str, Any]) -> "ExecutionOptions":
+        known = {f.name for f in dataclasses.fields(cls)}
+        kwargs = {k: v for k, v in d.items() if k in known}
+        if "buckets" in kwargs:
+            kwargs["buckets"] = tuple(kwargs["buckets"])
+        return cls(**kwargs)
+
+    # -- the planner this option set implies ----------------------------------
+
+    def make_planner(self):
+        """A Planner carrying exactly this option set's policy fields.
+
+        ``autosave=False``: the facade persists once per planning burst
+        (one merge+write for a whole network / bucket ladder), not once per
+        layer miss.
+        """
+        from repro.core.planner import Planner
+
+        return Planner(
+            mode=self.mode,
+            impl=self.impl,
+            cache_path=self.cache_path,
+            vmem_budget=self.vmem_budget,
+            autosave=False,
+            fuse_epilogue=self.fuse_epilogue,
+            winograd_fused=self.winograd_fused,
+        )

@@ -24,27 +24,35 @@ LAYERS = (
 INPUT_HW = (224, 224)
 NAME = "vgg16"
 
+# The facade descriptor: ``repro.compile(vgg16.MODEL, params, options)``.
+from repro.api.model import CNNModel as _CNNModel  # noqa: E402
+
+MODEL = _CNNModel(LAYERS, INPUT_HW, in_channels=3, name=NAME)
+
 
 def plan_network(planner, input_hw=INPUT_HW, batch=1, in_channels=3,
                  dtype="float32"):
-    """Per-layer ConvPlans for VGG16 at ``input_hw`` (see core/planner.py).
+    """Deprecated shim: compile the network through the facade instead
+    (``repro.compile(vgg16.MODEL, params, options)``); per-layer plans are
+    in ``.network_plan().steps``.  Delegates unchanged for one release."""
+    from repro._deprecation import warn_once
+    from repro.models.cnn import _plan_layers
 
-    Returns a plans list aligned with LAYERS, ready for
-    ``cnn_forward(plans=...)`` — the whole network runs fully planned.
-    """
-    from repro.models.cnn import plan_layers
-
-    return plan_layers(LAYERS, *input_hw, planner, in_channels=in_channels,
-                       batch=batch, dtype=dtype)
+    warn_once("configs.vgg16.plan_network",
+              "repro.compile(vgg16.MODEL, params, options)")
+    return _plan_layers(LAYERS, *input_hw, planner, in_channels=in_channels,
+                        batch=batch, dtype=dtype)
 
 
 def network_plan(planner, input_hw=INPUT_HW, batch=1, in_channels=3,
                  dtype="float32"):
-    """Whole-network NetworkPlan for VGG16 (see core/netplan.py): per-layer
-    ConvPlans plus the inter-layer layout-persistence decisions, warm-cached
-    as a v4 network entry.  Feed to ``NetworkExecutor`` for the planned
-    end-to-end inference path."""
-    from repro.core.netplan import plan_network
+    """Deprecated shim: ``repro.compile(vgg16.MODEL, params, options)``
+    resolves the same NetworkPlan (``.network_plan()``).  Delegates
+    unchanged for one release."""
+    from repro._deprecation import warn_once
+    from repro.core.netplan import plan_network as _plan_network
 
-    return plan_network(LAYERS, *input_hw, planner, in_channels=in_channels,
-                        batch=batch, dtype=dtype)
+    warn_once("configs.vgg16.network_plan",
+              "repro.compile(vgg16.MODEL, params, options).network_plan()")
+    return _plan_network(LAYERS, *input_hw, planner, in_channels=in_channels,
+                         batch=batch, dtype=dtype)

@@ -67,28 +67,42 @@ INPUT_HW = (608, 608)
 TINY_INPUT_HW = (416, 416)
 NAME = "yolov3"
 
+# Facade descriptors: ``repro.compile(yolov3.TINY_MODEL, params, options)``.
+from repro.api.model import CNNModel as _CNNModel  # noqa: E402
+
+MODEL_20 = _CNNModel(LAYERS_20, INPUT_HW, in_channels=3, name="yolov3-20")
+TINY_MODEL = _CNNModel(TINY_LAYERS, TINY_INPUT_HW, in_channels=3,
+                       name="yolov3-tiny")
+
 
 def plan_network(planner, layers=LAYERS_20, input_hw=INPUT_HW, batch=1,
                  in_channels=3, dtype="float32"):
-    """Per-layer ConvPlans for a YOLOv3 layer table (default: the paper's
-    20-layer hw-sweep slice at 608x608).  Pass ``layers=TINY_LAYERS,
-    input_hw=TINY_INPUT_HW`` for the full YOLOv3-tiny network."""
-    from repro.models.cnn import plan_layers
+    """Deprecated shim: compile through the facade instead
+    (``repro.compile(yolov3.MODEL_20 | yolov3.TINY_MODEL, params,
+    options)``); per-layer plans are in ``.network_plan().steps``.
+    Delegates unchanged for one release."""
+    from repro._deprecation import warn_once
+    from repro.models.cnn import _plan_layers
 
-    return plan_layers(layers, *input_hw, planner, in_channels=in_channels,
-                       batch=batch, dtype=dtype)
+    warn_once("configs.yolov3.plan_network",
+              "repro.compile(yolov3.MODEL_20 / yolov3.TINY_MODEL, params, "
+              "options)")
+    return _plan_layers(layers, *input_hw, planner, in_channels=in_channels,
+                        batch=batch, dtype=dtype)
 
 
 def network_plan(planner, layers=LAYERS_20, input_hw=INPUT_HW, batch=1,
                  in_channels=3, dtype="float32"):
-    """Whole-network NetworkPlan for a YOLOv3 layer table (core/netplan.py):
-    per-layer ConvPlans plus inter-layer layout persistence, warm-cached as
-    a v4 network entry.  Pass ``layers=TINY_LAYERS,
-    input_hw=TINY_INPUT_HW`` for full YOLOv3-tiny."""
-    from repro.core.netplan import plan_network
+    """Deprecated shim: ``repro.compile(...)`` resolves the same NetworkPlan
+    (``.network_plan()``).  Delegates unchanged for one release."""
+    from repro._deprecation import warn_once
+    from repro.core.netplan import plan_network as _plan_network
 
-    return plan_network(layers, *input_hw, planner, in_channels=in_channels,
-                        batch=batch, dtype=dtype)
+    warn_once("configs.yolov3.network_plan",
+              "repro.compile(yolov3.MODEL_20 / yolov3.TINY_MODEL, params, "
+              "options).network_plan()")
+    return _plan_network(layers, *input_hw, planner, in_channels=in_channels,
+                         batch=batch, dtype=dtype)
 
 # Paper Table IV: the 14 discrete YOLOv3 conv-layer GEMMs (M, N, K) with the
 # paper's measured AI and % of A64FX single-core peak.

@@ -39,6 +39,7 @@ def conv2d(
     epilogue: Optional[Epilogue] = None,
     in_layout: Optional["Layout"] = None,
     out_layout: Optional["Layout"] = None,
+    pretransformed: bool = False,
 ) -> jnp.ndarray:
     """Convolve ``x`` (B,H,W,C) with ``w`` (kh,kw,C,O) per ``spec``.
 
@@ -55,6 +56,13 @@ def conv2d(
     carry block-padded channels and the kernel wrappers pad nothing; with a
     non-trivial ``out_layout`` the channel crop is deferred and the padded
     activation flows to the next planned layer (pallas impl only).
+
+    ``pretransformed`` declares that ``w`` already carries the offline
+    Winograd weight transform ((8, 8, C, O) from ``transform_weights`` /
+    ``prepare_net_params(pretransform=True)``).  The flag is explicit by
+    contract — it is never inferred from weight shapes, because the old
+    sniff (``w.shape[0] != spec.kh``) was ambiguous for any kh == 8 kernel,
+    whose raw weights are (8, 8, C, O) too.
     """
     if plan is None and planner is not None:
         plan = planner.plan(
@@ -76,6 +84,7 @@ def conv2d(
         return conv_ops.conv2d_pallas(
             x, w, spec, algo, interpret=interpret, plan=plan,
             epilogue=epilogue, in_layout=in_layout, out_layout=out_layout,
+            pretransformed=pretransformed,
         )
     if (in_layout is not None and in_layout.pad_c) or (
         out_layout is not None and out_layout.pad_c
@@ -87,10 +96,10 @@ def conv2d(
     if algo is ConvAlgorithm.DIRECT:
         return conv2d_direct_1x1(x, w, spec, epilogue=epilogue)
     if algo is ConvAlgorithm.WINOGRAD:
-        # Offline-prepared weights may arrive pre-transformed as (8,8,C,O).
+        # Offline-prepared weights arrive pre-transformed as (8,8,C,O) —
+        # declared by the caller, never sniffed from the shape.
         return conv2d_winograd(
-            x, w, spec, pretransformed=(w.shape[0] != spec.kh),
-            epilogue=epilogue,
+            x, w, spec, pretransformed=pretransformed, epilogue=epilogue,
         )
     return conv2d_im2col(x, w, spec, epilogue=epilogue)
 

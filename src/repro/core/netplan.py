@@ -510,6 +510,28 @@ def _netplan_from_entry(
 # Parameter preparation (offline: folding, padding, weight pre-transform)
 
 
+def pretransform_flags(
+    netplan: NetworkPlan, pretransform: bool = True
+) -> Tuple[bool, ...]:
+    """Per-step "weights carry the offline Winograd transform" flags.
+
+    Exactly the layers ``prepare_net_params(pretransform=True)`` transforms:
+    conv steps whose resolved algorithm is Winograd.  The flag travels
+    *explicitly* from preparation to execution (``run_network`` /
+    ``NetworkExecutor`` / the api facade) — it is never sniffed from weight
+    shapes, because a raw kh == 8 kernel is (8, 8, C, O) exactly like a
+    pre-transformed 3x3 one.
+    """
+    if not pretransform:
+        return (False,) * len(netplan.steps)
+    return tuple(
+        s.layer.kind == "conv"
+        and resolve_algorithm(s.spec, s.plan, *s.in_hw)
+        is ConvAlgorithm.WINOGRAD
+        for s in netplan.steps
+    )
+
+
 def prepare_net_params(
     netplan: NetworkPlan,
     params: Sequence[Dict],
@@ -521,13 +543,17 @@ def prepare_net_params(
     weights/bias to the step's physical channel layouts (so no weight pads
     appear at layer boundaries in the jitted forward), and — with
     ``pretransform`` — applies the offline Winograd weight transform
-    (paper §VII.A excludes it from timing for the same reason).
+    (paper §VII.A excludes it from timing for the same reason).  The layers
+    transformed are exactly ``pretransform_flags(netplan, pretransform)``;
+    pass those flags to ``run_network`` so execution routes the transformed
+    weights explicitly.
     """
     from repro.models.cnn import fold_batchnorm
 
+    flags = pretransform_flags(netplan, pretransform)
     params = fold_batchnorm(params, [s.layer for s in netplan.steps])
     out: List[Dict] = []
-    for s, p in zip(netplan.steps, params):
+    for s, p, pre in zip(netplan.steps, params, flags):
         if s.layer.kind != "conv":
             out.append(p)
             continue
@@ -537,12 +563,10 @@ def prepare_net_params(
         if cin_pad or o_pad:
             w = jnp.pad(w, ((0, 0), (0, 0), (0, cin_pad), (0, o_pad)))
             b = jnp.pad(b, (0, o_pad))
-        if pretransform:
-            algo = resolve_algorithm(s.spec, s.plan, *s.in_hw)
-            if algo is ConvAlgorithm.WINOGRAD:
-                from repro.core.winograd import transform_weights
+        if pre:
+            from repro.core.winograd import transform_weights
 
-                w = transform_weights(w, w.dtype)       # (8, 8, Cp, Op)
+            w = transform_weights(w, w.dtype)           # (8, 8, Cp, Op)
         out.append({"w": w, "b": b})
     return out
 
@@ -566,6 +590,7 @@ def run_network(
     params: Sequence[Dict],
     x: jnp.ndarray,
     interpret: Optional[bool] = None,
+    pretransformed: Optional[Sequence[bool]] = None,
 ) -> jnp.ndarray:
     """The planned whole-network forward on prepared params.
 
@@ -573,6 +598,13 @@ def run_network(
     activations across every elided boundary, crops once at exit.  Pure
     function of (params, x) given the static NetworkPlan — jit it, or let
     NetworkExecutor do so.
+
+    ``pretransformed`` is the per-step flag tuple from
+    ``pretransform_flags`` saying which conv weights already carry the
+    offline Winograd transform.  ``None`` is accepted for legacy callers
+    and falls back to a *guarded* shape check (8x8 leading dims AND a 3x3
+    spec — a raw kh == 8 kernel is never misread as transformed); new code
+    should always pass the explicit flags.
     """
     from repro.core.conv2d import conv2d
 
@@ -585,6 +617,15 @@ def run_network(
             cur = _align_channels(cur, s.in_layout.phys_c)
             epi = Epilogue(bias=p["b"], activation=l.activation)
             eff_impl = s.plan.impl if s.plan is not None else netplan.impl
+            if pretransformed is not None:
+                pre = bool(pretransformed[s.index])
+            else:                           # legacy guard, not a sniff: a
+                pre = (                     # 3x3 spec can't have raw (8,8)
+                    s.spec.kernel_size == (3, 3)
+                    and p["w"].ndim == 4
+                    and p["w"].shape[0] == 8
+                    and p["w"].shape[1] == 8
+                )
             if s.plan is not None and eff_impl == "pallas":
                 # The executor owns the boundary: channels arrive block-
                 # padded per in_layout, the crop defers per out_layout.
@@ -592,11 +633,12 @@ def run_network(
                     cur, p["w"], s.spec, impl=eff_impl, interpret=interpret,
                     plan=s.plan, epilogue=epi,
                     in_layout=s.in_layout, out_layout=s.out_layout,
+                    pretransformed=pre,
                 )
             else:
                 cur = conv2d(
                     cur, p["w"], s.spec, impl=eff_impl, interpret=interpret,
-                    plan=s.plan, epilogue=epi,
+                    plan=s.plan, epilogue=epi, pretransformed=pre,
                 )
         elif l.kind == "maxpool":
             cur = jax.lax.reduce_window(
@@ -651,12 +693,36 @@ class NetworkExecutor:
             list(params) if prepared
             else prepare_net_params(netplan, params, pretransform=pretransform)
         )
+        # The explicit flag contract: which conv weights carry the offline
+        # Winograd transform.  With ``prepared=True`` the caller vouches the
+        # params were prepared with the same ``pretransform`` policy — and
+        # because the old shape sniff tolerated a mismatch here, we verify
+        # the claim against the weights instead of failing deep in a kernel.
+        self.pretransformed = pretransform_flags(netplan, pretransform)
+        if prepared:
+            for s, p, pre in zip(netplan.steps, self.params,
+                                 self.pretransformed):
+                if s.layer.kind != "conv":
+                    continue
+                looks_transformed = (
+                    s.spec.kernel_size == (3, 3) and p["w"].shape[0] == 8
+                )
+                if pre != looks_transformed:
+                    raise ValueError(
+                        f"step {s.index}: prepared params "
+                        f"{'lack' if pre else 'carry'} the offline Winograd "
+                        f"weight transform (w {tuple(p['w'].shape)}) but the "
+                        f"executor was built with pretransform={pretransform}"
+                        f" — pass the same pretransform= that "
+                        f"prepare_net_params ran with"
+                    )
         if devices is None:
             devices = jax.devices()
         self.mesh = None
 
         def fwd(prms, xx):
-            return run_network(netplan, prms, xx, interpret=interpret)
+            return run_network(netplan, prms, xx, interpret=interpret,
+                               pretransformed=self.pretransformed)
 
         if len(devices) > 1 and netplan.batch % len(devices) == 0:
             import numpy as np

@@ -25,8 +25,8 @@ dtype)** and caches it:
 
 Every downstream consumer threads through here: ``core.conv2d`` accepts a
 plan (or a planner to look one up), ``kernels/conv_ops`` forwards the plan's
-block sizes to the Pallas kernels, and ``models/cnn.plan_layers`` resolves a
-whole network ahead of time (see benchmarks/e2e_cnn.py).
+block sizes to the Pallas kernels, and the api facade (``repro.compile``)
+resolves whole networks ahead of time (see benchmarks/e2e_cnn.py).
 """
 from __future__ import annotations
 

@@ -36,11 +36,15 @@ def conv2d_pallas(
     epilogue: Optional[Epilogue] = None,
     in_layout: Optional["Layout"] = None,
     out_layout: Optional["Layout"] = None,
+    pretransformed: bool = False,
 ) -> jnp.ndarray:
     """x (B,H,W,C), w (kh,kw,C,O) -> (B,OH,OW,O) via Pallas kernels.
 
     ``epilogue`` (bias + activation) is forwarded into each kernel family's
-    output stage — no separate elementwise pass over HBM.
+    output stage — no separate elementwise pass over HBM.  ``pretransformed``
+    declares offline Winograd-transformed weights ((8, 8, C, O)); it is an
+    explicit contract, never inferred from the weight shape (raw kh == 8
+    kernels share that shape).
     """
     import jax
 
@@ -53,7 +57,7 @@ def conv2d_pallas(
     if in_layout is not None or out_layout is not None:
         return _conv2d_pallas_laidout(
             x, w, spec, algo, blocks, interpret, bias, activation,
-            in_layout, out_layout, plan,
+            in_layout, out_layout, plan, pretransformed,
         )
 
     if algo is ConvAlgorithm.DIRECT:
@@ -87,7 +91,7 @@ def conv2d_pallas(
         fused = plan.winograd_fused if plan is not None else True
         return conv2d_winograd_pallas(
             x, w, spec, blocks=blocks, interpret=interpret,
-            pretransformed=(w.shape[0] != spec.kh),
+            pretransformed=pretransformed,
             bias=bias, activation=activation, fused=fused,
         )
 
@@ -111,6 +115,7 @@ def _conv2d_pallas_laidout(
     in_layout: Optional["Layout"],
     out_layout: Optional["Layout"],
     plan: Optional["ConvPlan"],
+    pretransformed: bool = False,
 ) -> jnp.ndarray:
     """Executor path: channels pre-padded in, channel crop deferred out.
 
@@ -174,8 +179,9 @@ def _conv2d_pallas_laidout(
         ph, pw = spec.padding
         if ph or pw:
             x = jnp.pad(x, ((0, 0), (ph, ph), (pw, pw), (0, 0)))
-        # Offline-prepared weights arrive pre-transformed as (8, 8, Cp, Op).
-        u = w if w.shape[0] != spec.kh else transform_weights(w, x.dtype)
+        # Offline-prepared weights arrive pre-transformed as (8, 8, Cp, Op);
+        # the executor carries the flag explicitly (no shape sniffing).
+        u = w if pretransformed else transform_weights(w, x.dtype)
         if blocks is None:
             t = b * -(-oh // 6) * -(-ow // 6)
             blocks = pick_blocks(

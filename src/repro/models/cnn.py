@@ -15,6 +15,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro._deprecation import warn_once
 from repro.core.conv_spec import ConvSpec, Epilogue, apply_activation
 from repro.core.conv2d import conv2d
 from repro.models.layers import normal_init
@@ -143,6 +144,33 @@ def plan_layers(
     batch: int = 1,
     dtype="float32",
 ) -> List[Optional[object]]:
+    """Deprecated shim: per-layer plans are a facade by-product now.
+
+    ``repro.compile(model, params, options)`` plans the whole network (and
+    exposes the per-layer plans via ``.network_plan().steps`` /
+    ``.plan_report()``); this standalone walker stays one release for
+    callers of ``cnn_forward(plans=...)``.
+    """
+    warn_once(
+        "models.cnn.plan_layers",
+        "repro.compile(model, params, options) (plans are in "
+        ".network_plan().steps / .plan_report())",
+    )
+    return _plan_layers(
+        layers, h, w, planner, in_channels=in_channels, batch=batch,
+        dtype=dtype,
+    )
+
+
+def _plan_layers(
+    layers: Sequence[CNNLayer],
+    h: int,
+    w: int,
+    planner,
+    in_channels: int = 3,
+    batch: int = 1,
+    dtype="float32",
+) -> List[Optional[object]]:
     """Resolve a ConvPlan for every conv layer of a network ahead of time.
 
     Walks the layer table exactly like ``cnn_forward`` does (same shape
@@ -252,11 +280,6 @@ def cnn_forward(
     return cur
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=("layers", "impl", "interpret", "plans", "fuse_epilogue",
-                     "fold_bn"),
-)
 def cnn_infer(
     params,
     layers: Tuple[CNNLayer, ...],
@@ -267,7 +290,39 @@ def cnn_infer(
     fuse_epilogue: bool = True,
     fold_bn: bool = True,
 ) -> jnp.ndarray:
-    """Jitted whole-network inference entry point (the deployment path).
+    """Deprecated shim: the deployment entry point is the api facade now.
+
+    ``repro.compile(model, params, options).run(x)`` runs the same
+    plan→prepare→jit pipeline (and additionally prepares params offline and
+    shards the batch).  This shim delegates unchanged — identical outputs —
+    and fires one DeprecationWarning per process.
+    """
+    warn_once(
+        "models.cnn.cnn_infer",
+        "repro.compile(model, params, options).run(x)",
+    )
+    return _cnn_infer(
+        params, layers, x, impl=impl, interpret=interpret, plans=plans,
+        fuse_epilogue=fuse_epilogue, fold_bn=fold_bn,
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("layers", "impl", "interpret", "plans", "fuse_epilogue",
+                     "fold_bn"),
+)
+def _cnn_infer(
+    params,
+    layers: Tuple[CNNLayer, ...],
+    x: jnp.ndarray,
+    impl: str = "jax",
+    interpret: Optional[bool] = None,
+    plans: Optional[Tuple[Optional[object], ...]] = None,
+    fuse_epilogue: bool = True,
+    fold_bn: bool = True,
+) -> jnp.ndarray:
+    """Jitted whole-network inference (the pre-facade deployment path).
 
     Rides the network executor (core/netplan.py): one compilation covers
     batchnorm folding (``fold_bn``), the whole-network layout resolution
@@ -277,9 +332,10 @@ def cnn_infer(
     hashable; the configs' layer tables already are).  With
     ``fuse_epilogue=False`` — or unfolded batchnorm params, which the
     executor cannot fuse — it falls back to the per-layer ``cnn_forward``
-    path.  Standing-process serving should prefer ``NetworkExecutor``
-    directly: it additionally prepares parameters offline (block padding +
-    Winograd weight pre-transform) and shards the batch over a device mesh.
+    path.  Standing-process serving should prefer the facade
+    (``repro.compile``): it additionally prepares parameters offline (block
+    padding + Winograd weight pre-transform) and shards the batch over a
+    device mesh.
     """
     if fold_bn:
         params = fold_batchnorm(params, layers)
@@ -300,8 +356,9 @@ def cnn_infer(
         layers, x.shape[1], x.shape[2], in_channels=x.shape[3],
         batch=x.shape[0], plans=plans, impl=impl, dtype=x.dtype,
     )
-    prepared = prepare_net_params(netplan, params)
-    return run_network(netplan, prepared, x, interpret=interpret)
+    prepared = prepare_net_params(netplan, params)      # pretransform=False
+    return run_network(netplan, prepared, x, interpret=interpret,
+                       pretransformed=(False,) * len(netplan.steps))
 
 
 def conv_layer_dims(layers: Sequence[CNNLayer], h: int, w: int, in_ch: int = 3):

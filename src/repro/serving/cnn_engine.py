@@ -8,18 +8,22 @@ tuples shift as activation traffic amortizes the weight terms).  This
 engine bridges the two:
 
   buckets      a small ladder of batch sizes (default 1/4/8).  Each bucket
-               gets its own NetworkPlan (core/netplan.plan_network — warm
-               v4 network cache entry) and its own NetworkExecutor
-               (offline-prepared params, jitted once, shard_map over the
-               device mesh when the bucket divides the device count).  No
-               shape outside the ladder is ever compiled — the standard
-               serving discipline of bounded compilation.
+               gets its own NetworkPlan (warm v4 network cache entry) and
+               its own jitted executor.  No shape outside the ladder is
+               ever compiled — the standard serving discipline of bounded
+               compilation.
   dispatch     ``submit`` enqueues; ``step`` drains the queue through the
                **largest bucket that fills completely**, falling back to
                the smallest bucket that covers the remainder (padded with
                zero images whose outputs are dropped).  ``run`` loops
                ``step`` until the queue is empty; ``infer`` is the
                synchronous whole-array convenience wrapper.
+
+Since the `repro.api` facade landed, the engine is a thin *consumer* of a
+``CompiledModel``: planner, cache, per-bucket plans, and the device mesh
+all come from one compilation instead of being re-plumbed here.  Build it
+as ``repro.compile(model, params, options).serve()``; direct construction
+is a deprecation shim that compiles on your behalf.
 
 Stats record per-bucket batch counts and padded slots, so a deployment can
 check its bucket ladder against its real arrival distribution.
@@ -33,8 +37,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.netplan import NetworkExecutor, plan_network
-from repro.core.planner import DEFAULT_CACHE_PATH, Planner
+from repro.core.planner import DEFAULT_CACHE_PATH
 
 
 @dataclasses.dataclass
@@ -58,37 +61,48 @@ class CNNServingEngine:
         cache_path: Optional[str] = DEFAULT_CACHE_PATH,
         interpret: Optional[bool] = None,
         dtype: Any = "float32",
-        planner: Optional[Planner] = None,
+        planner=None,
         devices: Optional[Sequence[Any]] = None,
+        _compiled=None,
     ):
-        if not buckets or any(b <= 0 for b in buckets):
+        if not buckets or any(int(b) <= 0 for b in buckets):
             raise ValueError(f"buckets must be positive, got {buckets!r}")
-        self.layers = tuple(layers)
-        self.input_hw = tuple(input_hw)
-        self.in_channels = in_channels
-        self.buckets = tuple(sorted(set(int(b) for b in buckets)))
-        self.dtype = dtype
-        # One planner serves every bucket; plans are batch-keyed, so each
-        # bucket resolves its own per-layer plans and network entry.  A
-        # warm cache file makes a fresh engine re-tune nothing.
-        own_planner = planner is None
-        if own_planner:
-            planner = Planner(
-                mode=mode, impl=impl, cache_path=cache_path, autosave=False,
-                fuse_epilogue=True,
+        buckets = tuple(sorted({int(b) for b in buckets}))
+        if _compiled is None:
+            # Legacy direct construction: compile on the caller's behalf.
+            from repro._deprecation import warn_once
+            from repro.api import CNNModel, ExecutionOptions
+            from repro.api import compile as api_compile
+            from repro.core.planner import _dtype_name
+
+            warn_once(
+                "serving.CNNServingEngine(layers, params, ...)",
+                "repro.compile(model, params, options).serve()",
             )
-        self.planner = planner
-        self._executors: Dict[int, NetworkExecutor] = {}
-        for b in self.buckets:
-            netplan = plan_network(
-                self.layers, *self.input_hw, planner,
-                in_channels=in_channels, batch=b, dtype=dtype,
+            model = CNNModel(tuple(layers), tuple(input_hw),
+                             in_channels=in_channels, name="cnn-serving")
+            options = ExecutionOptions(
+                impl=impl, mode=mode, cache_path=cache_path,
+                interpret=interpret, dtype=_dtype_name(dtype),
+                batch=buckets[0], buckets=buckets,
             )
-            self._executors[b] = NetworkExecutor(
-                netplan, params, interpret=interpret, devices=devices,
-            )
-        if own_planner and cache_path:
-            planner.save()      # one merge+write covering every bucket
+            _compiled = api_compile(model, params, options, planner=planner,
+                                    devices=devices)
+        self.compiled = _compiled
+        self.planner = _compiled.planner
+        self.layers = _compiled.model.layers
+        self.input_hw = tuple(_compiled.model.input_hw)
+        self.in_channels = _compiled.model.in_channels
+        self.buckets = buckets
+        self.dtype = _compiled.options.dtype
+        # One executor per bucket, all from the same compilation — plans
+        # are batch-keyed, so each bucket resolves its own NetworkPlan and
+        # network entry; a warm cache file makes a fresh engine re-tune
+        # nothing.  Persistence is the compilation's concern: it saves when
+        # (and only when) new tunes land and it owns the planner, so the
+        # trailing save is a no-op on a warm cache or a shared planner.
+        self._executors = {b: _compiled.executor(b) for b in self.buckets}
+        self.compiled.save_plans()
         self.queue: List[ImageRequest] = []
         self._uid = 0
         self.stats = {
@@ -96,6 +110,18 @@ class CNNServingEngine:
             "padded_slots": 0,
             "requests": 0,
         }
+
+    @classmethod
+    def from_compiled(cls, compiled, buckets: Optional[Sequence[int]] = None,
+                      ) -> "CNNServingEngine":
+        """The facade path (``CompiledModel.serve()``): consume an existing
+        compilation — its planner, cache, options, and device mesh."""
+        return cls(
+            compiled.model.layers, compiled.params, compiled.model.input_hw,
+            in_channels=compiled.model.in_channels,
+            buckets=tuple(buckets) if buckets else compiled.options.buckets,
+            _compiled=compiled,
+        )
 
     # -- public api ---------------------------------------------------------
 

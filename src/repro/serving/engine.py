@@ -28,6 +28,18 @@ class Request:
 
 
 class ServingEngine:
+    @classmethod
+    def from_compiled(cls, compiled, batch_size: Optional[int] = None,
+                      capacity: int = 256, **kw) -> "ServingEngine":
+        """Consume a facade compilation (``repro.compile(cfg, params,
+        options).serve()`` routes here): model config, params, and the
+        default batch (the largest option bucket) come from it."""
+        return cls(
+            compiled.model, compiled.params,
+            batch_size=batch_size or max(compiled.options.buckets),
+            capacity=capacity, **kw,
+        )
+
     def __init__(self, cfg: ModelConfig, params, batch_size: int,
                  capacity: int, temperature: float = 0.0, seed: int = 0):
         assert cfg.supports_decode, f"{cfg.name} is encoder-only"

@@ -1,0 +1,388 @@
+"""The `repro.api` facade: compile() -> CompiledModel acceptance surface.
+
+Pins the PR-5 contract:
+  - ``repro.compile(model, params, options).run(x)`` is the single entry
+    point and reproduces ``cnn_infer``'s outputs **bit-exactly** (and the
+    XLA oracle within fp32 tolerance) for VGG-16 / YOLOv3-tiny;
+  - ``ExecutionOptions`` round-trips through ``save()``/``load()`` with
+    zero re-tunes (the v4 plan cache carries the tuning);
+  - ``.serve()`` rides the bucket ladder without re-plumbing planner/cache;
+  - every deprecation shim fires exactly one DeprecationWarning and returns
+    output identical to the facade path;
+  - LM configs compile through the same entry point (run + serve).
+"""
+import json
+import os
+import subprocess
+import sys
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro
+from repro import _deprecation
+from repro.models.cnn import CNNLayer, cnn_forward, init_cnn
+
+C = CNNLayer
+
+
+def _tiny_net():
+    layers = (
+        C("conv", out_channels=16, kernel=3, activation="relu"),
+        C("maxpool", size=2, stride=2),
+        C("conv", out_channels=8, kernel=1, pad=0, batch_norm=False,
+          activation="linear"),
+    )
+    return repro.CNNModel(layers, (8, 8), name="tiny"), init_cnn(
+        jax.random.PRNGKey(0), layers
+    )
+
+
+def _tol(ref):
+    scale = float(jnp.max(jnp.abs(ref)))
+    return dict(rtol=1e-4, atol=1e-4 * max(scale, 1.0))
+
+
+# ---------------------------------------------------------------------------
+# Public surface
+
+
+def test_public_surface():
+    """`import repro; repro.compile(...)` is the documented entry point."""
+    import repro.api
+
+    assert repro.compile is repro.api.compile
+    assert repro.ExecutionOptions is repro.api.ExecutionOptions
+    for name in ("compile", "load", "ExecutionOptions", "CNNModel",
+                 "CompiledModel", "Model", "ConvSpec", "Planner",
+                 "NetworkExecutor", "conv2d"):
+        assert name in repro.__all__, name
+        assert hasattr(repro, name), name
+    # Lazy serving attributes resolve (and only on demand).
+    assert repro.CNNServingEngine is not None
+    assert repro.ServingEngine is not None
+    with pytest.raises(AttributeError):
+        repro.not_a_thing
+
+
+def test_import_repro_clean_under_deprecation_errors():
+    """CI contract: importing the public package fires no DeprecationWarning
+    (the shims only warn when *called*)."""
+    env = dict(os.environ)
+    src = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run(
+        [sys.executable, "-W", "error::DeprecationWarning", "-c",
+         "import repro"],
+        capture_output=True, text=True, env=env, timeout=300,
+    )
+    assert proc.returncode == 0, proc.stderr
+
+
+# ---------------------------------------------------------------------------
+# ExecutionOptions
+
+
+def test_options_validation():
+    with pytest.raises(ValueError):
+        repro.ExecutionOptions(impl="cuda")
+    with pytest.raises(ValueError):
+        repro.ExecutionOptions(mode="guess")
+    with pytest.raises(ValueError):
+        repro.ExecutionOptions(batch=0)
+    with pytest.raises(ValueError):
+        repro.ExecutionOptions(buckets=())
+    with pytest.raises(ValueError):
+        repro.ExecutionOptions(buckets=(0, 4))
+
+
+def test_options_normalize_and_roundtrip():
+    opts = repro.ExecutionOptions(buckets=(8, 1, 4, 4), dtype=jnp.float32)
+    assert opts.buckets == (1, 4, 8)
+    assert opts.dtype == "float32"
+    assert repro.ExecutionOptions.from_json(opts.to_json()) == opts
+    assert hash(opts) == hash(repro.ExecutionOptions.from_json(opts.to_json()))
+    assert opts.replace(batch=4).batch == 4 and opts.batch == 1
+    # Unknown keys in old artifacts are ignored, not fatal.
+    d = opts.to_json()
+    d["some_future_field"] = 1
+    assert repro.ExecutionOptions.from_json(d) == opts
+
+
+def test_compile_rejects_bare_layers_without_input_hw():
+    model, params = _tiny_net()
+    with pytest.raises(ValueError):
+        repro.compile(model.layers, params)
+    compiled = repro.compile(
+        model.layers, params,
+        repro.ExecutionOptions(cache_path=None), input_hw=(8, 8),
+    )
+    assert compiled.model.input_hw == (8, 8)
+    with pytest.raises(TypeError):
+        repro.compile(object(), params)
+
+
+# ---------------------------------------------------------------------------
+# compile().run(): bit-exact vs cnn_infer, fp32-close vs the XLA oracle
+
+
+@pytest.mark.parametrize("model_name", ["vgg16", "yolov3-tiny"])
+def test_compile_run_bit_exact_vs_cnn_infer_and_oracle(model_name):
+    from repro.configs import vgg16, yolov3
+
+    desc = {"vgg16": vgg16.MODEL, "yolov3-tiny": yolov3.TINY_MODEL}[
+        model_name
+    ].with_input_hw((32, 32))
+    params = init_cnn(jax.random.PRNGKey(0), desc.layers)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 32, 32, 3))
+    # pretransform=False so both paths transform Winograd weights at the
+    # same point in the graph — bit-exactness, not just closeness.
+    compiled = repro.compile(desc, params, repro.ExecutionOptions(
+        impl="jax", cache_path=None, batch=2, pretransform=False,
+    ))
+    got = compiled.run(x)
+
+    plans = tuple(s.plan for s in compiled.network_plan(2).steps)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        from repro.models.cnn import cnn_infer
+
+        ref = cnn_infer(params, desc.layers, x, impl="jax", plans=plans)
+    assert jnp.array_equal(got, ref), (
+        f"facade diverged from cnn_infer by "
+        f"{float(jnp.abs(got - ref).max())}"
+    )
+    oracle = cnn_forward(params, desc.layers, x, impl="xla")
+    np.testing.assert_allclose(got, oracle, **_tol(oracle))
+
+
+def test_compile_run_pallas_interpret_smoke():
+    """The CI facade smoke: compile -> run on the Pallas kernels in
+    interpret mode matches the oracle, with prepared (pre-transformed,
+    block-padded) params."""
+    model, params = _tiny_net()
+    compiled = repro.compile(model, params, repro.ExecutionOptions(
+        impl="pallas", interpret=True, cache_path=None,
+    ))
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 8, 8, 3))
+    got = compiled.run(x)
+    ref = cnn_forward(params, model.layers, x, impl="xla")
+    np.testing.assert_allclose(got, ref, rtol=5e-4, atol=5e-4)
+
+
+def test_run_compiles_batches_on_demand_and_caches():
+    model, params = _tiny_net()
+    compiled = repro.compile(model, params,
+                             repro.ExecutionOptions(cache_path=None))
+    assert set(compiled._executors) == {1}          # options.batch, eagerly
+    x2 = jax.random.normal(jax.random.PRNGKey(1), (2, 8, 8, 3))
+    compiled.run(x2)
+    compiled.run(x2)
+    assert set(compiled._executors) == {1, 2}
+    with pytest.raises(ValueError):
+        compiled.run(jnp.zeros((8, 8, 3)))           # not (B, H, W, C)
+
+
+# ---------------------------------------------------------------------------
+# plan_report
+
+
+def test_plan_report_structure():
+    model, params = _tiny_net()
+    compiled = repro.compile(model, params,
+                             repro.ExecutionOptions(cache_path=None))
+    rep = compiled.plan_report()
+    assert rep["kind"] == "cnn" and rep["model"] == "tiny"
+    n_convs = sum(1 for l in model.layers if l.kind == "conv")
+    assert len(rep["layers"]) == n_convs
+    for row in rep["layers"]:
+        assert {"algorithm", "kernel_blocks", "predicted_s", "source",
+                "elided"} <= set(row)
+    assert rep["predicted_total_s"] > 0
+    assert rep["tunes"] >= n_convs                  # cold cache
+
+
+# ---------------------------------------------------------------------------
+# save()/load(): options round-trip, plan cache carries the tuning
+
+
+def test_save_load_zero_retunes(tmp_path):
+    model, params = _tiny_net()
+    cache = os.path.join(tmp_path, "plans.json")
+    opts = repro.ExecutionOptions(impl="jax", cache_path=cache, batch=2,
+                                  buckets=(1, 2))
+    compiled = repro.compile(model, params, opts)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, 8, 3))
+    y = compiled.run(x)
+    art = compiled.save(os.path.join(tmp_path, "tiny.compiled.json"))
+
+    with open(art) as f:
+        data = json.load(f)
+    assert data["format"] == repro.api.SAVE_FORMAT
+    assert data["model"]["digest"] == model.digest
+
+    loaded = repro.load(art, model, params)
+    assert loaded.options == opts                   # full option round-trip
+    assert loaded.planner.stats["tunes"] == 0       # cache v4 carried it
+    assert loaded.planner.network_hits >= 1
+    assert jnp.array_equal(loaded.run(x), y)
+
+
+def test_load_rejects_mismatched_model(tmp_path):
+    model, params = _tiny_net()
+    art = repro.compile(
+        model, params,
+        repro.ExecutionOptions(cache_path=os.path.join(tmp_path, "p.json")),
+    ).save(os.path.join(tmp_path, "a.json"))
+    other = repro.CNNModel(model.layers[:1], (8, 8), name="other")
+    with pytest.raises(ValueError):
+        repro.load(art, other, params)
+    # Geometry is identity too: same layers at another resolution must not
+    # load silently (plans are shape-keyed — it would cold-retune).
+    with pytest.raises(ValueError, match="input_hw"):
+        repro.load(art, model.with_input_hw((16, 16)), params)
+    # A bare layer table inherits the artifact's geometry.
+    inherited = repro.load(art, model.layers, params)
+    assert inherited.model.input_hw == model.input_hw
+    assert inherited.planner.stats["tunes"] == 0
+
+
+# ---------------------------------------------------------------------------
+# serve(): the engine consumes the compilation
+
+
+def test_serve_rides_compilation_without_warning(tmp_path):
+    model, params = _tiny_net()
+    compiled = repro.compile(model, params, repro.ExecutionOptions(
+        cache_path=os.path.join(tmp_path, "plans.json"), buckets=(1, 2),
+    ))
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        eng = compiled.serve()
+    assert eng.planner is compiled.planner          # no re-plumbing
+    assert eng.buckets == (1, 2)
+    imgs = np.asarray(
+        jax.random.normal(jax.random.PRNGKey(1), (3, 8, 8, 3))
+    )
+    out = eng.infer(imgs)
+    ref = np.asarray(compiled.run(jnp.asarray(imgs)))
+    np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-5)
+    assert eng.stats["batches"] == {1: 1, 2: 1}
+
+
+# ---------------------------------------------------------------------------
+# Deprecation shims: one warning, identical outputs
+
+
+def _one_deprecation(calls):
+    """Run ``calls`` (callables) twice each; return the DeprecationWarnings
+    raised the first time around."""
+    _deprecation.reset()
+    with warnings.catch_warnings(record=True) as ws:
+        warnings.simplefilter("always")
+        outs = [fn() for fn in calls for _ in (0, 1)]
+    return [w for w in ws if issubclass(w.category, DeprecationWarning)], outs
+
+
+def test_cnn_infer_shim_warns_once_and_matches():
+    model, params = _tiny_net()
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, 8, 3))
+    compiled = repro.compile(model, params, repro.ExecutionOptions(
+        impl="jax", cache_path=None, batch=2, pretransform=False,
+    ))
+    from repro.models.cnn import cnn_infer
+
+    deps, outs = _one_deprecation(
+        [lambda: cnn_infer(params, model.layers, x, impl="jax")]
+    )
+    assert len(deps) == 1, [str(w.message) for w in deps]
+    assert "repro.compile" in str(deps[0].message)
+    assert jnp.array_equal(outs[0], outs[1])
+    # The shim's output is what the facade reproduces bit-exactly when both
+    # run the same plans; unplanned cnn_infer stays within fp32 tolerance.
+    np.testing.assert_allclose(outs[0], compiled.run(x), rtol=1e-5, atol=1e-5)
+
+
+def test_plan_layers_and_config_helpers_warn_once():
+    from repro.configs import vgg16, yolov3
+    from repro.core.planner import Planner
+    from repro.models.cnn import _plan_layers, plan_layers
+
+    model, _ = _tiny_net()
+    planner = Planner(impl="jax", cache_path=None)
+    deps, outs = _one_deprecation([
+        lambda: plan_layers(model.layers, 8, 8, planner),
+        lambda: vgg16.plan_network(planner, input_hw=(16, 16)),
+        lambda: yolov3.network_plan(planner, layers=yolov3.TINY_LAYERS,
+                                    input_hw=(16, 16)),
+    ])
+    assert len(deps) == 3, [str(w.message) for w in deps]
+    # Identical outputs to the non-deprecated internals.
+    assert outs[0] == _plan_layers(model.layers, 8, 8, planner)
+    from repro.core.netplan import plan_network
+
+    assert outs[4] == plan_network(yolov3.TINY_LAYERS, 16, 16, planner)
+
+
+def test_cnn_engine_direct_construction_warns_once_and_matches(tmp_path):
+    model, params = _tiny_net()
+    from repro.serving import CNNServingEngine
+
+    imgs = np.asarray(
+        jax.random.normal(jax.random.PRNGKey(1), (2, 8, 8, 3))
+    )
+    _deprecation.reset()
+    with warnings.catch_warnings(record=True) as ws:
+        warnings.simplefilter("always")
+        eng1 = CNNServingEngine(model.layers, params, (8, 8), buckets=(2,),
+                                impl="jax",
+                                cache_path=os.path.join(tmp_path, "p.json"))
+        eng2 = CNNServingEngine(model.layers, params, (8, 8), buckets=(2,),
+                                impl="jax",
+                                cache_path=os.path.join(tmp_path, "p.json"))
+    deps = [w for w in ws if issubclass(w.category, DeprecationWarning)]
+    assert len(deps) == 1, [str(w.message) for w in deps]
+    # The legacy engine is now a thin layer over the facade — same outputs.
+    compiled = repro.compile(model, params, repro.ExecutionOptions(
+        impl="jax", cache_path=None, buckets=(2,),
+    ))
+    facade_eng = compiled.serve()
+    np.testing.assert_allclose(
+        eng1.infer(imgs), facade_eng.infer(imgs), rtol=1e-5, atol=1e-5
+    )
+    assert eng2.warm                               # bucket plans persisted
+
+
+# ---------------------------------------------------------------------------
+# LM configs ride the same facade
+
+
+def test_lm_compile_run_and_serve(tmp_path):
+    from repro import configs
+    from repro.models import transformer as tf
+
+    cfg = configs.smoke_config("llama3.2-1b", seq_len=32)
+    params = tf.init_params(cfg, jax.random.PRNGKey(0))
+    compiled = repro.compile(cfg, params)
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 1,
+                                cfg.vocab_size)
+    logits = compiled.run(tokens)
+    ref, _ = tf.forward(cfg, params, {"tokens": jnp.asarray(tokens,
+                                                            jnp.int32)})
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+    rep = compiled.plan_report()
+    assert rep["kind"] == "lm" and rep["model"] == cfg.name
+
+    engine = compiled.serve(batch_size=2, capacity=64)
+    uid = engine.submit(np.array([3, 5, 7]), max_new_tokens=4)
+    results = engine.run()
+    assert len(results[uid]) == 4
+
+    art = compiled.save(os.path.join(tmp_path, "lm.compiled.json"))
+    loaded = repro.load(art, cfg, params)
+    assert loaded.options == compiled.options

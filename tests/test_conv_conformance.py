@@ -260,6 +260,83 @@ def test_pallas_direct_1x1_padding_regression():
 
 
 # ---------------------------------------------------------------------------
+# Pre-transformed weights are an explicit flag, never a shape sniff.  The
+# old detection (``pretransformed = (w.shape[0] != spec.kh)``) was ambiguous
+# for kh == 8 kernels: raw 8x8 weights are (8, 8, C, O) exactly like an
+# offline-transformed 3x3's, so any 8x8-aware path was one refactor away
+# from misrouting them through the Winograd inverse transform.
+
+
+@pytest.mark.parametrize("impl", ["jax", "pallas"])
+def test_conv_8x8_kernel_raw_weights_regression(impl):
+    """An 8x8-kernel conv — whose raw weights share the (8, 8, C, O) shape
+    of pre-transformed Winograd weights — must route as a plain conv."""
+    spec = ConvSpec(4, 8, kernel_size=(8, 8), padding=(4, 4))
+    x = _rand((1, 16, 16, 4), seed=7)
+    w = _rand((8, 8, 4, 8), seed=8)
+    ref = conv2d_reference(x, w, spec)
+    got = conv2d(x, w, spec, impl=impl, interpret=True)
+    assert got.shape == ref.shape, (got.shape, ref.shape)
+    np.testing.assert_allclose(got, ref, rtol=5e-4, atol=5e-4)
+
+
+@pytest.mark.parametrize("impl", ["jax", "pallas"])
+def test_conv2d_explicit_pretransformed_flag(impl):
+    """conv2d(pretransformed=True) routes offline-transformed (8, 8, C, O)
+    weights without any shape inference."""
+    from repro.core.winograd import transform_weights
+
+    spec = ConvSpec(4, 6, (3, 3), (1, 1), (1, 1),
+                    algorithm=ConvAlgorithm.WINOGRAD)
+    x = _rand((1, 12, 12, 4), seed=9)
+    wt = _rand((3, 3, 4, 6), seed=10)
+    u = transform_weights(wt)
+    ref = conv2d_reference(x, wt, spec)
+    got = conv2d(x, u, spec, impl=impl, interpret=True, pretransformed=True)
+    np.testing.assert_allclose(got, ref, rtol=5e-4, atol=5e-4)
+
+
+def test_network_with_8x8_conv_pretransform_flags():
+    """End-to-end flag carriage: a network mixing an 8x8 conv with
+    Winograd-eligible 3x3 convs, prepared with the offline weight transform
+    (``pretransform=True``), must flow the explicit per-layer flags from
+    ``prepare_net_params`` to execution — the 3x3 layers' (8, 8, C, O)
+    weights route pre-transformed, the 8x8 layer's identically-shaped raw
+    weights do not."""
+    from repro.core.netplan import (
+        NetworkExecutor,
+        plan_network,
+        pretransform_flags,
+    )
+    from repro.core.planner import Planner
+    from repro.models.cnn import CNNLayer, cnn_forward, init_cnn
+
+    layers = (
+        CNNLayer("conv", out_channels=8, kernel=8, activation="relu"),
+        CNNLayer("conv", out_channels=6, kernel=3, activation="leaky"),
+        CNNLayer("conv", out_channels=5, kernel=3, activation="linear"),
+    )
+    params = init_cnn(jax.random.PRNGKey(0), layers)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 16, 16, 3))
+    ref = cnn_forward(params, layers, x, impl="xla")
+    planner = Planner(impl="jax", cache_path=None)
+    netplan = plan_network(layers, 16, 16, planner, batch=1)
+    flags = pretransform_flags(netplan, True)
+    assert flags[0] is False, "raw 8x8 kernel misread as pre-transformed"
+    assert any(flags), "test setup: no Winograd layer left to pre-transform"
+    got = NetworkExecutor(netplan, params, pretransform=True)(x)
+    np.testing.assert_allclose(got, ref, rtol=5e-4, atol=5e-4)
+    # And through the facade, which carries the same flags.
+    import repro
+
+    compiled = repro.compile(
+        layers, params, repro.ExecutionOptions(impl="jax", cache_path=None),
+        input_hw=(16, 16),
+    )
+    np.testing.assert_allclose(compiled.run(x), ref, rtol=5e-4, atol=5e-4)
+
+
+# ---------------------------------------------------------------------------
 # Network-level acceptance: fused epilogue vs reference for every conv layer
 # of the paper's two networks.
 
