@@ -1,0 +1,184 @@
+"""Benchmark regression gate over the committed BENCH_e2e.json baseline.
+
+The perf trajectory is tracked from files, not scraped from stdout
+(benchmarks/common.py); this module closes the loop: a committed baseline
+(``benchmarks/baseline/BENCH_e2e.json``) is compared row-by-row against a
+freshly generated candidate, and any modeled row that got slower beyond the
+tolerance fails the build.
+
+Only *deterministic* rows are gated (the default ``--pattern``): the
+per-layer cost-model predictions (``e2e_<model>_L<NN>``, including the
+``_int8_`` variants) and the ``*_predicted_total`` aggregates.  These are
+pure arithmetic over static shapes and chip constants — identical on every
+machine — so a drift means the cost model, the planner policy, or a layer's
+resolved plan actually changed, never that CI ran on a slow runner.
+Wall-clock rows are deliberately excluded.
+
+Usage (the CI step):
+
+    python -m benchmarks.check_regression \
+        --regen /tmp/BENCH_e2e.json \
+        --baseline benchmarks/baseline/BENCH_e2e.json
+
+``--regen PATH`` regenerates the candidate first (both paper networks,
+predict-only, a throwaway plan cache) and then compares; pass ``--candidate``
+instead to compare an existing file.  To refresh the committed baseline
+after an intentional model change:
+
+    python -m benchmarks.check_regression --regen benchmarks/baseline/BENCH_e2e.json --no-compare
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import re
+import sys
+import tempfile
+from typing import Any, Dict, List, Optional, Tuple
+
+# Deterministic modeled rows only — see module docstring.
+DEFAULT_PATTERN = r"^e2e_.*_L\d+$|^e2e_.*_predicted_total$"
+DEFAULT_TOLERANCE = 0.05
+# The committed baseline's generation recipe; regen must match it exactly
+# or every row would spuriously drift.
+BASELINE_MODELS = ("vgg16", "yolov3-tiny")
+BASELINE_HW = 64
+BASELINE_BATCH = 1
+
+
+def load_rows(path: str) -> Dict[str, Dict[str, Any]]:
+    """{row name: row} from a BENCH JSON file (benchmarks.common schema)."""
+    with open(path) as f:
+        data = json.load(f)
+    rows = data.get("rows", [])
+    out: Dict[str, Dict[str, Any]] = {}
+    for r in rows:
+        out[r["name"]] = r
+    return out
+
+
+def compare(
+    baseline: Dict[str, Dict[str, Any]],
+    candidate: Dict[str, Dict[str, Any]],
+    pattern: str = DEFAULT_PATTERN,
+    tolerance: float = DEFAULT_TOLERANCE,
+) -> Tuple[List[str], List[str]]:
+    """(regressions, notices) comparing candidate seconds against baseline.
+
+    A gated row regresses when it is slower than baseline * (1 + tolerance)
+    or missing from the candidate entirely (a silently dropped layer row is
+    a coverage regression, not an improvement).  Faster-than-baseline rows
+    come back as notices — an intentional model change should refresh the
+    committed baseline so future regressions are measured from the new
+    level, but it does not fail the build.
+    """
+    rx = re.compile(pattern)
+    regressions: List[str] = []
+    notices: List[str] = []
+    gated = [n for n in baseline if rx.search(n)]
+    if not gated:
+        regressions.append(
+            f"baseline has no rows matching {pattern!r} — empty gate"
+        )
+    for name in sorted(gated):
+        base_s = float(baseline[name]["seconds"])
+        if name not in candidate:
+            regressions.append(f"{name}: missing from candidate")
+            continue
+        cand_s = float(candidate[name]["seconds"])
+        if base_s <= 0.0:
+            # Zero-cost proof rows (e.g. warm_retunes) gate on presence.
+            if cand_s != base_s:
+                regressions.append(
+                    f"{name}: expected {base_s}, got {cand_s}"
+                )
+            continue
+        ratio = cand_s / base_s
+        if ratio > 1.0 + tolerance:
+            regressions.append(
+                f"{name}: {base_s:.6e}s -> {cand_s:.6e}s "
+                f"({ratio:.3f}x, tolerance {1 + tolerance:.2f}x)"
+            )
+        elif ratio < 1.0 / (1.0 + tolerance):
+            notices.append(
+                f"{name}: improved {base_s:.6e}s -> {cand_s:.6e}s "
+                f"({ratio:.3f}x) — consider refreshing the baseline"
+            )
+    return regressions, notices
+
+
+def regenerate(json_path: str, cache_path: Optional[str] = None) -> str:
+    """Re-run the baseline recipe (both networks, predict-only) into one
+    BENCH JSON at ``json_path``.  Uses a throwaway plan cache by default so
+    the run is reproducible from cold."""
+    from benchmarks import common
+    from benchmarks.e2e_cnn import run
+    from benchmarks.common import write_bench_json
+
+    if cache_path is None:
+        cache_path = tempfile.mktemp(prefix="bench_plans_", suffix=".json")
+    start = len(common.ROWS)
+    for model in BASELINE_MODELS:
+        run(
+            model=model,
+            input_hw=(BASELINE_HW, BASELINE_HW),
+            batch=BASELINE_BATCH,
+            impl="jax",
+            mode="cost",
+            cache_path=cache_path,
+            predict_only=True,
+            json_path=None,       # one combined file below, not per model
+        )
+    return write_bench_json(
+        json_path,
+        extra={"models": list(BASELINE_MODELS), "hw": BASELINE_HW,
+               "batch": BASELINE_BATCH, "predict_only": True},
+        rows=common.ROWS[start:],
+    )
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--baseline", default="benchmarks/baseline/BENCH_e2e.json")
+    ap.add_argument("--candidate", default=None,
+                    help="existing BENCH JSON to compare (or use --regen)")
+    ap.add_argument("--regen", default=None, metavar="PATH",
+                    help="regenerate the candidate to PATH first (both "
+                         "paper networks, predict-only, throwaway cache)")
+    ap.add_argument("--pattern", default=DEFAULT_PATTERN,
+                    help="regex of row names to gate (default: the "
+                         "deterministic modeled rows)")
+    ap.add_argument("--tolerance", type=float, default=DEFAULT_TOLERANCE,
+                    help="allowed relative slowdown (default 0.05 = 5%%)")
+    ap.add_argument("--no-compare", action="store_true",
+                    help="with --regen: write the file and stop (baseline "
+                         "refresh)")
+    args = ap.parse_args(argv)
+
+    candidate_path = args.candidate
+    if args.regen:
+        candidate_path = regenerate(args.regen)
+        print(f"# regenerated candidate: {candidate_path}")
+        if args.no_compare:
+            return 0
+    if candidate_path is None:
+        ap.error("need --candidate or --regen")
+
+    regressions, notices = compare(
+        load_rows(args.baseline), load_rows(candidate_path),
+        pattern=args.pattern, tolerance=args.tolerance,
+    )
+    for n in notices:
+        print(f"NOTICE  {n}")
+    for r in regressions:
+        print(f"REGRESSION  {r}")
+    if regressions:
+        print(f"# {len(regressions)} regression(s) vs {args.baseline}")
+        return 1
+    print(f"# ok: no regressions vs {args.baseline} "
+          f"(tolerance {args.tolerance:.0%}, pattern {args.pattern!r})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -96,10 +96,15 @@ class CompiledCNN(CompiledModel):
         options: ExecutionOptions,
         planner=None,
         devices: Optional[Sequence[Any]] = None,
+        calibration: Optional[Any] = None,
     ):
         self.model = model
         self.params = list(params)
         self.options = options
+        # int8 activation-scale calibration batch (B, H, W, C) fp32; None
+        # uses a deterministic synthetic batch (core/quant.py).  Unused —
+        # and free — when no layer resolves to int8.
+        self.calibration = calibration
         # Ownership decides persistence: a planner we created is ours to
         # save; a caller-supplied (possibly shared) planner keeps its own
         # persistence discipline — compiling must not rewrite its cache
@@ -145,6 +150,7 @@ class CompiledCNN(CompiledModel):
             self._executors[b] = NetworkExecutor(
                 netplan, self.params, interpret=self.options.interpret,
                 devices=devices, pretransform=self.options.pretransform,
+                calibration=self.calibration,
             )
             # Persistence stays with the *burst*, not the bucket: __init__,
             # run(), and the serving engine call save_plans() once after
@@ -171,7 +177,9 @@ class CompiledCNN(CompiledModel):
         """Jitted whole-network inference on an (B, H, W, C) batch."""
         import jax.numpy as jnp
 
-        x = jnp.asarray(x, _jnp_dtype(self.options.dtype))
+        # input_dtype, not dtype: under int8 the batch stays fp32 and is
+        # quantized per layer inside the executor.
+        x = jnp.asarray(x, _jnp_dtype(self.options.input_dtype))
         if x.ndim != 4:
             raise ValueError(
                 f"run() expects (B, H, W, C), got shape {tuple(x.shape)}"
@@ -208,6 +216,7 @@ class CompiledCNN(CompiledModel):
                 "index": s.index,
                 "algorithm": s.plan.algorithm.value,
                 "impl": s.plan.impl,
+                "dtype": s.plan.dtype,
                 "kernel": getattr(s.layer, "kernel", None),
                 "stride": getattr(s.layer, "stride", None),
                 "in_hw": list(s.in_hw),
@@ -307,6 +316,7 @@ def compile(  # noqa: A001 - deliberate: repro.compile is the public verb
     name: Optional[str] = None,
     planner=None,
     devices: Optional[Sequence[Any]] = None,
+    calibration: Optional[Any] = None,
 ) -> CompiledModel:
     """The single public entry point: plan → prepare → jit, once.
 
@@ -316,13 +326,18 @@ def compile(  # noqa: A001 - deliberate: repro.compile is the public verb
     (pure-JAX impl, cost-model planning, persistent cache).  ``planner``
     and ``devices`` are runtime resources (not serialized): pass a shared
     Planner to pool caches across compilations, or an explicit device list
-    to pin the batch mesh.
+    to pin the batch mesh.  ``calibration`` is an optional fp32 batch used
+    to calibrate int8 activation scales when ``options.dtype == 'int8'``
+    (None = deterministic synthetic batch); ignored otherwise.
     """
     m = as_model(model, input_hw=input_hw, in_channels=in_channels, name=name)
     opts = options if options is not None else ExecutionOptions()
     if is_lm_config(m):
         return CompiledLM(m, params, opts)
-    return CompiledCNN(m, params, opts, planner=planner, devices=devices)
+    return CompiledCNN(
+        m, params, opts, planner=planner, devices=devices,
+        calibration=calibration,
+    )
 
 
 def load(

@@ -18,6 +18,7 @@ from repro.core.planner import DEFAULT_CACHE_PATH, _dtype_name
 
 _IMPLS = ("jax", "pallas")
 _MODES = ("cost", "measure")
+_DTYPES = ("float32", "bfloat16", "float16", "int8")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -45,7 +46,13 @@ class ExecutionOptions:
       buckets         the serving bucket ladder (``CompiledModel.serve``).
       shard_batch     shard the batch over all visible devices when the
                       batch divides the device count (shard_map mesh).
-      dtype           activation dtype name ('float32', 'bfloat16', ...).
+      dtype           execution dtype name ('float32', 'bfloat16', 'int8').
+                      'int8' requests quantized inference: the planner
+                      resolves it per layer (a layer where int8 does not
+                      win stays fp32), weights are quantized offline with
+                      per-output-channel scales, and inputs stay fp32
+                      (see ``input_dtype``) — activations are quantized at
+                      each int8 layer's entry.
     """
 
     impl: str = "jax"
@@ -79,6 +86,21 @@ class ExecutionOptions:
             self, "buckets", tuple(sorted({int(b) for b in self.buckets}))
         )
         object.__setattr__(self, "dtype", _dtype_name(self.dtype))
+        if self.dtype not in _DTYPES:
+            raise ValueError(
+                f"dtype must be one of {_DTYPES}, got {self.dtype!r}"
+            )
+
+    @property
+    def input_dtype(self) -> str:
+        """The dtype ``run()``/serving cast incoming batches to.
+
+        int8 is an *internal* execution precision: callers hand in fp32
+        images and quantization happens per layer against calibrated
+        scales, so the input-facing dtype stays float32.  Casting the
+        input batch itself to int8 would destroy it.
+        """
+        return "float32" if self.dtype == "int8" else self.dtype
 
     def replace(self, **changes: Any) -> "ExecutionOptions":
         return dataclasses.replace(self, **changes)

@@ -117,14 +117,19 @@ def predict_conv_time(
     VMEM, ``winograd_fused=True``), or the 3-pass pipeline's traffic with the
     V/M HBM round-trips (``winograd_fused=False``).  Activation terms scale
     with ``batch``; weight terms do not.
+
+    Itemsize-aware: ``dtype_bytes`` prices the operand traffic and picks the
+    fp32/bf16/int8 MXU peak; the output write is priced separately because
+    the int8 kernels dequantize in the epilogue and write fp32.
     """
     from repro.core.conv_spec import ConvAlgorithm
+    from repro.core.vmem_model import im2col_gemm_traffic_bytes, peak_flops
     from repro.core.winograd import winograd_flops
 
     oh, ow = spec.out_hw(h, w)
     cin, cout = spec.in_channels, spec.out_channels
     kh, kw = spec.kernel_size
-    peak = hw.peak_flops_fp32 if dtype_bytes == 4 else hw.peak_flops_bf16
+    peak = peak_flops(hw, dtype_bytes)
     bw = hw.hbm_bandwidth
     if algorithm is ConvAlgorithm.WINOGRAD:
         from repro.core.vmem_model import winograd_traffic_bytes
@@ -135,10 +140,10 @@ def predict_conv_time(
         )
         return max(batch * fl["winograd_flops"] / peak, wino_bytes / bw)
     # direct-1x1 and im2col share the GEMM roofline; direct just has K = Cin.
-    taps = kh * kw
-    gemm_bytes = dtype_bytes * (batch * oh * ow * taps * cin + taps * cin * cout
-                                + batch * oh * ow * cout)
-    flops = 2.0 * batch * oh * ow * taps * cin * cout
+    gemm_bytes = im2col_gemm_traffic_bytes(
+        oh, ow, cin, cout, kh, kw, batch=batch, dtype_bytes=dtype_bytes
+    )
+    flops = 2.0 * batch * oh * ow * kh * kw * cin * cout
     return max(flops / peak, gemm_bytes / bw)
 
 

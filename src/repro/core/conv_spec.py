@@ -82,10 +82,18 @@ class Epilogue:
     ``bias`` is a traced (out_channels,) vector or None; ``activation`` is a
     static kind ('linear' | 'relu' | 'leaky') so jitted kernel wrappers can
     specialize on it.
+
+    ``scale`` extends the same fused write-back to int8 dequantization: a
+    per-output-channel (O,) vector multiplied into the raw accumulator
+    *before* the bias add, so y = act(acc * scale + bias).  For int8 convs
+    the accumulator is int32 and ``scale`` carries the folded
+    activation x weight quantization scales (core/quant.py); for fp32 convs
+    it stays None and the epilogue is unchanged.
     """
 
     bias: Optional[Any] = None      # (O,) jnp vector, traced through jit
     activation: str = "linear"      # linear | relu | leaky
+    scale: Optional[Any] = None     # (O,) dequant row, traced through jit
 
 
 def apply_activation(x, kind: str):
@@ -102,9 +110,13 @@ def apply_activation(x, kind: str):
 
 
 def apply_epilogue(y, epilogue: Optional[Epilogue]):
-    """Reference epilogue: y + bias, then activation (pure jnp)."""
+    """Reference epilogue: y * scale + bias, then activation (pure jnp)."""
     if epilogue is None:
         return y
+    if epilogue.scale is not None:
+        import jax.numpy as jnp
+
+        y = y.astype(jnp.float32) * epilogue.scale
     if epilogue.bias is not None:
         y = y + epilogue.bias
     return apply_activation(y, epilogue.activation)

@@ -536,6 +536,7 @@ def prepare_net_params(
     netplan: NetworkPlan,
     params: Sequence[Dict],
     pretransform: bool = False,
+    calibration: Optional[jnp.ndarray] = None,
 ) -> List[Dict]:
     """Offline parameter preparation for a NetworkPlan.
 
@@ -547,17 +548,64 @@ def prepare_net_params(
     transformed are exactly ``pretransform_flags(netplan, pretransform)``;
     pass those flags to ``run_network`` so execution routes the transformed
     weights explicitly.
+
+    Under an int8 network plan the steps whose ConvPlan resolved to
+    ``dtype == 'int8'`` are additionally quantized offline (core/quant.py):
+    an fp32 oracle walk over ``calibration`` (a sample input batch; a
+    deterministic synthetic batch when None) yields per-input-channel
+    activation scales, which are folded into the weights before
+    per-output-channel int8 weight quantization.  Such a step's prepared
+    entry carries ``w`` (int8), ``b`` (fp32), ``w_scale`` (the fused dequant
+    row) and ``x_scale`` (the entry quantization scales, padded with ones so
+    zero-padded channels quantize to 0 and the layout-elision invariant
+    act(0 * scale + 0) = 0 survives quantization).
     """
     from repro.models.cnn import fold_batchnorm
 
     flags = pretransform_flags(netplan, pretransform)
     params = fold_batchnorm(params, [s.layer for s in netplan.steps])
+    int8_steps = {
+        s.index
+        for s in netplan.steps
+        if s.layer.kind == "conv" and s.plan is not None
+        and s.plan.dtype == "int8"
+    }
+    act_scales: Dict[int, jnp.ndarray] = {}
+    if int8_steps:
+        from repro.core.quant import (
+            calibrate_activation_scales,
+            default_calibration_batch,
+        )
+
+        if calibration is None:
+            calibration = default_calibration_batch(
+                *netplan.input_hw, netplan.in_channels
+            )
+        act_scales = calibrate_activation_scales(netplan, params, calibration)
     out: List[Dict] = []
     for s, p, pre in zip(netplan.steps, params, flags):
         if s.layer.kind != "conv":
             out.append(p)
             continue
         w, b = p["w"], p["b"]
+        if s.index in int8_steps:
+            from repro.core.quant import quantize_conv_weights
+
+            assert not pre, "int8 steps never carry the Winograd transform"
+            x_scale = act_scales[s.index]
+            w, w_scale = quantize_conv_weights(w, x_scale)
+            cin_pad = s.in_layout.phys_c - w.shape[2]
+            o_pad = s.out_layout.phys_c - w.shape[3]
+            if cin_pad or o_pad:
+                w = jnp.pad(w, ((0, 0), (0, 0), (0, cin_pad), (0, o_pad)))
+                b = jnp.pad(b, (0, o_pad))
+                w_scale = jnp.pad(w_scale, (0, o_pad))
+            if cin_pad:
+                # Ones, not zeros: the entry quantization divides by these.
+                x_scale = jnp.pad(x_scale, (0, cin_pad), constant_values=1.0)
+            out.append({"w": w, "b": b, "w_scale": w_scale,
+                        "x_scale": x_scale})
+            continue
         cin_pad = s.in_layout.phys_c - w.shape[2]
         o_pad = s.out_layout.phys_c - w.shape[3]
         if cin_pad or o_pad:
@@ -615,7 +663,20 @@ def run_network(
         if l.kind == "conv":
             p = params[s.index]
             cur = _align_channels(cur, s.in_layout.phys_c)
-            epi = Epilogue(bias=p["b"], activation=l.activation)
+            quantized = "w_scale" in p
+            if quantized:
+                # int8 step (prepare_net_params quantized it offline): the
+                # activation re-quantizes at entry with the static
+                # calibrated scales, the kernel accumulates int8 x int8 in
+                # int32, and the fused epilogue dequantizes via w_scale —
+                # inter-layer activations stay fp32.
+                from repro.core.quant import quantize_activation
+
+                cur = quantize_activation(cur, p["x_scale"])
+                epi = Epilogue(bias=p["b"], activation=l.activation,
+                               scale=p["w_scale"])
+            else:
+                epi = Epilogue(bias=p["b"], activation=l.activation)
             eff_impl = s.plan.impl if s.plan is not None else netplan.impl
             if pretransformed is not None:
                 pre = bool(pretransformed[s.index])
@@ -634,6 +695,16 @@ def run_network(
                     plan=s.plan, epilogue=epi,
                     in_layout=s.in_layout, out_layout=s.out_layout,
                     pretransformed=pre,
+                )
+            elif quantized:
+                # Pure-jnp int8 reference: the same integer products in
+                # fp32 (exact for int8 operands; accumulated rounding is
+                # orders below the quantization noise), dequantized by the
+                # shared epilogue.
+                cur = conv2d(
+                    cur.astype(jnp.float32), p["w"].astype(jnp.float32),
+                    s.spec, impl=eff_impl, interpret=interpret,
+                    plan=s.plan, epilogue=epi, pretransformed=pre,
                 )
             else:
                 cur = conv2d(
@@ -687,11 +758,13 @@ class NetworkExecutor:
         devices: Optional[Sequence[Any]] = None,
         pretransform: bool = True,
         prepared: bool = False,
+        calibration: Optional[jnp.ndarray] = None,
     ):
         self.netplan = netplan
         self.params = (
             list(params) if prepared
-            else prepare_net_params(netplan, params, pretransform=pretransform)
+            else prepare_net_params(netplan, params, pretransform=pretransform,
+                                    calibration=calibration)
         )
         # The explicit flag contract: which conv weights carry the offline
         # Winograd transform.  With ``prepared=True`` the caller vouches the

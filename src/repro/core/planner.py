@@ -41,15 +41,17 @@ from repro.core.vmem_model import BlockConfig, GemmShape, autotune_gemm
 from repro.hw import V5E, ChipSpec
 from repro.util import ceil_to
 
-# v4: the cache gains a "networks" section — whole-network entries (written
-# by core/netplan.plan_network, keyed by a layer-table digest + the same
-# batch/chip/dtype/impl/policy fields as plan keys) recording the per-layer
-# plans *after* network-level adjustment (row tiles snapped to divisors of
-# OH) plus the inter-layer layout-elision decisions, so a warm process
-# rebuilds a NetworkPlan with zero re-tunes and zero re-derivation.  im2col
-# (toh, bc, bo) tuples are now budgeted against the full per-program
-# footprint (weight block + bias row included); v3 caches are invalidated.
-PLAN_CACHE_VERSION = 4
+# v5: plans carry a per-layer ``dtype`` — the *execution* precision the
+# tuner resolved, which under an int8 request can legitimately be float32
+# (the quantization policy keeps a layer fp32 when the modeled traffic win
+# is below threshold or the Winograd error budget fails).  Traffic/footprint
+# accounting became itemsize-aware (fp32 output writes under int8 operands),
+# shifting modeled times and block tuples, so v4 caches are invalidated.
+# v4 added the "networks" section — whole-network entries (written by
+# core/netplan.plan_network) recording per-layer plans after network-level
+# adjustment plus the inter-layer layout-elision decisions, so a warm
+# process rebuilds a NetworkPlan with zero re-tunes.
+PLAN_CACHE_VERSION = 5
 
 # Default on-disk location (overridable per Planner and via environment).
 DEFAULT_CACHE_PATH = os.environ.get(
@@ -78,6 +80,9 @@ class ConvPlan:
     fused_epilogue: bool = False        # bias+activation fused in the kernel
     winograd_fused: bool = False        # single-pass Winograd megakernel
                                         # (vs the 3-pass V/M-via-HBM pipeline)
+    dtype: str = "float32"              # resolved execution precision; under
+                                        # an int8 request this may stay
+                                        # 'float32' (quantization policy)
 
     def to_json(self) -> Dict[str, Any]:
         return {
@@ -89,6 +94,7 @@ class ConvPlan:
             "source": self.source,
             "fused_epilogue": self.fused_epilogue,
             "winograd_fused": self.winograd_fused,
+            "dtype": self.dtype,
         }
 
     @classmethod
@@ -102,6 +108,7 @@ class ConvPlan:
             source=d.get("source", "cost_model"),
             fused_epilogue=bool(d.get("fused_epilogue", False)),
             winograd_fused=bool(d.get("winograd_fused", False)),
+            dtype=d.get("dtype", "float32"),
         )
 
 
@@ -340,7 +347,12 @@ class Planner:
             self.stats["hits"] += 1
             return cached
         self.stats["tunes"] += 1
-        if self.mode == "measure":
+        if _dtype_name(dtype) == "int8":
+            # Quantization is a *policy* decision, not a measurement: the
+            # accuracy budget and the traffic threshold come from the model
+            # either way, so measure mode delegates too.
+            plan = self._tune_int8(spec, h, w, batch)
+        elif self.mode == "measure":
             plan = self._tune_measured(spec, h, w, batch, dtype)
         else:
             plan = self._tune_cost_model(spec, h, w, batch, dtype)
@@ -456,6 +468,62 @@ class Planner:
             source="cost_model",
             fused_epilogue=self.fuse_epilogue,
             winograd_fused=wf,
+            dtype=_dtype_name(dtype),
+        )
+
+    def _tune_int8(self, spec: ConvSpec, h: int, w: int, batch: int) -> ConvPlan:
+        """Per-layer int8-vs-fp32 decision under an int8 request.
+
+        A layer quantizes only when both policy gates pass (core/quant.py):
+
+          1. the modeled int8 im2col/direct GEMM HBM bytes are at most half
+             its fp32 bytes (``int8_worthwhile``) — otherwise the bytes win
+             does not pay for the quantization noise (e.g. the cin=3 stem);
+          2. the int8 candidate's modeled time actually beats the fp32 plan
+             that would otherwise run — an fp32 Winograd layer genuinely
+             competes with int8 im2col (the 64/9x weight-traffic inflation
+             vs the 4x operand shrink), so the roofline decides.
+
+        Winograd itself is never an int8 candidate unless the F(6, 3)
+        transform-stage error budget holds (``winograd_int8_budget_ok`` —
+        it does not), so an int8 3x3 layer runs im2col+GEMM.  The returned
+        plan's ``dtype`` records the resolved precision; the executor
+        quantizes exactly the layers whose plan says 'int8'.
+        """
+        from repro.core.codesign import predict_conv_time
+        from repro.core.quant import int8_worthwhile, winograd_int8_budget_ok
+
+        fp32_plan = self._tune_cost_model(spec, h, w, batch, "float32")
+        if not int8_worthwhile(spec, h, w, batch):
+            return fp32_plan
+        if spec.kernel_size == (1, 1) and spec.stride == (1, 1):
+            algo = ConvAlgorithm.DIRECT
+        elif (
+            fp32_plan.algorithm is ConvAlgorithm.WINOGRAD
+            and winograd_int8_budget_ok()
+        ):
+            algo = ConvAlgorithm.WINOGRAD
+        else:
+            algo = ConvAlgorithm.IM2COL_GEMM
+        wf = fp32_plan.winograd_fused if algo is ConvAlgorithm.WINOGRAD else False
+        t_int8 = predict_conv_time(
+            spec, h, w, algo, self.hw, 1, batch, winograd_fused=wf
+        )
+        if t_int8 >= fp32_plan.predicted_s:
+            return fp32_plan
+        cfg, kernel_blocks = self._resolve_blocks(
+            spec, algo, h, w, batch, 1, winograd_fused=wf
+        )
+        return ConvPlan(
+            algorithm=algo,
+            impl=self.impl,
+            block=cfg,
+            kernel_blocks=kernel_blocks,
+            predicted_s=t_int8,
+            source="cost_model",
+            fused_epilogue=self.fuse_epilogue,
+            winograd_fused=wf,
+            dtype="int8",
         )
 
     def _tune_measured(
@@ -523,6 +591,7 @@ class Planner:
                 source="measured",
                 fused_epilogue=self.fuse_epilogue,
                 winograd_fused=wf,
+                dtype=_dtype_name(dtype),
             )
             fn = jax.jit(
                 lambda a, b, p=candidate: conv2d(a, b, spec, plan=p,

@@ -73,6 +73,19 @@ class GemmEstimate:
         return "compute" if self.compute_s >= self.memory_s else "memory"
 
 
+def peak_flops(hw: ChipSpec, dtype_bytes: int) -> float:
+    """MXU peak for a given element size: fp32 / bf16 / int8 ladder.
+
+    The itemsize is the model's dtype proxy everywhere else, so it is here
+    too: 4 → fp32, 2 → bf16, 1 → int8 (2x the bf16 rate on v5e-class MXUs).
+    """
+    if dtype_bytes >= 4:
+        return hw.peak_flops_fp32
+    if dtype_bytes == 1:
+        return getattr(hw, "peak_flops_int8", 2 * hw.peak_flops_bf16)
+    return hw.peak_flops_bf16
+
+
 def predict_gemm(
     shape: GemmShape,
     block: BlockConfig,
@@ -89,14 +102,16 @@ def predict_gemm(
     mp = ceil_to(shape.m, max(block.bm, hw.sublanes))
     np_ = ceil_to(shape.n, max(block.bn, hw.lane_width))
     kp = ceil_to(shape.k, block.bk)
-    peak = (hw.peak_flops_fp32 if dtype_bytes == 4 else hw.peak_flops_bf16) * lanes
+    peak = peak_flops(hw, dtype_bytes) * lanes
     compute_s = 2.0 * mp * np_ * kp / peak
     grid = (mp // block.bm) * (np_ // block.bn) * (kp // block.bk)
+    # int8 GEMMs accumulate in int32 and write fp32 (the fused dequant
+    # epilogue), so the C term keeps the 4-byte itemsize.
+    out_bytes = 4 if dtype_bytes == 1 else dtype_bytes
     traffic = dtype_bytes * (
         shape.m * shape.k * (np_ // block.bn)
         + shape.k * shape.n * (mp // block.bm)
-        + 2 * shape.m * shape.n
-    )
+    ) + out_bytes * 2 * shape.m * shape.n
     return GemmEstimate(
         compute_s=compute_s,
         memory_s=traffic / hw.hbm_bandwidth,
@@ -183,10 +198,35 @@ def winograd_traffic_bytes(
     return dtype_bytes * (x_bytes + v_bytes + u_bytes + m_bytes + y_bytes)
 
 
+def im2col_gemm_traffic_bytes(
+    oh: int, ow: int, cin: int, cout: int, kh: int = 3, kw: int = 3,
+    batch: int = 1, dtype_bytes: int = 4, out_dtype_bytes: Optional[int] = None,
+) -> int:
+    """Ideal-reuse HBM traffic of one im2col+GEMM conv layer.
+
+    The three terms of the paper's Table-IV GEMM, itemsize-aware: the
+    logical patch matrix read (batch*oh*ow x kh*kw*cin), the weight read,
+    and the output write.  Input/weight elements move at ``dtype_bytes``;
+    the output moves at ``out_dtype_bytes`` (defaults to 4 for int8 inputs —
+    the kernel's dequant epilogue writes fp32 — and to ``dtype_bytes``
+    otherwise).  This is the quantity the int8 policy's ≤ 0.5x fp32 traffic
+    gate compares (core/quant.py::int8_traffic_ratio).
+    """
+    if out_dtype_bytes is None:
+        out_dtype_bytes = 4 if dtype_bytes == 1 else dtype_bytes
+    rows = batch * oh * ow
+    taps = kh * kw
+    return (
+        dtype_bytes * (rows * taps * cin + taps * cin * cout)
+        + out_dtype_bytes * rows * cout
+    )
+
+
 def im2col_kernel_vmem_bytes(
     hp: int, wp: int, toh: int, ow: int, bc: int, bo: int,
     kh: int = 3, kw: int = 3, dtype_bytes: int = 4,
     double_buffer: bool = True, bias: bool = True,
+    out_dtype_bytes: Optional[int] = None,
 ) -> int:
     """Per-program VMEM footprint of the fused im2col+GEMM conv kernel.
 
@@ -199,14 +239,21 @@ def im2col_kernel_vmem_bytes(
     (quadratic in the channel blocks) and the bias row silently overflowed
     the budget for deep layers, exactly the bug the Winograd pick_blocks
     had before PR 3.
+
+    ``out_dtype_bytes`` sizes the output block separately from the operands:
+    an int8 conv reads int8 slabs/weights but writes fp32 (dequant
+    epilogue), and its bias/scale rows and accumulator scratch stay
+    fp32/int32 (4-byte) regardless of the operand itemsize.
     """
+    if out_dtype_bytes is None:
+        out_dtype_bytes = 4 if dtype_bytes == 1 else dtype_bytes
     buf = 2 if double_buffer else 1
     return (
-        buf * hp * wp * bc * dtype_bytes          # input channel slab
-        + buf * kh * kw * bc * bo * dtype_bytes   # weight block
-        + (bo * dtype_bytes if bias else 0)       # bias row
-        + buf * toh * ow * bo * dtype_bytes       # output block
-        + toh * ow * bo * 4                       # fp32 accumulator scratch
+        buf * hp * wp * bc * dtype_bytes            # input channel slab
+        + buf * kh * kw * bc * bo * dtype_bytes     # weight block
+        + (bo * 4 if bias else 0)                   # fp32 bias/scale row
+        + buf * toh * ow * bo * out_dtype_bytes     # output block
+        + toh * ow * bo * 4                         # fp32/int32 acc scratch
     )
 
 
@@ -272,7 +319,7 @@ def predict_winograd(
     cp = ceil_to(cin, bc)
     op = ceil_to(cout, bo)
     nt, nc, no = tp // bt, cp // bc, op // bo
-    peak = hw.peak_flops_fp32 if dtype_bytes == 4 else hw.peak_flops_bf16
+    peak = peak_flops(hw, dtype_bytes)
     # The tuple multiply dominates compute: 64 GEMMs of (tp, cp) x (cp, op).
     compute_s = 2.0 * 64 * tp * cp * op / peak
     x_bytes = tiles * 64 * cin * dtype_bytes

@@ -15,6 +15,7 @@ class ChipSpec:
     name: str = "tpu_v5e"
     peak_flops_bf16: float = 197e12      # FLOP/s per chip (given)
     peak_flops_fp32: float = 98.5e12     # MXU fp32 ~ half of bf16
+    peak_flops_int8: float = 394e12      # int8 MAC rate ~ 2x bf16
     hbm_bandwidth: float = 819e9         # B/s per chip (given)
     hbm_bytes: int = 16 * 1024**3        # 16 GiB HBM
     ici_link_bandwidth: float = 50e9     # B/s per link (given)

@@ -40,11 +40,15 @@ def conv2d_pallas(
 ) -> jnp.ndarray:
     """x (B,H,W,C), w (kh,kw,C,O) -> (B,OH,OW,O) via Pallas kernels.
 
-    ``epilogue`` (bias + activation) is forwarded into each kernel family's
-    output stage — no separate elementwise pass over HBM.  ``pretransformed``
-    declares offline Winograd-transformed weights ((8, 8, C, O)); it is an
-    explicit contract, never inferred from the weight shape (raw kh == 8
-    kernels share that shape).
+    ``epilogue`` (bias + activation, plus the int8 dequant ``scale``) is
+    forwarded into each kernel family's output stage — no separate
+    elementwise pass over HBM.  An int8 ``x`` requires an epilogue scale and
+    never routes to Winograd: the F(6, 3) transform amplifies the data range
+    past the int8 error budget (core/quant.py::winograd_int8_budget_ok), so
+    the planner rewrites such layers to im2col/direct or keeps them fp32.
+    ``pretransformed`` declares offline Winograd-transformed weights
+    ((8, 8, C, O)); it is an explicit contract, never inferred from the
+    weight shape (raw kh == 8 kernels share that shape).
     """
     import jax
 
@@ -53,11 +57,17 @@ def conv2d_pallas(
     blocks = plan.kernel_blocks if plan is not None else None
     bias = epilogue.bias if epilogue is not None else None
     activation = epilogue.activation if epilogue is not None else "linear"
+    scale = epilogue.scale if epilogue is not None else None
+    if x.dtype == jnp.int8:
+        assert scale is not None, "int8 conv requires an epilogue dequant scale"
+        assert algo is not ConvAlgorithm.WINOGRAD, (
+            "int8 never routes to Winograd (transform-stage error budget)"
+        )
 
     if in_layout is not None or out_layout is not None:
         return _conv2d_pallas_laidout(
             x, w, spec, algo, blocks, interpret, bias, activation,
-            in_layout, out_layout, plan, pretransformed,
+            in_layout, out_layout, plan, pretransformed, scale,
         )
 
     if algo is ConvAlgorithm.DIRECT:
@@ -80,6 +90,7 @@ def conv2d_pallas(
             interpret=interpret,
             bias=bias,
             activation=activation,
+            scale=scale,
         )
         return out.reshape(b, oh, ow, spec.out_channels)
 
@@ -99,7 +110,7 @@ def conv2d_pallas(
 
     return conv2d_pallas_im2col(
         x, w, spec, blocks=blocks, interpret=interpret,
-        bias=bias, activation=activation,
+        bias=bias, activation=activation, scale=scale,
     )
 
 
@@ -116,6 +127,7 @@ def _conv2d_pallas_laidout(
     out_layout: Optional["Layout"],
     plan: Optional["ConvPlan"],
     pretransformed: bool = False,
+    scale: Optional[jnp.ndarray] = None,
 ) -> jnp.ndarray:
     """Executor path: channels pre-padded in, channel crop deferred out.
 
@@ -159,9 +171,10 @@ def _conv2d_pallas_laidout(
             )
             blocks = (cfg.bm, cfg.bn, cfg.bk)
         a_p, b_p, bias_p = pad_gemm_operands(a, w2, blocks, bias=bias)
+        scale_p = pad_bias_row(scale, b_p.shape[1])
         out = matmul_padded_call(
             a_p, b_p, blocks, interpret=interpret,
-            bias_p=bias_p, activation=activation,
+            bias_p=bias_p, activation=activation, scale_p=scale_p,
         )
         if out.shape != (m, o_keep):
             out = out[:m, :o_keep]
@@ -173,6 +186,8 @@ def _conv2d_pallas_laidout(
             conv2d_winograd_padded_call,
             pick_blocks,
         )
+
+        assert scale is None, "int8 never routes to Winograd"
 
         b, h, ww, cp = x.shape
         oh, ow = spec.out_hw(h, ww)
@@ -229,9 +244,10 @@ def _conv2d_pallas_laidout(
         if op != o_phys else w
     )
     bias_p = pad_bias_row(bias, op)
+    scale_p = pad_bias_row(scale, op)
     out = conv2d_im2col_padded_call(
         x_p, w_p, spec, oh, ow, blocks, interpret=interpret,
-        bias_p=bias_p, activation=activation,
+        bias_p=bias_p, activation=activation, scale_p=scale_p,
     )
     if out.shape[1] != oh:
         out = out[:, :oh]

@@ -60,12 +60,14 @@ def matmul_padded_call(
     interpret: bool = False,
     bias_p: Optional[jnp.ndarray] = None,
     activation: str = "linear",
+    scale_p: Optional[jnp.ndarray] = None,
 ) -> jnp.ndarray:
     """The kernel call on block-aligned operands: no padding, no cropping.
 
     a_p (Mp, Kp), b_p (Kp, Np) with Mp % bm == Kp % bk == Np % bn == 0;
-    bias_p (1, Np) or None.  Returns the raw (Mp, Np) kernel output — the
-    caller owns any crop back to logical dims.
+    bias_p (1, Np) or None; scale_p (1, Np) selects the int8 dequant path.
+    Returns the raw (Mp, Np) kernel output — the caller owns any crop back
+    to logical dims.
     """
     bm, bn, bk = block
     if variant == "3loop":
@@ -73,6 +75,7 @@ def matmul_padded_call(
     return matmul_pallas(
         a_p, b_p, bm, bn, bk, variant=variant, out_dtype=out_dtype,
         interpret=interpret, bias=bias_p, activation=activation,
+        scale=scale_p,
     )
 
 
@@ -89,6 +92,7 @@ def blocked_matmul(
     interpret: bool = False,
     bias: Optional[jnp.ndarray] = None,
     activation: str = "linear",
+    scale: Optional[jnp.ndarray] = None,
 ) -> jnp.ndarray:
     """C = act(A @ B + bias) with BLIS-like VMEM blocking.
 
@@ -99,6 +103,8 @@ def blocked_matmul(
         panel per output block).
       bias: optional (N,) vector fused into the kernel's output stage.
       activation: 'linear' | 'relu' | 'leaky', fused likewise.
+      scale: optional (N,) dequant row — int8 a/b, int32 accumulation,
+        act(acc * scale + bias) epilogue writing fp32.
     """
     m, k = a.shape
     _, n = b.shape
@@ -106,8 +112,10 @@ def blocked_matmul(
         cfg = default_block(m, n, k, jnp.dtype(a.dtype).itemsize)
         block = (cfg.bm, cfg.bn, cfg.bk)
     a_p, b_p, bias_p = pad_gemm_operands(a, b, block, bias=bias)
+    scale_p = pad_bias_row(scale, b_p.shape[1])
     out = matmul_padded_call(
         a_p, b_p, block, variant=variant, out_dtype=out_dtype,
         interpret=interpret, bias_p=bias_p, activation=activation,
+        scale_p=scale_p,
     )
     return out[:m, :n]

@@ -94,6 +94,71 @@ def _conv_bias_kernel(
         o_ref[...] = apply_activation(out, activation).astype(o_ref.dtype)[None]
 
 
+def _accumulate_taps_q8(x_ref, w_ref, o_ref, acc_ref, *, kh, kw, sh, sw,
+                        toh, ow):
+    """int8 K-reduction body: same tap unroll as ``_accumulate_taps`` but
+    int8 patch x int8 weight block products accumulate in an int32 VMEM
+    scratch (the MXU's native quantized accumulation width)."""
+    r = pl.program_id(1)
+
+    @pl.when(pl.program_id(3) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    bc = x_ref.shape[-1]
+    bo = o_ref.shape[-1]
+    row0 = r * toh * sh
+    acc = acc_ref[...].reshape(toh * ow, bo)
+    for di in range(kh):
+        for dj in range(kw):
+            slab = x_ref[
+                0,
+                pl.ds(row0 + di, (toh - 1) * sh + 1),
+                pl.ds(dj, (ow - 1) * sw + 1),
+                :,
+            ]
+            patch = slab[::sh, ::sw, :].reshape(toh * ow, bc)
+            acc += jnp.dot(
+                patch, w_ref[di, dj], preferred_element_type=jnp.int32
+            )
+    acc_ref[...] = acc.reshape(toh, ow, bo)
+
+
+def _conv_q8_kernel(
+    x_ref, w_ref, scale_ref, o_ref, acc_ref, *,
+    kh: int, kw: int, sh: int, sw: int, toh: int, ow: int, activation: str,
+):
+    """int8 conv: fused dequant epilogue act(acc * scale) on the int32
+    accumulator; ``scale_ref`` is the (1, bo) per-out-channel row of folded
+    activation x weight quantization scales (core/quant.py)."""
+    _accumulate_taps_q8(x_ref, w_ref, o_ref, acc_ref,
+                        kh=kh, kw=kw, sh=sh, sw=sw, toh=toh, ow=ow)
+
+    @pl.when(pl.program_id(3) == pl.num_programs(3) - 1)
+    def _done():
+        out = acc_ref[...].astype(jnp.float32) * scale_ref[...].astype(
+            jnp.float32
+        )
+        o_ref[...] = apply_activation(out, activation).astype(o_ref.dtype)[None]
+
+
+def _conv_q8_bias_kernel(
+    x_ref, w_ref, scale_ref, bias_ref, o_ref, acc_ref, *,
+    kh: int, kw: int, sh: int, sw: int, toh: int, ow: int, activation: str,
+):
+    """int8 conv with the full fused epilogue: act(acc * scale + bias)."""
+    _accumulate_taps_q8(x_ref, w_ref, o_ref, acc_ref,
+                        kh=kh, kw=kw, sh=sh, sw=sw, toh=toh, ow=ow)
+
+    @pl.when(pl.program_id(3) == pl.num_programs(3) - 1)
+    def _done():
+        out = acc_ref[...].astype(jnp.float32) * scale_ref[...].astype(
+            jnp.float32
+        )
+        out = out + bias_ref[...].astype(jnp.float32)
+        o_ref[...] = apply_activation(out, activation).astype(o_ref.dtype)[None]
+
+
 def conv2d_im2col_gemm_pallas(
     x: jnp.ndarray,  # (B, Hp, Wp, C) already conv-padded, C % bc == 0
     w: jnp.ndarray,  # (kh, kw, C, O), O % bo == 0
@@ -108,6 +173,7 @@ def conv2d_im2col_gemm_pallas(
     interpret: bool = False,
     bias=None,
     activation: str = "linear",
+    scale=None,
 ) -> jnp.ndarray:
     """Run the fused conv kernel.  Returns (B, OHp, OW, O); caller crops.
 
@@ -115,6 +181,10 @@ def conv2d_im2col_gemm_pallas(
     bounds:  Hp >= (OHp-1)*sh + kh with OHp = ceil(oh/toh)*toh, and
     Wp >= (OW-1)*sw + kw.  ``bias`` (1, O) and ``activation`` are the fused
     epilogue, applied once after the full in-channel reduction.
+
+    Passing ``scale`` (1, O) selects the int8 path: ``x``/``w`` must be
+    int8, the accumulator scratch is int32, and the epilogue dequantizes —
+    act(acc * scale + bias) — writing ``out_dtype`` (defaults to fp32).
     """
     b, hp, wp, c = x.shape
     kh, kw, _, o = w.shape
@@ -123,23 +193,31 @@ def conv2d_im2col_gemm_pallas(
     assert wp >= (ow - 1) * sw + kw, (wp, ow, sw, kw)
     assert c % bc == 0 and o % bo == 0
     assert bias is None or bias.shape == (1, o), (o, getattr(bias, "shape", None))
-    out_dtype = out_dtype or x.dtype
+    quantized = scale is not None
+    if quantized:
+        assert x.dtype == jnp.int8 and w.dtype == jnp.int8, (x.dtype, w.dtype)
+        assert scale.shape == (1, o), (o, scale.shape)
+        out_dtype = out_dtype or jnp.float32
+    else:
+        out_dtype = out_dtype or x.dtype
 
     in_specs = [
         pl.BlockSpec((1, hp, wp, bc), lambda bi, r, oc, ic: (bi, 0, 0, ic)),
         pl.BlockSpec((kh, kw, bc, bo), lambda bi, r, oc, ic: (0, 0, ic, oc)),
     ]
-    if bias is not None:
-        kernel = functools.partial(
-            _conv_bias_kernel, kh=kh, kw=kw, sh=sh, sw=sw, toh=toh, ow=ow,
-            activation=activation,
-        )
-        in_specs.append(pl.BlockSpec((1, bo), lambda bi, r, oc, ic: (0, oc)))
+    if quantized:
+        body = _conv_q8_bias_kernel if bias is not None else _conv_q8_kernel
     else:
-        kernel = functools.partial(
-            _conv_kernel, kh=kh, kw=kw, sh=sh, sw=sw, toh=toh, ow=ow,
-            activation=activation,
-        )
+        body = _conv_bias_kernel if bias is not None else _conv_kernel
+    kernel = functools.partial(
+        body, kh=kh, kw=kw, sh=sh, sw=sw, toh=toh, ow=ow,
+        activation=activation,
+    )
+    extras = (() if scale is None else (scale,)) + (
+        () if bias is None else (bias,)
+    )
+    for _ in extras:
+        in_specs.append(pl.BlockSpec((1, bo), lambda bi, r, oc, ic: (0, oc)))
     return pl.pallas_call(
         kernel,
         grid=(b, ohp // toh, o // bo, c // bc),
@@ -148,9 +226,11 @@ def conv2d_im2col_gemm_pallas(
             (1, toh, ow, bo), lambda bi, r, oc, ic: (bi, r, 0, oc)
         ),
         out_shape=jax.ShapeDtypeStruct((b, ohp, ow, o), out_dtype),
-        scratch_shapes=[pltpu.VMEM((toh, ow, bo), jnp.float32)],
+        scratch_shapes=[
+            pltpu.VMEM((toh, ow, bo), jnp.int32 if quantized else jnp.float32)
+        ],
         compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "parallel", "arbitrary")
         ),
         interpret=interpret,
-    )(x, w, *(() if bias is None else (bias,)))
+    )(x, w, *extras)

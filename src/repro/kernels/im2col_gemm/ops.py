@@ -29,6 +29,7 @@ from repro.util import ceil_to, pad_bias_row
 def pick_blocks(
     hp: int, wp: int, c: int, o: int, oh: int, ow: int, dtype_bytes: int = 4,
     vmem_budget: Optional[int] = None, kh: int = 3, kw: int = 3,
+    out_dtype_bytes: Optional[int] = None,
 ) -> Tuple[int, int, int]:
     """(toh, bc, bo): biggest channel slab + row tile fitting the VMEM budget.
 
@@ -50,7 +51,8 @@ def pick_blocks(
 
     def fits() -> bool:
         return im2col_kernel_vmem_bytes(
-            hp, wp, toh, ow, bc, bo, kh, kw, dtype_bytes
+            hp, wp, toh, ow, bc, bo, kh, kw, dtype_bytes,
+            out_dtype_bytes=out_dtype_bytes,
         ) <= budget
 
     while not fits() and bc > 8:
@@ -120,12 +122,14 @@ def conv2d_im2col_padded_call(
     interpret: bool = False,
     bias_p: Optional[jnp.ndarray] = None,
     activation: str = "linear",
+    scale_p: Optional[jnp.ndarray] = None,
 ) -> jnp.ndarray:
     """The kernel call on pre-padded operands: no padding, no cropping.
 
     ``x_p`` must already carry the conv's spatial padding, the trailing
     row/col pad from ``padded_input_hw`` and channels padded to the bc
     multiple; ``w_p``/``bias_p`` must be padded to the same channel blocks.
+    ``scale_p`` (1, Op) selects the int8 dequant path (see kernel.py).
     Returns the raw (B, OHp, OW, Op) kernel output — the caller (public
     wrapper or network executor) owns the row/channel crops.
     """
@@ -134,7 +138,7 @@ def conv2d_im2col_padded_call(
     return conv2d_im2col_gemm_pallas(
         x_p, w_p, sh, sw, oh, ow, min(toh, oh), bc, bo,
         out_dtype=out_dtype, interpret=interpret,
-        bias=bias_p, activation=activation,
+        bias=bias_p, activation=activation, scale=scale_p,
     )
 
 
@@ -151,11 +155,13 @@ def conv2d_pallas_im2col(
     interpret: bool = False,
     bias: Optional[jnp.ndarray] = None,
     activation: str = "linear",
+    scale: Optional[jnp.ndarray] = None,
 ) -> jnp.ndarray:
     """Fused-conv entry point: x (B,H,W,C), w (kh,kw,C,O) -> (B,OH,OW,O).
 
     ``bias`` (O,) and ``activation`` form the fused epilogue, applied inside
-    the kernel's output stage (see kernel.py)."""
+    the kernel's output stage (see kernel.py).  ``scale`` (O,) selects the
+    int8 dequant path: int8 x/w, int32 accumulation, fp32 output."""
     b, h, ww, c = x.shape
     kh, kw, _, o = w.shape
     ph, pw = spec.padding
@@ -166,9 +172,10 @@ def conv2d_pallas_im2col(
         kh=kh, kw=kw,
     )
     x_p, w_p, bias_p = pad_conv_operands(x, w, spec, blocks, bias=bias)
+    scale_p = pad_bias_row(scale, w_p.shape[-1])
     out = conv2d_im2col_padded_call(
         x_p, w_p, spec, oh, ow, blocks,
         out_dtype=out_dtype, interpret=interpret,
-        bias_p=bias_p, activation=activation,
+        bias_p=bias_p, activation=activation, scale_p=scale_p,
     )
     return out[:, :oh, :, :o]

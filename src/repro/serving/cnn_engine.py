@@ -95,6 +95,12 @@ class CNNServingEngine:
         self.in_channels = _compiled.model.in_channels
         self.buckets = buckets
         self.dtype = _compiled.options.dtype
+        # The dtype batches are cast to before entering the executor: under
+        # int8 the images stay fp32 (quantization happens per layer inside
+        # the jitted network against calibrated scales).
+        self.input_dtype = getattr(
+            _compiled.options, "input_dtype", self.dtype
+        )
         # One executor per bucket, all from the same compilation — plans
         # are batch-keyed, so each bucket resolves its own NetworkPlan and
         # network entry; a warm cache file makes a fresh engine re-tune
@@ -163,7 +169,7 @@ class CNNServingEngine:
         self.stats["batches"][bucket] += 1
         out = np.asarray(
             jax.block_until_ready(
-                self._executors[bucket](jnp.asarray(batch, self.dtype))
+                self._executors[bucket](jnp.asarray(batch, self.input_dtype))
             )
         )
         return {r.uid: out[i] for i, r in enumerate(reqs)}

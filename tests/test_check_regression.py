@@ -1,0 +1,100 @@
+"""The benchmark regression gate (benchmarks/check_regression.py): compare
+semantics on synthetic files, plus the committed-baseline contract — a fresh
+predict-only regeneration must match benchmarks/baseline/BENCH_e2e.json.
+"""
+import json
+import os
+
+import pytest
+
+from benchmarks.check_regression import (
+    DEFAULT_PATTERN,
+    compare,
+    load_rows,
+    main,
+    regenerate,
+)
+
+BASELINE = os.path.join(
+    os.path.dirname(__file__), "..", "benchmarks", "baseline",
+    "BENCH_e2e.json",
+)
+
+
+def _rows(**named):
+    return {k: {"name": k, "seconds": v, "derived": ""}
+            for k, v in named.items()}
+
+
+def test_compare_passes_within_tolerance():
+    base = _rows(e2e_m_L00=1.0, e2e_m_predicted_total=2.0, e2e_m_total=9.0)
+    cand = _rows(e2e_m_L00=1.04, e2e_m_predicted_total=1.9, e2e_m_total=90.0)
+    reg, notes = compare(base, cand)
+    assert reg == []          # 4% slower is inside the 5% gate; wall-clock
+    #                           row (no _L / _predicted suffix) is ungated
+
+
+def test_compare_flags_regression_and_missing():
+    base = _rows(e2e_m_L00=1.0, e2e_m_L01=1.0, e2e_m_predicted_total=2.0)
+    cand = _rows(e2e_m_L00=1.2, e2e_m_predicted_total=2.0)
+    reg, _ = compare(base, cand)
+    assert len(reg) == 2
+    assert any("L00" in r and "1.2" in r for r in reg)
+    assert any("L01" in r and "missing" in r for r in reg)
+
+
+def test_compare_improvement_is_notice_not_failure():
+    base = _rows(e2e_m_L00=1.0)
+    cand = _rows(e2e_m_L00=0.5)
+    reg, notes = compare(base, cand)
+    assert reg == []
+    assert len(notes) == 1 and "refresh" in notes[0]
+
+
+def test_compare_empty_gate_fails():
+    reg, _ = compare(_rows(other=1.0), _rows(other=1.0))
+    assert reg and "empty gate" in reg[0]
+
+
+def test_main_exit_codes(tmp_path):
+    base = tmp_path / "base.json"
+    cand = tmp_path / "cand.json"
+    base.write_text(json.dumps({"rows": [
+        {"name": "e2e_m_L00", "seconds": 1.0, "derived": ""}]}))
+    cand.write_text(json.dumps({"rows": [
+        {"name": "e2e_m_L00", "seconds": 1.0, "derived": ""}]}))
+    assert main(["--baseline", str(base), "--candidate", str(cand)]) == 0
+    cand.write_text(json.dumps({"rows": [
+        {"name": "e2e_m_L00", "seconds": 2.0, "derived": ""}]}))
+    assert main(["--baseline", str(base), "--candidate", str(cand)]) == 1
+
+
+def test_committed_baseline_matches_regeneration(tmp_path):
+    """The acceptance gate itself: regenerating the deterministic modeled
+    rows (both paper networks, predict-only) reproduces the committed
+    baseline within tolerance — so any cost-model or planner-policy change
+    that shifts a prediction must refresh benchmarks/baseline/BENCH_e2e.json
+    in the same commit, and CI fails when it does not."""
+    assert os.path.exists(BASELINE), "committed baseline missing"
+    cand_path = regenerate(str(tmp_path / "BENCH_e2e.json"),
+                           cache_path=str(tmp_path / "plans.json"))
+    reg, _ = compare(load_rows(BASELINE), load_rows(cand_path))
+    assert reg == [], reg
+
+
+def test_baseline_gates_int8_rows():
+    """The committed baseline actually covers the int8 path: per-layer int8
+    rows and the int8 predicted totals are present and matched by the
+    default gate pattern."""
+    import re
+
+    rows = load_rows(BASELINE)
+    rx = re.compile(DEFAULT_PATTERN)
+    int8_gated = [n for n in rows if "_int8_" in n and rx.search(n)]
+    assert len(int8_gated) >= 10, int8_gated
+    totals = [n for n in rows if n.endswith("_int8_predicted_total")]
+    assert len(totals) == 2  # vgg16 + yolov3-tiny
+    # And the modeled int8 totals beat fp32 (the point of the path).
+    for t in totals:
+        fp32 = rows[t.replace("_int8", "")]
+        assert rows[t]["seconds"] < fp32["seconds"]

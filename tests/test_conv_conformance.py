@@ -413,6 +413,221 @@ def test_cnn_infer_matches_unfused_forward(model):
     np.testing.assert_allclose(got, ref, rtol=1e-4, atol=1e-4 * scale)
 
 
+# ---------------------------------------------------------------------------
+# Int8 quantized inference vs the fp32 oracle.  The conformance metric is
+# SQNR (signal-to-quantization-noise, dB) rather than allclose: quantization
+# error is by construction larger than fp32 rounding, and the acceptance
+# criterion from the int8 PR is >= 30 dB against the fp32 reference.
+
+
+INT8_SQNR_DB = 30.0
+
+
+def _quantize_case(x, w, bias, activation):
+    """Offline quantization exactly as prepare_net_params performs it:
+    per-input-channel activation scales folded into the weights, then
+    per-output-channel weight scales; returns (xq, wq, epilogue)."""
+    from repro.core.quant import (
+        activation_scales,
+        quantize_activation,
+        quantize_conv_weights,
+    )
+
+    sx = activation_scales(x, axis=(0, 1, 2))
+    xq = quantize_activation(x, sx)
+    wq, ws = quantize_conv_weights(w, sx)
+    return xq, wq, Epilogue(bias=bias, activation=activation, scale=ws)
+
+
+INT8_ALGOS = [ConvAlgorithm.DIRECT, ConvAlgorithm.IM2COL_GEMM]
+
+
+@pytest.mark.parametrize("algo", INT8_ALGOS, ids=lambda a: a.value)
+@pytest.mark.parametrize("stride", [1, 2])
+@pytest.mark.parametrize("pad", [0, 1])
+@pytest.mark.parametrize("k", [1, 3])
+@pytest.mark.parametrize("fused", [False, True], ids=["plain", "epilogue"])
+def test_int8_conv_conformance(algo, stride, pad, k, fused):
+    """The int8 dtype axis of the conformance cross-product: every eligible
+    (algorithm, stride, padding, kernel, epilogue) cell runs the quantized
+    Pallas kernel (int8 operands, int32 accumulation, fused dequant) and
+    must reach >= 30 dB SQNR against conv2d_reference on the same fp32
+    inputs.  Winograd is deliberately absent: int8 never routes there
+    (core/quant.py::winograd_int8_budget_ok)."""
+    from repro.core.quant import sqnr_db
+    from repro.kernels.conv_ops import conv2d_pallas
+
+    if not _eligible(algo, k, stride):
+        pytest.skip(f"{algo.value} ineligible for k={k} s={stride}")
+    spec = ConvSpec(8, 16, (k, k), (stride, stride), (pad, pad),
+                    algorithm=algo)
+    x = _rand((2, 10, 12, 8), seed=k * 100 + stride * 10 + pad)
+    w = _rand((k, k, 8, 16), seed=7) * 0.2
+    bias = _rand((16,), seed=9) * 0.1 if fused else None
+    activation = "leaky" if fused else "linear"
+    ref = apply_epilogue(
+        conv2d_reference(x, w, spec),
+        Epilogue(bias=bias, activation=activation),
+    )
+    xq, wq, epi = _quantize_case(x, w, bias, activation)
+    got = conv2d_pallas(xq, wq, spec, algo, interpret=True, epilogue=epi)
+    assert got.shape == ref.shape, (got.shape, ref.shape)
+    assert got.dtype == jnp.float32
+    q = float(sqnr_db(ref, got))
+    assert q >= INT8_SQNR_DB, f"SQNR {q:.1f} dB < {INT8_SQNR_DB} dB"
+
+
+def test_int8_pure_jnp_matches_pallas_kernel():
+    """The pure-jnp int8 path (fp32 integer math + apply_epilogue dequant)
+    and the Pallas int8 kernel are the same integer computation — they must
+    agree to fp32 rounding, far tighter than either agrees with the
+    oracle."""
+    from repro.core.im2col import conv2d_im2col
+    from repro.kernels.conv_ops import conv2d_pallas
+
+    spec = ConvSpec(8, 16, (3, 3), (1, 1), (1, 1))
+    x = _rand((2, 10, 10, 8), seed=21)
+    w = _rand((3, 3, 8, 16), seed=22) * 0.2
+    bias = _rand((16,), seed=23) * 0.1
+    xq, wq, epi = _quantize_case(x, w, bias, "relu")
+    a = conv2d_pallas(xq, wq, spec, ConvAlgorithm.IM2COL_GEMM,
+                      interpret=True, epilogue=epi)
+    b = conv2d_im2col(
+        xq.astype(jnp.float32), wq.astype(jnp.float32), spec, epilogue=epi
+    )
+    np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5)
+
+
+def test_int8_never_routes_to_winograd():
+    """The dispatcher refuses int8 Winograd outright — the F(6, 3) transform
+    amplification blows the error budget, so reaching that path is a planner
+    bug, not a numerics question."""
+    from repro.kernels.conv_ops import conv2d_pallas
+
+    spec = ConvSpec(8, 16, (3, 3), (1, 1), (1, 1))
+    x = _rand((1, 12, 12, 8), seed=31)
+    w = _rand((3, 3, 8, 16), seed=32)
+    xq, wq, epi = _quantize_case(x, w, None, "linear")
+    with pytest.raises(AssertionError, match="Winograd"):
+        conv2d_pallas(xq, wq, spec, ConvAlgorithm.WINOGRAD,
+                      interpret=True, epilogue=epi)
+
+
+def test_int8_im2col_traffic_at_most_half_of_fp32():
+    """Acceptance: the modeled int8 im2col+GEMM HBM traffic is <= 0.5x fp32
+    (int8 operands, fp32 output writes included) for every layer the
+    planner's traffic gate admits — which is every k>=3 conv past the cin=3
+    entry in both networks.  The gate and the ratio must also agree layer
+    by layer: the layers it rejects (the cin=3 entry; YOLO's 1x1 detection
+    head, whose fp32 output writes dominate) genuinely exceed 0.5x."""
+    from repro.core.quant import (
+        INT8_TRAFFIC_THRESHOLD,
+        int8_traffic_ratio,
+        int8_worthwhile,
+    )
+    from repro.configs import vgg16, yolov3
+
+    checked = rejected = 0
+    for layers in (vgg16.LAYERS, yolov3.TINY_LAYERS):
+        for spec, h, w, _act in _network_layer_specs(layers, 416, 416):
+            ratio = int8_traffic_ratio(spec, h, w)
+            assert int8_worthwhile(spec, h, w) == (
+                ratio <= INT8_TRAFFIC_THRESHOLD
+            ), (spec, ratio)
+            if spec.kh >= 3 and spec.in_channels >= 16:
+                assert ratio <= INT8_TRAFFIC_THRESHOLD, (spec, ratio)
+                checked += 1
+            elif not int8_worthwhile(spec, h, w):
+                rejected += 1
+    assert checked >= 15
+    assert rejected >= 1  # the gate actually rejects something real
+
+
+@pytest.mark.parametrize("model", ["vgg16", "yolov3-tiny"])
+@pytest.mark.parametrize("batch", [1, 4, 8])
+def test_int8_network_acceptance(model, batch, tmp_path):
+    """Whole-network acceptance: ``repro.compile(..., dtype='int8')`` runs
+    VGG-16 and YOLOv3-tiny end-to-end (32x32 input so the suite stays fast;
+    channel structure as published) and the network output reaches >= 30 dB
+    SQNR against the fp32 compilation of the same params at batches 1/4/8.
+    Also pins the planner policy: the cin=3 entry conv stays fp32 (the
+    traffic gate fails), deeper convs quantize, and a warm v5 cache
+    re-tunes nothing."""
+    import repro
+    from repro.api import ExecutionOptions
+    from repro.configs import vgg16, yolov3
+    from repro.core.quant import sqnr_db
+    from repro.models.cnn import init_cnn
+
+    m = (vgg16.MODEL if model == "vgg16" else yolov3.TINY_MODEL)
+    m = m.with_input_hw((32, 32))
+    params = init_cnn(jax.random.PRNGKey(0), m.layers, m.in_channels)
+    x = jnp.asarray(
+        np.random.default_rng(batch).normal(size=(batch, 32, 32, 3)),
+        jnp.float32,
+    )
+    cache = str(tmp_path / "plans.json")
+    fp32 = repro.compile(
+        m, params, ExecutionOptions(impl="jax", cache_path=cache, batch=batch)
+    )
+    ref = fp32.run(x)
+    opts = ExecutionOptions(
+        impl="jax", cache_path=cache, dtype="int8", batch=batch
+    )
+    q = repro.compile(m, params, opts, calibration=x)
+    out = q.run(x)
+    assert out.shape == ref.shape
+    quality = float(sqnr_db(ref, out))
+    assert quality >= INT8_SQNR_DB, (
+        f"{model} batch={batch}: whole-network SQNR {quality:.1f} dB"
+    )
+    rows = q.plan_report()["layers"]
+    dtypes = [r["dtype"] for r in rows]
+    assert dtypes[0] == "float32", "cin=3 entry conv must stay fp32"
+    assert dtypes.count("int8") >= len(dtypes) - 2, dtypes
+    # Warm path: a fresh compilation against the same v5 cache re-tunes
+    # zero layers — the per-layer dtype rides the plan entries.
+    warm = repro.compile(m, params, opts, calibration=x)
+    rep = warm.plan_report()
+    assert rep["tunes"] == 0 and rep["network_hits"] >= 1, rep
+
+
+def test_int8_network_pallas_interpret_smoke():
+    """The Pallas int8 kernels end-to-end (interpret mode): a small conv
+    stack through the facade with dtype='int8' and impl='pallas' must match
+    its own fp32 compilation to >= 30 dB."""
+    import repro
+    from repro.api import ExecutionOptions
+    from repro.core.quant import sqnr_db
+    from repro.models.cnn import CNNLayer, init_cnn
+
+    layers = (
+        CNNLayer("conv", out_channels=32, kernel=3, activation="leaky"),
+        CNNLayer("maxpool", size=2, stride=2),
+        CNNLayer("conv", out_channels=48, kernel=3, activation="relu"),
+        CNNLayer("conv", out_channels=32, kernel=1, activation="linear"),
+    )
+    params = init_cnn(jax.random.PRNGKey(2), layers, in_channels=16)
+    x = jax.random.normal(jax.random.PRNGKey(3), (2, 16, 16, 16))
+    fp32 = repro.compile(
+        layers, params,
+        repro.ExecutionOptions(impl="pallas", interpret=True,
+                               cache_path=None),
+        input_hw=(16, 16), in_channels=16,
+    )
+    ref = fp32.run(x)
+    q = repro.compile(
+        layers, params,
+        repro.ExecutionOptions(impl="pallas", interpret=True,
+                               cache_path=None, dtype="int8"),
+        input_hw=(16, 16), in_channels=16, calibration=x,
+    )
+    out = q.run(x)
+    quality = float(sqnr_db(ref, out))
+    assert quality >= INT8_SQNR_DB, f"SQNR {quality:.1f} dB"
+    assert any(r["dtype"] == "int8" for r in q.plan_report()["layers"])
+
+
 def test_fold_batchnorm_matches_batchnorm_inference():
     """Folded weights+bias reproduce conv -> bn exactly (up to fp32)."""
     from repro.models.cnn import (
