@@ -7,7 +7,6 @@ import time
 from typing import Any, Callable, Dict, List, Optional
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 # Every emit() lands here as a structured row so drivers can dump the whole

@@ -11,8 +11,7 @@ from __future__ import annotations
 
 from benchmarks.common import emit
 from repro.configs.yolov3 import TABLE_IV
-from repro.core.codesign import layer_roofline
-from repro.core.conv_spec import ConvSpec, arithmetic_intensity
+from repro.core.conv_spec import arithmetic_intensity
 from repro.core.vmem_model import GemmShape, autotune_gemm
 from repro.hw import V5E
 

@@ -1,0 +1,63 @@
+"""Compile-time plan verifier: static analysis over traced jaxprs.
+
+Proves, before anything executes, that a compiled NetworkPlan keeps its
+promises: every kernel's true VMEM footprint fits the planner's budget and
+tracks the cost model, the grid x block HBM traffic matches the plan's
+accounting, the inter-layer layout-elision contract holds (no unplanned
+channel pads/crops between kernels), and int8 layers accumulate legally.
+
+    from repro.analysis import verify_network
+    report = verify_network(netplan, prepared_params)
+    assert report.clean, report.summary()
+
+Or through the facade: ``ExecutionOptions(validate="full")`` /
+``CompiledModel.verify_report()``.  CLI: ``python -m repro.analysis vgg16``.
+"""
+from repro.analysis.report import (
+    Finding,
+    PASSES,
+    PlanVerificationError,
+    VerifyReport,
+    dump_json,
+)
+from repro.analysis.trace import (
+    BOUNDARY_PRIMS,
+    ChannelOp,
+    OperandInfo,
+    PallasCallRecord,
+    ScratchInfo,
+    boundary_ops,
+    channel_boundary_ops,
+    iter_eqns,
+    pallas_calls,
+    trace_forward,
+)
+from repro.analysis.descriptors import (
+    network_descriptors,
+    reference_netplan,
+    step_descriptors,
+)
+from repro.analysis.verifier import LEVELS, verify_network
+
+__all__ = [
+    "BOUNDARY_PRIMS",
+    "ChannelOp",
+    "Finding",
+    "LEVELS",
+    "OperandInfo",
+    "PASSES",
+    "PallasCallRecord",
+    "PlanVerificationError",
+    "ScratchInfo",
+    "VerifyReport",
+    "boundary_ops",
+    "channel_boundary_ops",
+    "dump_json",
+    "iter_eqns",
+    "network_descriptors",
+    "pallas_calls",
+    "reference_netplan",
+    "step_descriptors",
+    "trace_forward",
+    "verify_network",
+]

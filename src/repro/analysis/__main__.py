@@ -1,0 +1,84 @@
+"""CLI: statically verify a config-zoo model's compiled plan.
+
+    python -m repro.analysis vgg16 --dtype int8 --level full
+    python -m repro.analysis yolov3-tiny --input-hw 128 128 --json
+
+Plans the model (cost mode, no device execution — kernels are traced, never
+run), prepares parameters exactly like the executor, runs the verifier, and
+prints the report.  Exit status 1 on any error finding — the CI gate.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+MODELS = ("vgg16", "yolov3-tiny", "yolov3-20")
+
+
+def _resolve_model(name: str):
+    if name == "vgg16":
+        from repro.configs.vgg16 import MODEL
+
+        return MODEL
+    if name == "yolov3-tiny":
+        from repro.configs.yolov3 import TINY_MODEL
+
+        return TINY_MODEL
+    if name == "yolov3-20":
+        from repro.configs.yolov3 import MODEL_20
+
+        return MODEL_20
+    raise SystemExit(f"unknown model {name!r}; choose from {MODELS}")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="compile-time plan verifier over the config zoo",
+    )
+    ap.add_argument("model", choices=MODELS)
+    ap.add_argument("--dtype", default="float32",
+                    choices=("float32", "int8"))
+    ap.add_argument("--batch", type=int, default=1)
+    ap.add_argument("--input-hw", type=int, nargs=2, metavar=("H", "W"),
+                    help="override the model's input geometry "
+                         "(e.g. a reduced size for quick CI runs)")
+    ap.add_argument("--level", default="full", choices=("plan", "full"))
+    ap.add_argument("--json", action="store_true",
+                    help="emit the full machine-readable report")
+    ap.add_argument("--cache-path", default=None,
+                    help="plan-cache JSON (default: no persistence — the "
+                         "verifier must not mutate a shared cache)")
+    args = ap.parse_args(argv)
+
+    import jax
+
+    import repro
+    from repro.analysis import dump_json
+    from repro.api import ExecutionOptions
+
+    model = _resolve_model(args.model)
+    if args.input_hw:
+        model = model.with_input_hw(tuple(args.input_hw))
+    params = model.init_params(jax.random.PRNGKey(0))
+    opts = ExecutionOptions(
+        impl="pallas", mode="cost", interpret=True,
+        cache_path=args.cache_path, batch=args.batch, dtype=args.dtype,
+    )
+    compiled = repro.compile(model, params, opts)
+    report = compiled.verify_report(level=args.level)
+    if args.json:
+        print(dump_json(report))
+    else:
+        print(report.summary())
+        for row in report.kernels:
+            print(
+                "  step {step:>3} {kernel:<28} grid {grid!s:<18} "
+                "vmem {vmem_bytes:>9} B (model {vmem_model_bytes}) "
+                "traffic {traffic_bytes} B".format(**row)
+            )
+    return 0 if report.ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

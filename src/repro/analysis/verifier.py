@@ -1,0 +1,121 @@
+"""Entry points of the compile-time plan verifier.
+
+``verify_network`` proves a NetworkPlan's invariants against the artifact
+that will actually run: it traces the executor's forward with
+``jax.make_jaxpr`` (no device execution, no kernel compilation) and runs
+the structure / VMEM / traffic / elision / dtype passes over the recovered
+``pallas_call`` parameters.  ``level="plan"`` skips the trace and checks
+only what the plan alone can prove (layout decisions + modeled footprints
+under budget) — cheap enough for every ``repro.compile``.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Sequence
+
+from repro.analysis.descriptors import network_descriptors, reference_netplan
+from repro.analysis.passes import (
+    dtype_consistent_pairs,
+    dtype_pass,
+    elision_pass,
+    kernel_metrics,
+    structure_pass,
+    traffic_pass,
+    vmem_pass,
+)
+from repro.analysis.report import Finding, VerifyReport
+from repro.analysis.trace import trace_forward
+from repro.hw import V5E
+
+LEVELS = ("off", "plan", "full")
+
+
+def verify_network(
+    netplan,
+    params: Optional[Sequence[Dict[str, Any]]] = None,
+    pretransformed: Optional[Sequence[bool]] = None,
+    level: str = "full",
+    vmem_budget: Optional[int] = None,
+    name: Optional[str] = None,
+) -> VerifyReport:
+    """Statically verify a NetworkPlan (and, at ``level='full'``, the traced
+    forward it compiles to).
+
+    ``params`` must be the *prepared* parameter list
+    (``prepare_net_params`` output: block-padded, int8-quantized, optionally
+    Winograd-pretransformed) — the verifier traces exactly what the executor
+    runs.  ``pretransformed`` is the per-step flag tuple; None derives the
+    standard flags from the plan.  ``vmem_budget`` defaults to the v5e VMEM
+    size, matching the planner's default.
+    """
+    assert level in ("plan", "full"), level
+    budget = vmem_budget if vmem_budget is not None else V5E.vmem_bytes
+    reference = reference_netplan(netplan)
+    descs = network_descriptors(netplan, reference)
+    report = VerifyReport(
+        level=level,
+        network={
+            "name": name or f"{len(netplan.steps)}-layer network",
+            "batch": netplan.batch,
+            "input_hw": list(netplan.input_hw),
+            "dtype": netplan.dtype_name,
+            "impl": netplan.impl,
+            "expected_pallas_calls": len(descs),
+            "vmem_budget": budget,
+        },
+    )
+
+    if level == "plan":
+        report.passes_run = ("vmem", "elision")
+        elision_pass(report, netplan, reference, None)
+        for desc in descs:
+            if desc["model_vmem_bytes"] > budget:
+                report.add(Finding(
+                    pass_name="vmem", severity="error",
+                    message=(
+                        "modeled kernel footprint exceeds the planner's "
+                        "VMEM budget"
+                    ),
+                    step=desc.get("step"), kernel=desc["name"],
+                    expected=budget, actual=desc["model_vmem_bytes"],
+                ))
+        return report
+
+    if params is None:
+        raise ValueError("level='full' requires the prepared parameter list")
+
+    import jax.numpy as jnp
+
+    from repro.core.netplan import pretransform_flags, run_network
+
+    if pretransformed is None:
+        pretransformed = pretransform_flags(netplan, True)
+    flags = tuple(bool(f) for f in pretransformed)
+    # int8 networks still take an fp32 activation (quantization happens
+    # inside the forward with calibrated scales).
+    in_dtype = (
+        "float32" if netplan.dtype_name == "int8" else netplan.dtype_name
+    )
+    x = jnp.zeros(
+        (netplan.batch, *netplan.input_hw, netplan.in_channels),
+        dtype=in_dtype,
+    )
+
+    def fwd(p, xx):
+        return run_network(
+            netplan, p, xx, interpret=True, pretransformed=flags
+        )
+
+    closed, records = trace_forward(fwd, list(params), x)
+
+    report.passes_run = ("structure", "vmem", "traffic", "elision", "dtype")
+    pairs = structure_pass(report, records, descs)
+    # Byte-level passes only run where the declared precision matches the
+    # compiled kernel — a dtype defect must surface as a dtype finding, not
+    # as cascading itemsize noise in the VMEM/traffic comparisons.
+    byte_pairs = dtype_consistent_pairs(pairs)
+    vmem_pass(report, byte_pairs, budget)
+    traffic_pass(report, byte_pairs)
+    elision_pass(report, netplan, reference, closed)
+    dtype_pass(report, pairs, netplan, closed)
+    report.kernels = kernel_metrics(byte_pairs, budget)
+    return report

@@ -56,6 +56,12 @@ class CompiledModel:
     def plan_report(self) -> Dict[str, Any]:
         raise NotImplementedError
 
+    def verify_report(self, batch: Optional[int] = None,
+                      level: Optional[str] = None):
+        raise NotImplementedError(
+            f"{type(self).__name__} does not support static plan verification"
+        )
+
     def save(self, path: Optional[str] = None) -> str:
         raise NotImplementedError
 
@@ -156,7 +162,58 @@ class CompiledCNN(CompiledModel):
             # run(), and the serving engine call save_plans() once after
             # their planning is done — a cold bucket ladder costs one cache
             # merge+write, not one per executor.
+            if self.options.validate != "off":
+                from repro.analysis import PlanVerificationError
+
+                report = self.verify_report(
+                    batch=b, level=self.options.validate
+                )
+                if not report.ok:
+                    del self._executors[b]
+                    raise PlanVerificationError(report)
         return self._executors[b]
+
+    def verify_report(self, batch: Optional[int] = None,
+                      level: Optional[str] = None):
+        """Statically verify this compilation (repro.analysis).
+
+        Runs the plan verifier over the executor's *prepared* state — the
+        exact params and pretransform flags the jitted forward consumes —
+        and returns the structured ``VerifyReport`` (findings + per-kernel
+        footprint/traffic metrics).  ``level`` defaults to 'full' (trace
+        the forward); pass 'plan' for the trace-free subset.  Independent
+        of ``options.validate``: that option makes compilation *gate* on
+        this report, this method just produces it.
+        """
+        from repro.analysis import verify_network
+
+        lvl = level if level not in (None, "off") else "full"
+        b = int(batch) if batch is not None else self.options.batch
+        netplan = self.network_plan(b)
+        if lvl == "plan":
+            return verify_network(
+                netplan, level="plan",
+                vmem_budget=self.options.vmem_budget,
+                name=self.model.name,
+            )
+        # Build (or reuse) the executor outside the validate gate: its
+        # prepared params are the verification subject.
+        if b in self._executors:
+            ex = self._executors[b]
+        else:
+            from repro.core.netplan import NetworkExecutor
+
+            ex = NetworkExecutor(
+                netplan, self.params, interpret=True,
+                devices=self._devices,
+                pretransform=self.options.pretransform,
+                calibration=self.calibration,
+            )
+        return verify_network(
+            netplan, ex.params, pretransformed=ex.pretransformed,
+            level="full", vmem_budget=self.options.vmem_budget,
+            name=self.model.name,
+        )
 
     def save_plans(self, force: bool = False) -> None:
         """Persist the planner's v4 cache when there is something to write.

@@ -19,6 +19,7 @@ from repro.core.planner import DEFAULT_CACHE_PATH, _dtype_name
 _IMPLS = ("jax", "pallas")
 _MODES = ("cost", "measure")
 _DTYPES = ("float32", "bfloat16", "float16", "int8")
+_VALIDATE = ("off", "plan", "full")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -53,6 +54,13 @@ class ExecutionOptions:
                       per-output-channel scales, and inputs stay fp32
                       (see ``input_dtype``) — activations are quantized at
                       each int8 layer's entry.
+      validate        compile-time plan verification (repro.analysis):
+                      'off' (default), 'plan' (layout decisions + modeled
+                      VMEM footprints under budget, no tracing), or 'full'
+                      (trace the jitted forward and run the structure /
+                      VMEM / traffic / elision / dtype passes).  Any error
+                      finding raises ``PlanVerificationError`` before the
+                      executor can run.
     """
 
     impl: str = "jax"
@@ -67,8 +75,13 @@ class ExecutionOptions:
     buckets: Tuple[int, ...] = (1, 4, 8)
     shard_batch: bool = True
     dtype: str = "float32"
+    validate: str = "off"
 
     def __post_init__(self) -> None:
+        if self.validate not in _VALIDATE:
+            raise ValueError(
+                f"validate must be one of {_VALIDATE}, got {self.validate!r}"
+            )
         if self.impl not in _IMPLS:
             raise ValueError(f"impl must be one of {_IMPLS}, got {self.impl!r}")
         if self.mode not in _MODES:

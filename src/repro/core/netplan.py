@@ -739,6 +739,68 @@ def run_network(
     return cur
 
 
+def expected_channel_ops(netplan: NetworkPlan) -> List[Dict[str, Any]]:
+    """The channel-axis pads/crops ``run_network`` will emit, predicted
+    statically from the plan.
+
+    Mirrors the executor walk: the entry/per-conv ``_align_channels`` when
+    the carried physical channel count differs from the step's ``in_layout``,
+    the kernel wrappers' deferred channel crop when the kernel's out-channel
+    grid (``ceil_to(phys, block)``) overshoots the layout's keep count, the
+    direct GEMM's K-axis pad when the incoming channels don't divide ``bk``,
+    and the single exit crop.  ``repro.analysis``'s elision pass census
+    (taint-tracked pad/slice ops on the traced jaxpr's minor axis) must
+    match this list exactly — any extra op is executor drift from the plan,
+    any missing op means the plan promised movement that can't happen.
+
+    Row-tile tails, tile-count alignment and spatial padding are intra-layer
+    movement on non-minor axes and deliberately outside this contract.
+    """
+    ops: List[Dict[str, Any]] = []
+    outputs_phys: List[int] = []
+    cur_phys = netplan.in_channels
+    for s in netplan.steps:
+        l = s.layer
+        if l.kind == "conv":
+            planned = s.plan is not None and (
+                s.plan.impl if s.plan is not None else netplan.impl
+            ) == "pallas"
+            if planned:
+                want = s.in_layout.phys_c
+                if cur_phys != want:
+                    ops.append({
+                        "step": s.index,
+                        "kind": "pad" if cur_phys < want else "crop",
+                    })
+                algo = resolve_algorithm(s.spec, s.plan, *s.in_hw)
+                o_phys = s.out_layout.phys_c
+                o_keep = (
+                    s.out_layout.phys_c if s.out_layout.pad_c
+                    else s.spec.out_channels
+                )
+                if algo is ConvAlgorithm.DIRECT:
+                    bm, bn, bk = s.plan.kernel_blocks
+                    if ceil_to(want, bk) != want:
+                        ops.append({"step": s.index, "kind": "pad"})
+                    emitted = ceil_to(o_phys, bn)
+                else:
+                    emitted = ceil_to(o_phys, s.plan.kernel_blocks[2])
+                if emitted != o_keep:
+                    ops.append({"step": s.index, "kind": "crop"})
+                cur_phys = o_keep
+            else:
+                cur_phys = s.spec.out_channels
+        elif l.kind == "route":
+            cur_phys = sum(outputs_phys[j] for j in l.from_layers)
+        elif l.kind == "fc":
+            cur_phys = l.out_channels
+        # maxpool / upsample / shortcut / avgpool preserve channels
+        outputs_phys.append(cur_phys)
+    if netplan.exit_layout.pad_c:
+        ops.append({"step": len(netplan.steps) - 1, "kind": "crop"})
+    return ops
+
+
 class NetworkExecutor:
     """Jitted whole-network inference over a NetworkPlan.
 

@@ -159,9 +159,10 @@ def _dtype_name(dtype) -> str:
 
 
 def _dtype_bytes(dtype) -> int:
-    return {"bfloat16": 2, "float16": 2, "int8": 1, "fp8": 1}.get(
-        _dtype_name(dtype), 4
-    )
+    """Element size for planning, via the cost model's single itemsize map."""
+    from repro.core.vmem_model import itemsize
+
+    return itemsize(_dtype_name(dtype))
 
 
 def _eligible_algorithms(spec: ConvSpec) -> List[ConvAlgorithm]:

@@ -29,6 +29,39 @@ from typing import Iterable, List, Optional, Tuple
 from repro.hw import V5E, ChipSpec
 from repro.util import ceil_to
 
+# The single source of truth for element sizes in the model.  Keyed by dtype
+# *name* so it accepts numpy/jnp dtypes, python types and plain strings — the
+# same normalization the planner's dtype plumbing uses.  Unknown names model
+# as 4 bytes (fp32), the conservative default.
+_ITEMSIZE = {
+    "float64": 8,
+    "float32": 4, "int32": 4, "uint32": 4,
+    "bfloat16": 2, "float16": 2, "int16": 2, "uint16": 2,
+    "int8": 1, "uint8": 1, "bool": 1,
+    "fp8": 1, "float8_e4m3fn": 1, "float8_e5m2": 1,
+}
+
+
+def itemsize(dtype) -> int:
+    """Bytes per element for a dtype given as a dtype object, type or name.
+
+    Every byte count in this module routes through here — the accumulator,
+    bias/scale-row and dequant-output terms use ``itemsize("float32")``
+    explicitly instead of a bare ``4``, so the fp32-ness of those buffers is
+    stated where it is assumed.
+    """
+    name = (
+        getattr(dtype, "__name__", None)
+        or getattr(dtype, "name", None)
+        or str(dtype)
+    )
+    return _ITEMSIZE.get(name, 4)
+
+
+# Accumulators, bias/scale epilogue rows and int8 dequant outputs are fp32 /
+# int32 in every kernel family regardless of the operand itemsize.
+ACC_BYTES = itemsize("float32")
+
 
 @dataclasses.dataclass(frozen=True)
 class GemmShape:
@@ -51,7 +84,7 @@ class BlockConfig:
         buf = 2 if double_buffer else 1
         return (
             buf * (self.bm * self.bk + self.bk * self.bn) * dtype_bytes
-            + self.bm * self.bn * 4
+            + self.bm * self.bn * ACC_BYTES
         )
 
 
@@ -106,8 +139,8 @@ def predict_gemm(
     compute_s = 2.0 * mp * np_ * kp / peak
     grid = (mp // block.bm) * (np_ // block.bn) * (kp // block.bk)
     # int8 GEMMs accumulate in int32 and write fp32 (the fused dequant
-    # epilogue), so the C term keeps the 4-byte itemsize.
-    out_bytes = 4 if dtype_bytes == 1 else dtype_bytes
+    # epilogue), so the C term keeps the fp32 itemsize.
+    out_bytes = ACC_BYTES if dtype_bytes == 1 else dtype_bytes
     traffic = dtype_bytes * (
         shape.m * shape.k * (np_ // block.bn)
         + shape.k * shape.n * (mp // block.bm)
@@ -168,6 +201,35 @@ def autotune_gemm(
     return best  # type: ignore[return-value]
 
 
+def gemm_kernel_vmem_bytes(
+    bm: int, bn: int, bk: int, dtype_bytes: int = 4,
+    out_dtype_bytes: Optional[int] = None, double_buffer: bool = True,
+    epilogue_rows: int = 0, three_loop: bool = False,
+) -> int:
+    """Full per-program VMEM footprint of the blocked GEMM kernels.
+
+    Unlike ``BlockConfig.vmem_bytes`` (the quantity the autotuner *budgets*:
+    A/B blocks + accumulator), this is the complete footprint the compiled
+    kernel actually holds — including the streamed output block and the
+    fused epilogue's (1, bn) bias/scale rows — which is what the static
+    verifier (repro.analysis) checks the jaxpr-recovered footprint against.
+
+    ``epilogue_rows`` counts the (1, bn) fp32 rows the epilogue streams:
+    one for a fused bias, two for int8's scale + bias.  ``three_loop``
+    models the full-K-panel variant, which accumulates in its output block
+    and has no separate scratch (pass ``bk`` = the full K for it).
+    """
+    if out_dtype_bytes is None:
+        out_dtype_bytes = ACC_BYTES if dtype_bytes == 1 else dtype_bytes
+    buf = 2 if double_buffer else 1
+    total = buf * (bm * bk + bk * bn) * dtype_bytes      # A / B blocks
+    total += buf * bm * bn * out_dtype_bytes             # output block
+    total += buf * epilogue_rows * bn * ACC_BYTES        # bias / scale rows
+    if not three_loop:
+        total += bm * bn * ACC_BYTES                     # accumulator scratch
+    return total
+
+
 def winograd_traffic_bytes(
     oh: int, ow: int, cin: int, cout: int, batch: int = 1, dtype_bytes: int = 4,
     fused: bool = False,
@@ -213,7 +275,7 @@ def im2col_gemm_traffic_bytes(
     gate compares (core/quant.py::int8_traffic_ratio).
     """
     if out_dtype_bytes is None:
-        out_dtype_bytes = 4 if dtype_bytes == 1 else dtype_bytes
+        out_dtype_bytes = ACC_BYTES if dtype_bytes == 1 else dtype_bytes
     rows = batch * oh * ow
     taps = kh * kw
     return (
@@ -246,14 +308,14 @@ def im2col_kernel_vmem_bytes(
     fp32/int32 (4-byte) regardless of the operand itemsize.
     """
     if out_dtype_bytes is None:
-        out_dtype_bytes = 4 if dtype_bytes == 1 else dtype_bytes
+        out_dtype_bytes = ACC_BYTES if dtype_bytes == 1 else dtype_bytes
     buf = 2 if double_buffer else 1
     return (
         buf * hp * wp * bc * dtype_bytes            # input channel slab
         + buf * kh * kw * bc * bo * dtype_bytes     # weight block
-        + (bo * 4 if bias else 0)                   # fp32 bias/scale row
+        + (bo * ACC_BYTES if bias else 0)           # fp32 bias/scale row
         + buf * toh * ow * bo * out_dtype_bytes     # output block
-        + toh * ow * bo * 4                         # fp32/int32 acc scratch
+        + toh * ow * bo * ACC_BYTES                 # fp32/int32 acc scratch
     )
 
 
@@ -277,14 +339,14 @@ def winograd_kernel_vmem_bytes(
         return (
             buf * bt * 64 * bc * dtype_bytes        # input tile block
             + buf * 64 * bc * bo * dtype_bytes      # transformed weight block
-            + 64 * bt * bo * 4                      # M accumulator scratch
+            + 64 * bt * bo * ACC_BYTES              # M accumulator scratch
             + buf * bt * 36 * bo * dtype_bytes      # output block
         )
     input_tf = buf * bt * 64 * bc * dtype_bytes + buf * 64 * bt * bc * dtype_bytes
     tuple_mul = (
         buf * (bt * bc + bc * bo) * dtype_bytes
         + buf * bt * bo * dtype_bytes
-        + bt * bo * 4
+        + bt * bo * ACC_BYTES
     )
     output_tf = buf * 64 * bt * bo * dtype_bytes + buf * bt * 36 * bo * dtype_bytes
     return max(input_tf, tuple_mul, output_tf)

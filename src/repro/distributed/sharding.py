@@ -14,7 +14,7 @@ Optimizer moments additionally shard over ('pod','data') where divisible
 from __future__ import annotations
 
 import re
-from typing import Optional, Sequence, Tuple
+from typing import Sequence, Tuple
 
 import jax
 import numpy as np

@@ -12,7 +12,13 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.vmem_model import BlockConfig, GemmShape, autotune_gemm
+from repro.core.vmem_model import (
+    ACC_BYTES,
+    BlockConfig,
+    GemmShape,
+    autotune_gemm,
+    gemm_kernel_vmem_bytes,
+)
 from repro.hw import V5E
 from repro.kernels.gemm.kernel import matmul_pallas
 from repro.util import ceil_to, pad_bias_row
@@ -119,3 +125,56 @@ def blocked_matmul(
         scale_p=scale_p,
     )
     return out[:m, :n]
+
+
+def gemm_call_descriptor(
+    mp: int, np_: int, kp: int, block: Tuple[int, int, int],
+    dtype_bytes: int = 4, bias: bool = False, scale: bool = False,
+    variant: str = "6loop",
+) -> dict:
+    """Static description of the pallas_call ``matmul_padded_call`` emits.
+
+    The verifier's expected side: for block-aligned operands (Mp, Kp) x
+    (Kp, Np) it predicts the kernel body name, the grid, the modeled VMEM
+    footprint and the modeled HBM traffic — the same fetch algebra the
+    jaxpr-recovered actuals follow (an operand whose index map depends on
+    grid axes up to ``a`` is re-fetched once per step of ``grid[:a+1]``).
+    """
+    bm, bn, bk = block
+    if variant == "3loop":
+        bk = kp
+    nm, nn, nk = mp // bm, np_ // bn, kp // bk
+    rows = int(scale) + int(bias)
+    out_bytes = ACC_BYTES if dtype_bytes == 1 else dtype_bytes
+    if variant == "3loop":
+        grid = (nm, nn)
+        traffic = (
+            dtype_bytes * (mp * kp + nm * nn * kp * bn)       # A once, B per j
+            + ACC_BYTES * rows * nm * nn * bn                 # epilogue rows
+            + out_bytes * mp * np_                            # output write
+        )
+    else:
+        grid = (nm, nn, nk)
+        traffic = (
+            dtype_bytes * nm * nn * nk * (bm * bk + bk * bn)  # A/B per step
+            + ACC_BYTES * rows * nm * nn * bn                 # epilogue rows
+            + out_bytes * mp * np_                            # output write
+        )
+    name = (
+        "_matmul"
+        + ("_q8" if scale else "")
+        + ("_bias" if bias else "")
+        + "_kernel_"
+        + variant
+    )
+    return {
+        "family": "gemm",
+        "name": name,
+        "grid": grid,
+        "model_vmem_bytes": gemm_kernel_vmem_bytes(
+            bm, bn, bk, dtype_bytes, epilogue_rows=rows,
+            three_loop=variant == "3loop",
+        ),
+        "traffic_bytes": traffic,
+        "vmem_one_sided": False,
+    }

@@ -20,7 +20,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.conv_spec import ConvSpec
-from repro.core.vmem_model import im2col_kernel_vmem_bytes
+from repro.core.vmem_model import ACC_BYTES, im2col_kernel_vmem_bytes
 from repro.hw import V5E
 from repro.kernels.im2col_gemm.kernel import conv2d_im2col_gemm_pallas
 from repro.util import ceil_to, pad_bias_row
@@ -179,3 +179,53 @@ def conv2d_pallas_im2col(
         bias_p=bias_p, activation=activation, scale_p=scale_p,
     )
     return out[:, :oh, :, :o]
+
+
+def im2col_call_descriptor(
+    h: int, w: int, spec: ConvSpec, blocks: Tuple[int, int, int],
+    cp: int, op: int, batch: int = 1, dtype_bytes: int = 4,
+    bias: bool = True, scale: bool = False,
+) -> dict:
+    """Static description of the pallas_call ``conv2d_im2col_padded_call``
+    emits for a (batch, h, w, cp) activation already channel-padded to the
+    bc multiple, against weights padded to (cp, op).
+
+    The verifier's expected side: kernel body name, grid, modeled VMEM
+    footprint (``vmem_model.im2col_kernel_vmem_bytes``) and the modeled HBM
+    traffic from the block/grid fetch algebra — the input slab and weight
+    block re-fetch on every grid step (their index maps touch the innermost
+    in-channel axis), the epilogue rows once per (batch, row, out-channel)
+    step, the output once per block.
+    """
+    oh, ow = spec.out_hw(h, w)
+    ph, pw = spec.padding
+    toh, bc, bo = blocks
+    eff_toh = min(toh, oh)
+    ohp, need_h, need_w = padded_input_hw(h, w, spec, eff_toh)
+    hp = max(need_h, h + ph)      # leading pad ph, trailing max(need-h-ph, 0)
+    wp = max(need_w, w + pw)
+    grid = (batch, ohp // eff_toh, op // bo, cp // bc)
+    nsteps = batch * (ohp // eff_toh) * (op // bo)
+    full = nsteps * (cp // bc)
+    rows = int(scale) + int(bias)
+    out_bytes = ACC_BYTES if dtype_bytes == 1 else dtype_bytes
+    traffic = (
+        dtype_bytes * full * (hp * wp * bc + spec.kh * spec.kw * bc * bo)
+        + ACC_BYTES * rows * nsteps * bo          # epilogue rows
+        + out_bytes * nsteps * eff_toh * ow * bo  # output blocks
+    )
+    name = (
+        "_conv" + ("_q8" if scale else "") + ("_bias" if bias else "")
+        + "_kernel"
+    )
+    return {
+        "family": "im2col",
+        "name": name,
+        "grid": grid,
+        "model_vmem_bytes": im2col_kernel_vmem_bytes(
+            hp, wp, eff_toh, ow, bc, bo, spec.kh, spec.kw, dtype_bytes,
+            bias=bias or scale,
+        ),
+        "traffic_bytes": traffic,
+        "vmem_one_sided": False,
+    }

@@ -185,3 +185,75 @@ def conv2d_winograd_pallas(
         bias_p=bias_p, activation=activation, fused=fused,
     )
     return y[:, :, :, :o]
+
+
+def winograd_call_descriptors(
+    t: int, cp: int, op: int, blocks: Tuple[int, int, int],
+    bias: bool = True, fused: bool = True, dtype_bytes: int = 4,
+) -> list:
+    """Static description of the pallas_call(s) ``conv2d_winograd_padded_call``
+    emits for ``t`` logical tiles on (cp, op)-channel-padded operands.
+
+    One descriptor for the fused megakernel, three (input transform, tuple
+    multiply, output transform) for the 3-pass pipeline.  Traffic follows
+    the verifier's fetch algebra (an operand re-fetches once per step of the
+    grid prefix its index map depends on; the constant BT/AT matrices fetch
+    exactly once).  ``model_vmem_bytes`` is ``winograd_kernel_vmem_bytes``,
+    which for the 3-pass pipeline is the *max* over stages — per-stage
+    actuals are compared one-sided (``vmem_one_sided``).
+    """
+    from repro.core.vmem_model import ACC_BYTES, winograd_kernel_vmem_bytes
+
+    bt, bc, bo = blocks
+    tp = ceil_to(t, bt)
+    nt, nc, no = tp // bt, cp // bc, op // bo
+    model = winograd_kernel_vmem_bytes(
+        bt, bc, bo, fused=fused, dtype_bytes=dtype_bytes
+    )
+    if fused:
+        traffic = (
+            dtype_bytes * nt * no * nc * 64 * bc * (bt + bo)  # tiles + U
+            + (ACC_BYTES * nt * no * bo if bias else 0)       # bias rows
+            + dtype_bytes * tp * 36 * op                      # output write
+            + dtype_bytes * (64 + 48)                         # BT + AT, once
+        )
+        name = "_fused_winograd_bias_kernel" if bias else "_fused_winograd_kernel"
+        return [{
+            "family": "winograd",
+            "name": name,
+            "grid": (nt, no, nc),
+            "model_vmem_bytes": model,
+            "traffic_bytes": traffic,
+            "vmem_one_sided": False,
+        }]
+    input_tf = {
+        "family": "winograd",
+        "name": "_input_transform_kernel",
+        "grid": (nt, nc),
+        "model_vmem_bytes": model,
+        "traffic_bytes": dtype_bytes * (2 * nt * nc * 64 * bt * bc + 64),
+        "vmem_one_sided": True,
+    }
+    tuple_mul = {
+        "family": "winograd",
+        "name": "_tuple_multiply_kernel",
+        "grid": (64, nt, no, nc),
+        "model_vmem_bytes": model,
+        "traffic_bytes": dtype_bytes * 64 * nt * no * nc * bc * (bt + bo)
+        + dtype_bytes * 64 * nt * no * bt * bo,
+        "vmem_one_sided": True,
+    }
+    output_tf = {
+        "family": "winograd",
+        "name": (
+            "_output_transform_bias_kernel" if bias
+            else "_output_transform_kernel"
+        ),
+        "grid": (nt, no),
+        "model_vmem_bytes": model,
+        "traffic_bytes": dtype_bytes * nt * no * (64 + 36) * bt * bo
+        + (ACC_BYTES * nt * no * bo if bias else 0)
+        + dtype_bytes * 48,
+        "vmem_one_sided": True,
+    }
+    return [input_tf, tuple_mul, output_tf]

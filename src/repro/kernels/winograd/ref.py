@@ -1,7 +1,6 @@
 """Pure-jnp oracles for the Winograd kernels (reuse core/winograd.py)."""
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 from repro.core.winograd import AT, BT, conv2d_winograd

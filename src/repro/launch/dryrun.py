@@ -22,7 +22,6 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 # ruff: noqa: E402
 import argparse
 import dataclasses
-import gzip
 import json
 import time
 import traceback

@@ -11,7 +11,6 @@ of flash attention, required for prefill_32k cells.
 """
 from __future__ import annotations
 
-import functools
 from typing import Dict, Optional, Tuple
 
 import jax

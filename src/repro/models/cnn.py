@@ -108,7 +108,6 @@ def init_cnn(rng, layers: Sequence[CNNLayer], in_channels: int = 3,
     for i, l in enumerate(layers):
         p: Dict = {}
         if l.kind == "conv":
-            spec = _conv_spec(l, cur)
             p["w"] = normal_init(
                 keys[i], (l.kernel, l.kernel, cur, l.out_channels),
                 scale=1.0 / (l.kernel * max(cur, 1) ** 0.5), dtype=dtype,
@@ -224,7 +223,6 @@ def cnn_forward(
     """
     outputs: List[jnp.ndarray] = []
     cur = x
-    in_ch = x.shape[-1]
     for i, l in enumerate(layers):
         p = params[i]
         if l.kind == "conv":

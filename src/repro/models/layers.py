@@ -1,7 +1,6 @@
 """Shared neural-net building blocks (pure JAX, params = pytrees)."""
 from __future__ import annotations
 
-from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp

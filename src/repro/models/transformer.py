@@ -9,7 +9,6 @@ tree structure for decode.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax

@@ -8,8 +8,7 @@ ZeRO rule that further shards moments across the DP axes.
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+from typing import Any, Callable, Dict, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -8,7 +8,7 @@ serving shape discipline: no recompiles as requests come and go).
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Optional
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp

@@ -11,10 +11,9 @@ import dataclasses
 import json
 import os
 import time
-from typing import Callable, Dict, Optional
+from typing import Dict
 
 import jax
-import jax.numpy as jnp
 
 from repro.checkpoint import AsyncCheckpointWriter, CheckpointStore
 from repro.configs.base import ModelConfig, ShapeSpec

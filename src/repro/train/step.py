@@ -8,13 +8,12 @@ compute under XLA's scheduler) and chunked-vocab cross-entropy.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ModelConfig, ShapeSpec
+from repro.configs.base import ModelConfig
 from repro.models import transformer as tf
 from repro.optim import adamw
 

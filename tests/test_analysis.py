@@ -1,0 +1,312 @@
+"""Compile-time plan verifier: clean-plan proofs and mutation coverage.
+
+The acceptance surface of the static-analysis subsystem (repro.analysis):
+
+  - a cleanly planned VGG-16 / YOLOv3-tiny verifies with **zero** findings
+    at fp32 and int8, full level (trace + all five passes) and plan level;
+  - each analysis pass catches exactly its injected NetworkPlan corruption:
+      oversized kernel block            -> vmem (budget proof)
+      wrong declared accumulator dtype  -> dtype (int8 legality lint)
+      forced un-elided boundary         -> elision (layout-contract proof)
+      bogus Layout (inflated phys_c)    -> traffic (HBM byte audit)
+    ... and *only* that pass fires, so a red verifier report names the
+    defect rather than burying it in cascading noise;
+  - the promoted jaxpr boundary walker descends into pjit and cond call
+    params (the old test-local walker silently skipped tuple-valued
+    sub-jaxprs);
+  - the facade gate: ``ExecutionOptions(validate=...)`` is validated, and
+    ``CompiledModel.verify_report()`` returns a clean report for a planned
+    model.
+
+Everything here is trace-only (``jax.make_jaxpr``): no kernel runs, no
+device execution, so the whole file stays fast enough for tier-1.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis import (
+    PlanVerificationError,
+    boundary_ops,
+    verify_network,
+)
+from repro.core.conv_spec import ConvAlgorithm
+from repro.core.netplan import (
+    Layout,
+    plan_network,
+    prepare_net_params,
+    resolve_algorithm,
+)
+from repro.core.planner import Planner
+from repro.models.cnn import init_cnn
+
+# Reduced geometries matching the CLI smoke runs: the layer-boundary and
+# block math the verifier proves is resolution-free.
+CASES = {
+    "vgg16": dict(hw=(64, 64)),
+    "yolov3-tiny": dict(hw=(128, 128)),
+}
+
+
+def _layers(model):
+    from repro.configs import vgg16, yolov3
+
+    return {"vgg16": vgg16.LAYERS, "yolov3-tiny": yolov3.TINY_LAYERS}[model]
+
+
+def _plan(model, dtype="float32", batch=1):
+    h, w = CASES[model]["hw"]
+    planner = Planner(impl="pallas", cache_path=None)
+    return plan_network(
+        _layers(model), h, w, planner, in_channels=3, batch=batch,
+        dtype=dtype,
+    )
+
+
+def _verify(netplan, params=None):
+    layers = tuple(s.layer for s in netplan.steps)
+    if params is None:
+        params = init_cnn(jax.random.PRNGKey(0), layers)
+    prepared = prepare_net_params(netplan, params, pretransform=True)
+    return verify_network(netplan, prepared)
+
+
+def _with_mutated_plan(netplan, idx, **plan_changes):
+    """Rebuild the netplan with one step's ConvPlan corrupted.
+
+    Rebuilding (rather than patching the step in place) keeps the stored
+    layouts self-consistent with the mutated plan, so the *only* defect the
+    verifier can find is the one the mutation injects."""
+    from repro.core.netplan import build_network_plan
+
+    plans = [
+        dataclasses.replace(s.plan, **plan_changes)
+        if s.index == idx and s.plan is not None else s.plan
+        for s in netplan.steps
+    ]
+    return build_network_plan(
+        [s.layer for s in netplan.steps], *netplan.input_hw,
+        in_channels=netplan.in_channels, batch=netplan.batch,
+        plans=plans, impl=netplan.impl, dtype=netplan.dtype_name,
+    )
+
+
+def _replace_step(netplan, idx, **changes):
+    steps = list(netplan.steps)
+    steps[idx] = dataclasses.replace(steps[idx], **changes)
+    return dataclasses.replace(netplan, steps=tuple(steps))
+
+
+def _only_pass(report, pass_name):
+    """The report is red, and every finding belongs to ``pass_name``."""
+    assert not report.ok
+    assert report.by_pass(pass_name), report.findings
+    others = [f for f in report.findings if f.pass_name != pass_name]
+    assert not others, others
+
+
+def _algo(step):
+    return resolve_algorithm(step.spec, step.plan, *step.in_hw)
+
+
+# ---------------------------------------------------------------------------
+# Clean plans verify with zero findings
+
+
+@pytest.mark.parametrize("model", list(CASES))
+@pytest.mark.parametrize("dtype", ["float32", "int8"])
+def test_clean_plan_zero_findings(model, dtype):
+    """Acceptance: full-level verification of a cleanly planned network is
+    green — all five passes run, no findings, per-kernel metrics present."""
+    report = _verify(_plan(model, dtype=dtype))
+    assert report.ok and not report.findings, report.findings
+    assert set(report.passes_run) == {
+        "structure", "vmem", "traffic", "elision", "dtype"
+    }
+    assert report.kernels
+    for row in report.kernels:
+        assert row["vmem_bytes"] <= row["vmem_budget"]
+
+
+def test_plan_level_zero_findings():
+    """Plan-level (no trace) verification is also green, and cheap enough
+    that it never needs prepared parameters."""
+    report = verify_network(_plan("vgg16"), level="plan")
+    assert report.ok and not report.findings
+    assert set(report.passes_run) == {"vmem", "elision"}
+
+
+# ---------------------------------------------------------------------------
+# Mutation coverage: each pass flags exactly its defect
+
+
+@pytest.mark.parametrize("model", list(CASES))
+def test_oversized_block_flags_vmem_only(model):
+    """An im2col output block inflated to 2048 lanes pushes the weight slab
+    past the 16 MiB budget; the vmem pass (and only it) goes red."""
+    netplan = _plan(model)
+    idx = max(
+        s.index for s in netplan.steps
+        if s.layer.kind == "conv" and s.plan is not None
+        and _algo(s) is ConvAlgorithm.IM2COL_GEMM
+    )
+    toh, bc, _ = netplan.steps[idx].plan.kernel_blocks
+    report = _verify(
+        _with_mutated_plan(netplan, idx, kernel_blocks=(toh, bc, 2048))
+    )
+    _only_pass(report, "vmem")
+    assert any(
+        f.step == idx and "budget" in f.message
+        for f in report.by_pass("vmem")
+    )
+
+
+@pytest.mark.parametrize("model", list(CASES))
+def test_wrong_dtype_flags_dtype_only(model):
+    """Flipping a quantized step's declared dtype to fp32 *after* the
+    parameters were prepared leaves an int8 kernel running under an
+    fp32-claiming plan — the dtype pass pins it to the step; the byte-level
+    passes stay quiet rather than cascading itemsize noise."""
+    netplan = _plan(model, dtype="int8")
+    idx = min(
+        s.index for s in netplan.steps
+        if s.layer.kind == "conv" and s.plan is not None
+        and s.plan.dtype == "int8"
+    )
+    layers = tuple(s.layer for s in netplan.steps)
+    params = init_cnn(jax.random.PRNGKey(0), layers)
+    prepared = prepare_net_params(netplan, params, pretransform=True)
+    step = netplan.steps[idx]
+    bad = dataclasses.replace(step.plan, dtype="float32")
+    mutated = _replace_step(netplan, idx, plan=bad)
+    report = verify_network(mutated, prepared)
+    _only_pass(report, "dtype")
+    assert any(f.step == idx for f in report.by_pass("dtype"))
+
+
+@pytest.mark.parametrize("model", list(CASES))
+def test_forced_unelided_boundary_flags_elision_only(model):
+    """Forcing a trivial out_layout where the layout rules elide the
+    boundary is a planning-contract violation: the executor faithfully runs
+    the cropped boundary (so structure/vmem/traffic/dtype stay green), but
+    the elision decision check goes red against the re-derived reference."""
+    netplan = _plan(model)
+    idx = min(
+        s.index for s in netplan.steps
+        if s.layer.kind == "conv" and s.plan is not None
+        and s.out_layout.pad_c > 0
+    )
+    oc = netplan.steps[idx].spec.out_channels
+    report = _verify(_replace_step(netplan, idx, out_layout=Layout(oc)))
+    _only_pass(report, "elision")
+    assert any(f.step == idx for f in report.by_pass("elision"))
+
+
+@pytest.mark.parametrize("model", list(CASES))
+def test_bogus_layout_flags_traffic_only(model):
+    """Doubling a boundary's physical channel count (producer out_layout +
+    consumer in_layout, so the plan stays self-consistent and executable)
+    moves real HBM bytes the reference layouts never asked for — the
+    traffic audit flags it; footprints and decisions are unchanged."""
+    netplan = _plan(model)
+    pairs = []
+    convs = [
+        s for s in netplan.steps
+        if s.layer.kind == "conv" and s.plan is not None
+    ]
+    for s, t in zip(convs, convs[1:]):
+        if s.out_layout.pad_c > 0 and t.in_layout.phys_c == s.out_layout.phys_c:
+            pairs.append((s.index, t.index))
+    src, dst = pairs[0]
+    oc = netplan.steps[src].spec.out_channels
+    phys = netplan.steps[src].out_layout.phys_c
+    fat = Layout(oc, 2 * phys - oc)         # doubled, still block-divisible
+    mutated = _replace_step(netplan, src, out_layout=fat)
+    mutated = _replace_step(
+        mutated, dst,
+        in_layout=Layout(netplan.steps[dst].in_layout.c,
+                         fat.phys_c - netplan.steps[dst].in_layout.c),
+    )
+    report = _verify(mutated)
+    _only_pass(report, "traffic")
+    assert any(f.step in (src, dst) for f in report.by_pass("traffic"))
+
+
+# ---------------------------------------------------------------------------
+# Boundary walker recursion (the promoted tests/test_netplan.py walker)
+
+
+def test_boundary_walker_descends_into_pjit():
+    @jax.jit
+    def inner(x):
+        return jnp.pad(x, ((0, 1), (0, 0)))
+
+    def fn(x):
+        return inner(x) * 2.0
+
+    assert "pad" in boundary_ops(fn, jnp.ones((4, 4)))
+
+
+def test_boundary_walker_descends_into_cond_branches():
+    """cond branches arrive as a *tuple* of ClosedJaxprs in eqn params —
+    exactly the shape the old test-local walker silently skipped."""
+
+    def fn(x):
+        return jax.lax.cond(
+            x.sum() > 0,
+            lambda v: jnp.pad(v, ((0, 1), (0, 0))),
+            lambda v: jnp.concatenate([v, v[:1]]),
+            x,
+        )
+
+    ops = boundary_ops(fn, jnp.ones((4, 4)))
+    assert "pad" in ops
+
+
+# ---------------------------------------------------------------------------
+# Facade wiring
+
+
+def test_execution_options_validate_is_checked():
+    from repro.api import ExecutionOptions
+
+    with pytest.raises(ValueError):
+        ExecutionOptions(validate="bogus")
+    assert ExecutionOptions(validate="plan").validate == "plan"
+
+
+def test_facade_verify_report_clean():
+    """repro.compile(...).verify_report() is green for a planned model and
+    the validate='full' executor gate admits it."""
+    import repro
+    from repro.api import ExecutionOptions
+    from repro.api.model import as_model
+    from repro.models.cnn import CNNLayer
+
+    model = as_model(
+        (
+            CNNLayer("conv", out_channels=32, kernel=3),
+            CNNLayer("conv", out_channels=32, kernel=3),
+        ),
+        input_hw=(32, 32),
+        name="chain2",
+    )
+    params = model.init_params(jax.random.PRNGKey(0))
+    opts = ExecutionOptions(
+        impl="pallas", mode="cost", interpret=True, cache_path=None,
+        validate="full",
+    )
+    compiled = repro.compile(model, params, opts)
+    report = compiled.verify_report()
+    assert report.ok and not report.findings, report.findings
+    assert report.level == "full"
+    # the gate itself: executor construction under validate='full' passes
+    assert compiled.executor(1) is not None
+
+
+def test_plan_verification_error_carries_report():
+    report = verify_network(_plan("vgg16"), level="plan")
+    err = PlanVerificationError(report)
+    assert err.report is report

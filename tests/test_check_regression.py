@@ -5,7 +5,6 @@ predict-only regeneration must match benchmarks/baseline/BENCH_e2e.json.
 import json
 import os
 
-import pytest
 
 from benchmarks.check_regression import (
     DEFAULT_PATTERN,

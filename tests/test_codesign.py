@@ -6,15 +6,8 @@ from hypothesis import given, settings, strategies as st
 
 from repro.core.codesign import MB, layer_roofline, sweep_cache_size, sweep_lanes
 from repro.core.conv_spec import ConvSpec
-from repro.core.vmem_model import (
-    BlockConfig,
-    GemmShape,
-    autotune_gemm,
-    candidate_blocks,
-    predict_gemm,
-)
-from repro.hw import V5E
-from repro.roofline.analysis import CollectiveOp, parse_collectives
+from repro.core.vmem_model import GemmShape, autotune_gemm, candidate_blocks
+from repro.roofline.analysis import parse_collectives
 
 
 @settings(max_examples=30, deadline=None)

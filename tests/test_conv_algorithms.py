@@ -1,5 +1,4 @@
 """Core conv algorithms vs the XLA oracle + selector rules (hypothesis)."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

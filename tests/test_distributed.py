@@ -1,10 +1,8 @@
 """Distribution layer: FT state machines (in-process) + sharding rules,
 pipeline parallelism, and compressed all-reduce (subprocess, forced devices)."""
 import json
-import os
 
 import jax
-import numpy as np
 import pytest
 
 from conftest import run_with_devices

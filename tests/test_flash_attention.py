@@ -1,5 +1,4 @@
 """Flash-attention Pallas kernel vs oracle: shape/feature sweeps."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -1,5 +1,4 @@
 """Per-kernel allclose sweeps vs the pure-jnp oracles (interpret mode)."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

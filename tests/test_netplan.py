@@ -23,7 +23,6 @@ import pytest
 from repro.core.netplan import (
     Layout,
     NetworkExecutor,
-    build_network_plan,
     plan_network,
     prepare_net_params,
     run_network,
@@ -116,23 +115,9 @@ def test_executor_batch_keyed_network_cache(tmp_path):
 # Layout elision: the jaxpr has no interior pad/slice ops
 
 
-def _boundary_ops(fn, *args):
-    """Pad/slice/gather primitive names in the jaxpr, excluding everything
-    inside pallas_call kernels (kernel-internal data movement)."""
-    names = []
-
-    def walk(jx):
-        for eqn in jx.eqns:
-            if eqn.primitive.name == "pallas_call":
-                continue
-            names.append(eqn.primitive.name)
-            for v in eqn.params.values():
-                if hasattr(v, "jaxpr"):
-                    walk(v.jaxpr)
-
-    walk(jax.make_jaxpr(fn)(*args).jaxpr)
-    return [n for n in names
-            if n in ("pad", "slice", "dynamic_slice", "gather")]
+# The walker now lives in the static-analysis subsystem (it is the elision
+# pass's foundation); the test keeps its old local name.
+from repro.analysis import boundary_ops as _boundary_ops  # noqa: E402
 
 
 def test_two_conv_chain_jaxpr_has_no_interior_pad_or_slice():

@@ -1,15 +1,13 @@
 """End-to-end behaviour tests for the full system."""
 import json
 import os
-import shutil
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro import configs
-from repro.configs.base import SHAPES, ShapeSpec, cell_is_runnable
+from repro.configs.base import ShapeSpec
 from repro.optim import AdamWConfig, warmup_cosine
 from repro.train import TrainRunConfig, train
 

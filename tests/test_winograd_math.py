@@ -1,8 +1,5 @@
 """Algebraic validation of the F(6x6,3x3) Winograd transform set."""
-import jax
-import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core.winograd import AT, BT, G, OUT_TILE, TILE, winograd_flops
 
