@@ -36,8 +36,13 @@ import sys
 import tempfile
 from typing import Any, Dict, List, Optional, Tuple
 
-# Deterministic modeled rows only — see module docstring.
-DEFAULT_PATTERN = r"^e2e_.*_L\d+$|^e2e_.*_predicted_total$"
+# Deterministic modeled rows only — see module docstring.  The
+# serving_resilience row is a zero-cost proof (seconds = sum of the
+# engine's degradation counters, 0.0 healthy): gating it catches a
+# baseline that silently serves from a fallback rung.
+DEFAULT_PATTERN = (
+    r"^e2e_.*_L\d+$|^e2e_.*_predicted_total$|^e2e_.*_serving_resilience$"
+)
 DEFAULT_TOLERANCE = 0.05
 # The committed baseline's generation recipe; regen must match it exactly
 # or every row would spuriously drift.

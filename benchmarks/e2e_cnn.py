@@ -149,6 +149,30 @@ def run(
                      "fp32_predicted_total_s": t32})
     compiled8.save_plans()
 
+    # -- 1d. serving resilience: healthy-path degradation counters -----------
+    # One request through the serving engine; ``seconds`` is the sum of the
+    # resilience degradation counters — 0.0 on a healthy stack — so the
+    # regression gate's exact-equality rule for zero-second rows catches a
+    # silently-degraded baseline (any fallback, eviction, retry, or
+    # request failure flips the row non-zero and fails the build).
+    import numpy as np
+
+    eng = compiled.serve(buckets=(1,))
+    eng.submit(np.zeros((h, w, in_ch), np.float32))
+    eng.run()
+    health = eng.health()
+    degraded = float(
+        health["fallback_depth"] + health["evictions"]
+        + health["rejections"] + health["retries"]
+        + health["request_failures"] + health["fallback_batches"]
+    )
+    emit(f"e2e_{model}_serving_resilience", degraded,
+         f"fallback_depth={health['fallback_depth']} "
+         f"evictions={health['evictions']} retries={health['retries']} "
+         f"failures={health['request_failures']} "
+         f"ladder={'>'.join(health['ladder'])}",
+         provenance=health)
+
     if predict_only:
         # Modeled rows only: skip the wall-clock sections (2, 2b, 2c) but
         # keep the warm-cache proof — everything emitted is deterministic,

@@ -245,15 +245,19 @@ class CompiledCNN(CompiledModel):
         self.save_plans()       # no-op unless this batch tuned new plans
         return executor(x)
 
-    def serve(self, buckets: Optional[Tuple[int, ...]] = None):
+    def serve(self, buckets: Optional[Tuple[int, ...]] = None, **kw):
         """A CNNServingEngine over this compilation's bucket ladder.
 
         Everything else the engine needs (impl, interpret, dtype, mesh,
-        planner, cache) comes from this compilation — that is the point.
+        planner, cache, resilience policy — ``max_queue``,
+        ``default_deadline_s``, ``fallback``, ``retries``) comes from this
+        compilation — that is the point.  ``engine.health()`` reports the
+        resilience state; ``kw`` passes test hooks (``clock=``, ``faults=``,
+        ``probe_after=``) through to the engine.
         """
         from repro.serving.cnn_engine import CNNServingEngine
 
-        return CNNServingEngine.from_compiled(self, buckets=buckets)
+        return CNNServingEngine.from_compiled(self, buckets=buckets, **kw)
 
     def plan_report(self, batch: Optional[int] = None) -> Dict[str, Any]:
         """The resolved co-design decisions, machine-readable.

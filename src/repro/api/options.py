@@ -20,6 +20,7 @@ _IMPLS = ("jax", "pallas")
 _MODES = ("cost", "measure")
 _DTYPES = ("float32", "bfloat16", "float16", "int8")
 _VALIDATE = ("off", "plan", "full")
+_FALLBACK = ("ladder", "off")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -61,6 +62,25 @@ class ExecutionOptions:
                       VMEM / traffic / elision / dtype passes).  Any error
                       finding raises ``PlanVerificationError`` before the
                       executor can run.
+
+    Serving resilience (serving/resilience.py; all inert at the defaults):
+      max_queue       bounded admission: ``submit`` raises a typed
+                      ``Backpressure`` once the queue holds this many
+                      requests (None = unbounded, the pre-resilience
+                      behavior).
+      default_deadline_s
+                      default per-request latency budget in seconds; an
+                      expired request is evicted with a ``DeadlineExceeded``
+                      result instead of being served stale.  Per-request
+                      ``submit(deadline_s=...)`` overrides.  None = no
+                      deadline.
+      fallback        'ladder' routes executor failures down the degradation
+                      ladder (pallas → pallas-interpret → pure-XLA fp32
+                      reference; jit → eager decode for LMs) behind a
+                      per-bucket circuit breaker; 'off' fails requests on
+                      the first unrecovered fault instead of degrading.
+      retries         transient-failure retries per ladder rung before
+                      descending (>= 0).
     """
 
     impl: str = "jax"
@@ -76,6 +96,10 @@ class ExecutionOptions:
     shard_batch: bool = True
     dtype: str = "float32"
     validate: str = "off"
+    max_queue: Optional[int] = None
+    default_deadline_s: Optional[float] = None
+    fallback: str = "ladder"
+    retries: int = 1
 
     def __post_init__(self) -> None:
         if self.validate not in _VALIDATE:
@@ -102,6 +126,21 @@ class ExecutionOptions:
         if self.dtype not in _DTYPES:
             raise ValueError(
                 f"dtype must be one of {_DTYPES}, got {self.dtype!r}"
+            )
+        if self.fallback not in _FALLBACK:
+            raise ValueError(
+                f"fallback must be one of {_FALLBACK}, got {self.fallback!r}"
+            )
+        if self.retries < 0:
+            raise ValueError(f"retries must be >= 0, got {self.retries}")
+        if self.max_queue is not None and self.max_queue < 1:
+            raise ValueError(
+                f"max_queue must be None or >= 1, got {self.max_queue}"
+            )
+        if self.default_deadline_s is not None and self.default_deadline_s <= 0:
+            raise ValueError(
+                f"default_deadline_s must be None or > 0, got "
+                f"{self.default_deadline_s}"
             )
 
     @property

@@ -34,6 +34,7 @@ import dataclasses
 import json
 import os
 import tempfile
+import warnings
 from typing import Any, Dict, List, Optional, Tuple
 
 from repro.core.conv_spec import ConvAlgorithm, ConvSpec, select_algorithm
@@ -57,6 +58,138 @@ PLAN_CACHE_VERSION = 5
 DEFAULT_CACHE_PATH = os.environ.get(
     "REPRO_PLAN_CACHE", os.path.join(".cache", "conv_plans.json")
 )
+
+# ---------------------------------------------------------------------------
+# Cache corruption recovery
+#
+# A cache file that fails ``json.load`` used to be silently treated as a
+# cold start — and then *clobbered* by the next save, destroying the one
+# artifact that could explain what went wrong (and every salvageable tune
+# in it).  Instead: quarantine the corrupt bytes (rename to
+# ``<path>.corrupt-<pid>``, never overwritten), warn once per path per
+# process, and salvage every top-level "plans"/"networks" entry that still
+# parses — a truncated tail loses the last few entries, not the whole tune
+# history.
+
+# Paths already warned about in this process (warn once, not per Planner).
+_QUARANTINE_WARNED: set = set()
+
+
+def _salvage_section(text: str, name: str) -> Dict[str, Any]:
+    """Best-effort recovery of one top-level ``"name": {...}`` JSON section.
+
+    The cache is written with ``indent=1, sort_keys=True``, so a top-level
+    section opens as ``\\n "name": {`` — the indent-anchored pattern cannot
+    collide with same-named keys nested inside opaque network entries.  From
+    the opening brace, ``raw_decode`` walks ``"key": value`` pairs one at a
+    time and keeps everything that parses; the first undecodable span (the
+    truncation/garbage point) ends the walk.
+    """
+    anchor = f'\n "{name}": {{'
+    start = text.find(anchor)
+    if start >= 0:
+        pos = start + len(anchor)
+    else:
+        # Fallback for caches not written by us (compact or re-indented).
+        import re
+
+        m = re.search(r'"%s"\s*:\s*\{' % re.escape(name), text)
+        if m is None:
+            return {}
+        pos = m.end()
+    decoder = json.JSONDecoder()
+    out: Dict[str, Any] = {}
+    n = len(text)
+    while pos < n:
+        while pos < n and text[pos] in " \t\r\n,":
+            pos += 1
+        if pos >= n or text[pos] == "}":
+            break
+        if text[pos] != '"':
+            break
+        try:
+            key, end = decoder.raw_decode(text, pos)
+            pos = end
+            while pos < n and text[pos] in " \t\r\n":
+                pos += 1
+            if pos >= n or text[pos] != ":":
+                break
+            pos += 1
+            while pos < n and text[pos] in " \t\r\n":
+                pos += 1
+            value, end = decoder.raw_decode(text, pos)
+            pos = end
+        except (json.JSONDecodeError, ValueError):
+            break
+        out[str(key)] = value
+    return out
+
+
+def salvage_cache_text(text: str) -> Dict[str, Any]:
+    """Recover whatever top-level structure still parses from corrupt cache
+    bytes: the version/chip scalars plus every intact "plans"/"networks"
+    entry before the corruption point."""
+    data: Dict[str, Any] = {}
+    for scalar in ("version", "chip"):
+        sec = _salvage_section_scalar(text, scalar)
+        if sec is not None:
+            data[scalar] = sec
+    data["plans"] = _salvage_section(text, "plans")
+    data["networks"] = _salvage_section(text, "networks")
+    return data
+
+
+def _salvage_section_scalar(text: str, name: str) -> Optional[Any]:
+    import re
+
+    m = re.search(r'"%s"\s*:\s*' % re.escape(name), text)
+    if m is None:
+        return None
+    try:
+        value, _ = json.JSONDecoder().raw_decode(text, m.end())
+    except (json.JSONDecodeError, ValueError):
+        return None
+    return value
+
+
+def _quarantine_cache(path: str, text: Optional[str]) -> Dict[str, Any]:
+    """Move a corrupt cache aside and salvage what parses.
+
+    The quarantined copy is never overwritten: if ``<path>.corrupt-<pid>``
+    already exists (two corruption events in one process lifetime), a
+    ``-N`` counter suffix picks a fresh name.  Returns the salvaged data
+    (possibly empty) for the caller to merge.
+    """
+    dest = f"{path}.corrupt-{os.getpid()}"
+    n = 1
+    while os.path.exists(dest):
+        dest = f"{path}.corrupt-{os.getpid()}-{n}"
+        n += 1
+    try:
+        os.replace(path, dest)
+    except OSError:
+        dest = None     # the file vanished or is unmovable; still salvage
+    salvaged = salvage_cache_text(text) if text else {}
+    if salvaged.get("plans") or salvaged.get("networks"):
+        # sort_keys writes "version" last, so truncation usually eats it.
+        # Entries still go through per-entry validation on load
+        # (ConvPlan.from_json try/except; network records validate in
+        # netplan) — a wrong-version survivor is dropped there, not here.
+        salvaged.setdefault("version", PLAN_CACHE_VERSION)
+    n_entries = len(salvaged.get("plans", {})) + len(
+        salvaged.get("networks", {})
+    )
+    if path not in _QUARANTINE_WARNED:
+        _QUARANTINE_WARNED.add(path)
+        warnings.warn(
+            f"plan cache {path!r} is corrupt"
+            + (f"; quarantined to {dest!r}" if dest else "")
+            + f"; salvaged {n_entries} entr{'y' if n_entries == 1 else 'ies'}"
+            f" (cold re-tune covers the rest)",
+            RuntimeWarning,
+            stacklevel=3,
+        )
+    return salvaged
 
 
 @dataclasses.dataclass(frozen=True)
@@ -237,10 +370,21 @@ class Planner:
 
     def _load(self) -> None:
         try:
-            with open(self.cache_path) as f:
-                data = json.load(f)
-        except (OSError, json.JSONDecodeError):
-            return  # unreadable/corrupt cache is a cold start, not an error
+            # errors="replace": corrupt bytes may not even be UTF-8; decode
+            # what we can and let the JSON layer (or salvage) sort it out.
+            with open(self.cache_path, errors="replace") as f:
+                text = f.read()
+        except OSError:
+            return  # unreadable cache is a cold start, not an error
+        try:
+            data = json.loads(text)
+            if not isinstance(data, dict):
+                raise json.JSONDecodeError("top level is not an object",
+                                           text, 0)
+        except json.JSONDecodeError:
+            # Corrupt cache: quarantine the bytes (never clobber them on
+            # the next save) and salvage every entry that still parses.
+            data = _quarantine_cache(self.cache_path, text)
         if data.get("version") != PLAN_CACHE_VERSION:
             return
         for key, d in data.get("plans", {}).items():
@@ -275,14 +419,31 @@ class Planner:
             plans: Dict[str, Any] = {}
             networks: Dict[str, Any] = {}
             if os.path.exists(self.cache_path):
+                disk: Dict[str, Any] = {}
                 try:
-                    with open(self.cache_path) as f:
-                        disk = json.load(f)
-                    if disk.get("version") == PLAN_CACHE_VERSION:
-                        plans.update(disk.get("plans", {}))
-                        networks.update(disk.get("networks", {}))
-                except (OSError, json.JSONDecodeError):
+                    with open(self.cache_path, errors="replace") as f:
+                        disk_text = f.read()
+                    try:
+                        disk = json.loads(disk_text)
+                        if not isinstance(disk, dict):
+                            raise json.JSONDecodeError(
+                                "top level is not an object", disk_text, 0
+                            )
+                    except json.JSONDecodeError:
+                        # A concurrent writer crashed mid-save (or the file
+                        # rotted): quarantine + salvage, same as _load —
+                        # the merge keeps every entry that still parses
+                        # instead of silently discarding the disk state.
+                        disk = _quarantine_cache(self.cache_path, disk_text)
+                except OSError:
                     pass
+                if disk.get("version") == PLAN_CACHE_VERSION:
+                    p = disk.get("plans", {})
+                    nw = disk.get("networks", {})
+                    if isinstance(p, dict):
+                        plans.update(p)
+                    if isinstance(nw, dict):
+                        networks.update(nw)
             plans.update({k: p.to_json() for k, p in self._plans.items()})
             networks.update(self._networks)
             payload = {

@@ -1,2 +1,33 @@
 from repro.serving.engine import ServingEngine, Request
 from repro.serving.cnn_engine import CNNServingEngine, ImageRequest
+from repro.serving.resilience import (
+    Backpressure,
+    CircuitBreaker,
+    DeadlineExceeded,
+    FallbackExhausted,
+    InvalidRequest,
+    QueueNotDrained,
+    RequestFailed,
+    ResilientEngine,
+    ServingError,
+    cnn_fallback_ladder,
+    is_failure,
+    lm_fallback_ladder,
+)
+from repro.serving.faults import (
+    FakeClock,
+    FaultPlan,
+    FaultSpec,
+    InjectedFault,
+    corrupt_cache_file,
+)
+
+__all__ = [
+    "ServingEngine", "Request", "CNNServingEngine", "ImageRequest",
+    "Backpressure", "CircuitBreaker", "DeadlineExceeded",
+    "FallbackExhausted", "InvalidRequest", "QueueNotDrained",
+    "RequestFailed", "ResilientEngine", "ServingError",
+    "cnn_fallback_ladder", "is_failure", "lm_fallback_ladder",
+    "FakeClock", "FaultPlan", "FaultSpec", "InjectedFault",
+    "corrupt_cache_file",
+]

@@ -25,6 +25,14 @@ all come from one compilation instead of being re-plumbed here.  Build it
 as ``repro.compile(model, params, options).serve()``; direct construction
 is a deprecation shim that compiles on your behalf.
 
+The engine threads the ``ResilientEngine`` machinery (serving/resilience.py):
+``submit`` validates payloads and applies backpressure/deadlines, ``step``
+evicts expired requests and routes the executor call through a per-bucket
+fallback ladder (pallas → pallas-interpret → pure-XLA fp32 reference) with
+a circuit breaker, and ``health()`` reports the degradation state.  With
+default options and no faults, all of it is inert: rung 0 *is* the
+pre-existing executor and outputs are bit-identical.
+
 Stats record per-bucket batch counts and padded slots, so a deployment can
 check its bucket ladder against its real arrival distribution.
 """
@@ -38,15 +46,28 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.planner import DEFAULT_CACHE_PATH
+from repro.serving.resilience import (
+    DEFAULT_PROBE_AFTER,
+    FallbackExhausted,
+    QueueNotDrained,
+    RequestFailed,
+    ResilientEngine,
+    ServingError,
+    cnn_fallback_ladder,
+    is_failure,
+    validate_image,
+)
 
 
 @dataclasses.dataclass
 class ImageRequest:
     uid: int
     image: np.ndarray               # (H, W, C) float32
+    deadline: Optional[float] = None    # absolute, engine-clock seconds
+    priority: int = 0                   # higher dispatches first
 
 
-class CNNServingEngine:
+class CNNServingEngine(ResilientEngine):
     """Batched CNN inference over a fixed bucket ladder of batch sizes."""
 
     def __init__(
@@ -64,6 +85,10 @@ class CNNServingEngine:
         planner=None,
         devices: Optional[Sequence[Any]] = None,
         _compiled=None,
+        *,
+        clock=None,
+        faults=None,
+        probe_after: int = DEFAULT_PROBE_AFTER,
     ):
         if not buckets or any(int(b) <= 0 for b in buckets):
             raise ValueError(f"buckets must be positive, got {buckets!r}")
@@ -116,42 +141,83 @@ class CNNServingEngine:
             "padded_slots": 0,
             "requests": 0,
         }
+        opts = _compiled.options
+        self._resilience_init(
+            ladder=cnn_fallback_ladder(opts),
+            max_queue=getattr(opts, "max_queue", None),
+            default_deadline_s=getattr(opts, "default_deadline_s", None),
+            retries=getattr(opts, "retries", 1),
+            fallback=getattr(opts, "fallback", "ladder"),
+            probe_after=probe_after,
+            clock=clock,
+            faults=faults,
+        )
+        # Fallback rungs are built lazily on first failure: the happy path
+        # creates no extra executors, triggers no extra planning, and
+        # leaves the plan cache byte-identical to pre-resilience behavior.
+        self._fallback_fns: Dict[Tuple[int, int], Any] = {}
 
     @classmethod
     def from_compiled(cls, compiled, buckets: Optional[Sequence[int]] = None,
-                      ) -> "CNNServingEngine":
+                      **kw) -> "CNNServingEngine":
         """The facade path (``CompiledModel.serve()``): consume an existing
-        compilation — its planner, cache, options, and device mesh."""
+        compilation — its planner, cache, options, and device mesh.
+        Resilience test hooks (``clock=``, ``faults=``, ``probe_after=``)
+        pass through."""
         return cls(
             compiled.model.layers, compiled.params, compiled.model.input_hw,
             in_channels=compiled.model.in_channels,
             buckets=tuple(buckets) if buckets else compiled.options.buckets,
-            _compiled=compiled,
+            _compiled=compiled, **kw,
         )
 
     # -- public api ---------------------------------------------------------
 
-    def submit(self, image: np.ndarray) -> int:
-        """Enqueue one (H, W, C) image; returns its uid."""
-        image = np.asarray(image)
-        want = (*self.input_hw, self.in_channels)
-        if image.shape != want:
-            raise ValueError(f"expected image shape {want}, got {image.shape}")
+    def submit(self, image: np.ndarray, deadline_s: Optional[float] = None,
+               priority: int = 0) -> int:
+        """Enqueue one (H, W, C) image; returns its uid.
+
+        ``deadline_s`` is a relative budget (None = the options' default);
+        an expired request is evicted with a ``DeadlineExceeded`` result.
+        Raises ``Backpressure`` when the queue is at ``max_queue`` and
+        ``InvalidRequest`` (a ValueError) for bad shape/dtype/non-finite
+        payloads — one NaN image must not poison a co-batched padded batch.
+        """
+        self._check_admission(len(self.queue))
+        image = validate_image(
+            image, (*self.input_hw, self.in_channels)
+        )
+        deadline = self._absolute_deadline(deadline_s)
         self._uid += 1
         self.stats["requests"] += 1
-        self.queue.append(ImageRequest(self._uid, image))
+        self.queue.append(
+            ImageRequest(self._uid, image, deadline=deadline,
+                         priority=int(priority))
+        )
         return self._uid
 
-    def step(self) -> Dict[int, np.ndarray]:
-        """Serve one batch from the queue.  Returns uid -> output row.
+    def step(self) -> Dict[int, Any]:
+        """Serve one batch from the queue.  Returns uid -> output row (or a
+        typed ``DeadlineExceeded``/``RequestFailed`` failure marker).
 
         Bucket policy: the largest bucket that fills completely from the
         queue; when even the smallest bucket cannot fill, the smallest
         bucket that covers what is pending runs padded (zero images, their
-        rows dropped) — latency over utilization at the tail.
+        rows dropped) — latency over utilization at the tail.  Expired
+        requests are evicted before dispatch (never served stale); the
+        executor call runs through the per-bucket fallback ladder.
         """
         if not self.queue:
             return {}
+        # Evict expired work first: a stale result is worse than none.
+        live_reqs, results = self._split_expired(self.queue, self._now())
+        # Priority order, FIFO within a class: the key is the identity
+        # permutation for default priority=0 submissions (stable sort).
+        live_reqs.sort(key=lambda r: (-r.priority, r.uid))
+        self.queue = live_reqs
+        if not self.queue:
+            return results
+        self._step_index += 1
         pending = len(self.queue)
         full = [b for b in self.buckets if b <= pending]
         bucket = max(full) if full else min(
@@ -166,31 +232,119 @@ class CNNServingEngine:
                 [batch, np.zeros((pad, *batch.shape[1:]), batch.dtype)]
             )
             self.stats["padded_slots"] += pad
-        self.stats["batches"][bucket] += 1
-        out = np.asarray(
-            jax.block_until_ready(
-                self._executors[bucket](jnp.asarray(batch, self.input_dtype))
+        live = np.zeros(bucket, bool)
+        live[: len(reqs)] = True
+        try:
+            out, rung, bad_rows = self._guarded_call(
+                bucket, (jnp.asarray(batch, self.input_dtype),), live=live
             )
-        )
-        return {r.uid: out[i] for i, r in enumerate(reqs)}
+        except FallbackExhausted as e:
+            # Batch-level loss surfaces as per-request typed failures: the
+            # engine itself survives and the next step starts a fresh probe.
+            self._res_stats["request_failures"] += len(reqs)
+            for r in reqs:
+                results[r.uid] = RequestFailed(
+                    uid=r.uid, reason=str(e),
+                    rung=self._ladder[-1].name,
+                )
+            return results
+        out = np.asarray(jax.block_until_ready(out))
+        self.stats["batches"][bucket] += 1
+        rung_name = self._ladder[rung].name
+        for i, r in enumerate(reqs):
+            if bad_rows is not None and bad_rows[i]:
+                # Row-level poison with healthy neighbours: request-level
+                # failure, not batch-level — the rest of the batch serves.
+                self._res_stats["request_failures"] += 1
+                results[r.uid] = RequestFailed(
+                    uid=r.uid,
+                    reason="non-finite output row survived retries",
+                    rung=rung_name,
+                )
+            else:
+                results[r.uid] = out[i]
+        return results
 
-    def run(self, max_steps: int = 10_000) -> Dict[int, np.ndarray]:
-        """Drain the queue.  Returns uid -> output for every request."""
-        results: Dict[int, np.ndarray] = {}
+    def run(self, max_steps: int = 10_000) -> Dict[int, Any]:
+        """Drain the queue.  Returns uid -> output for every request.
+
+        Raises ``QueueNotDrained`` (carrying the partial results and the
+        remaining uids) when ``max_steps`` is exhausted with work still
+        queued — an incomplete dict silently missing uids made ``infer``
+        callers KeyError far from the cause.
+        """
+        results: Dict[int, Any] = {}
         for _ in range(max_steps):
             if not self.queue:
                 break
             results.update(self.step())
+        if self.queue:
+            raise QueueNotDrained(
+                results, [r.uid for r in self.queue], max_steps
+            )
         return results
 
     def infer(self, images: np.ndarray) -> np.ndarray:
         """Synchronous convenience: submit a (N, H, W, C) stack, run, and
-        return outputs in submission order."""
+        return outputs in submission order.  Raises ``ServingError`` if any
+        request came back as a typed failure instead of an output row."""
         uids = [self.submit(img) for img in np.asarray(images)]
         results = self.run()
+        failed = {u: results[u] for u in uids if is_failure(results[u])}
+        if failed:
+            raise ServingError(
+                f"{len(failed)}/{len(uids)} request(s) failed: "
+                f"{list(failed.values())[:3]}"
+            )
         return np.stack([results[u] for u in uids])
 
     @property
     def warm(self) -> bool:
         """True when every bucket planned from the cache (zero tunes)."""
         return self.planner.stats["tunes"] == 0
+
+    # -- resilience hooks ---------------------------------------------------
+
+    def _rung_fn(self, bucket: int, rung_index: int):
+        """The executor for one (bucket, rung).  Rung 0 is the compiled
+        fast path untouched; deeper rungs build lazily on first failure."""
+        if rung_index == 0:
+            return self._executors[bucket]
+        key = (bucket, rung_index)
+        fn = self._fallback_fns.get(key)
+        if fn is None:
+            fn = self._build_rung(bucket, self._ladder[rung_index])
+            self._fallback_fns[key] = fn
+        return fn
+
+    def _build_rung(self, bucket: int, rung):
+        compiled = self.compiled
+        if rung.name == "pallas-interpret":
+            # Same NetworkPlan, same params, interpret-mode kernels: the
+            # rung that survives a miscompiled/poisoned lowered kernel
+            # while staying bit-compatible with the plan's semantics.
+            from repro.core.netplan import NetworkExecutor
+
+            return NetworkExecutor(
+                compiled.network_plan(bucket), compiled.params,
+                interpret=True,
+                devices=getattr(compiled, "_devices", None),
+                pretransform=compiled.options.pretransform,
+                calibration=getattr(compiled, "calibration", None),
+            )
+        # "xla-ref": the per-layer pure-XLA fp32 reference forward — no
+        # Pallas kernels, no plans, no quantization (int8 degrades to fp32).
+        from repro.models.cnn import cnn_forward, fold_batchnorm
+
+        layers = list(self.layers)
+        folded = fold_batchnorm(list(compiled.params), layers)
+        return jax.jit(
+            lambda x: cnn_forward(folded, layers, x, impl="xla")
+        )
+
+    def _rows_nonfinite(self, out, live):
+        arr = np.asarray(out)
+        if arr.dtype.kind != "f":
+            return None
+        flat = arr.reshape(arr.shape[0], -1)
+        return ~np.isfinite(flat).all(axis=1)

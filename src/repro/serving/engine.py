@@ -4,11 +4,20 @@ The engine keeps a fixed-capacity decode batch; finished sequences free
 their slot, queued requests prefill into it.  Decode steps are one jitted
 ``serve_step`` over the whole batch regardless of occupancy (standard TPU
 serving shape discipline: no recompiles as requests come and go).
+
+The ``ResilientEngine`` machinery (serving/resilience.py) is threaded
+through: ``submit`` validates prompts and applies backpressure/deadlines,
+the decode call runs through a jit → eager fallback ladder behind a
+circuit breaker (the eager rung survives XLA compilation bugs), expired
+requests — queued *or* mid-decode — are evicted with ``DeadlineExceeded``
+results, and ``health()`` reports the degradation state.  With default
+options and no faults all of it is inert: rung 0 is the pre-existing
+jitted decode and outputs are bit-identical.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -16,6 +25,16 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import transformer as tf
+from repro.serving.resilience import (
+    DEFAULT_PROBE_AFTER,
+    DeadlineExceeded,
+    FallbackExhausted,
+    QueueNotDrained,
+    RequestFailed,
+    ResilientEngine,
+    lm_fallback_ladder,
+    validate_prompt,
+)
 
 
 @dataclasses.dataclass
@@ -25,15 +44,26 @@ class Request:
     max_new_tokens: int
     out_tokens: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    deadline: Optional[float] = None    # absolute, engine-clock seconds
+    priority: int = 0                   # higher admits first
 
 
-class ServingEngine:
+class ServingEngine(ResilientEngine):
     @classmethod
     def from_compiled(cls, compiled, batch_size: Optional[int] = None,
                       capacity: int = 256, **kw) -> "ServingEngine":
         """Consume a facade compilation (``repro.compile(cfg, params,
-        options).serve()`` routes here): model config, params, and the
-        default batch (the largest option bucket) come from it."""
+        options).serve()`` routes here): model config, params, the default
+        batch (the largest option bucket), and the resilience policy
+        (``max_queue``/``default_deadline_s``/``fallback``/``retries``)
+        come from it; ``kw`` overrides win."""
+        opts = compiled.options
+        kw.setdefault("max_queue", getattr(opts, "max_queue", None))
+        kw.setdefault(
+            "default_deadline_s", getattr(opts, "default_deadline_s", None)
+        )
+        kw.setdefault("retries", getattr(opts, "retries", 1))
+        kw.setdefault("fallback", getattr(opts, "fallback", "ladder"))
         return cls(
             compiled.model, compiled.params,
             batch_size=batch_size or max(compiled.options.buckets),
@@ -41,7 +71,15 @@ class ServingEngine:
         )
 
     def __init__(self, cfg: ModelConfig, params, batch_size: int,
-                 capacity: int, temperature: float = 0.0, seed: int = 0):
+                 capacity: int, temperature: float = 0.0, seed: int = 0,
+                 *,
+                 max_queue: Optional[int] = None,
+                 default_deadline_s: Optional[float] = None,
+                 retries: int = 1,
+                 fallback: str = "ladder",
+                 probe_after: int = DEFAULT_PROBE_AFTER,
+                 clock=None,
+                 faults=None):
         assert cfg.supports_decode, f"{cfg.name} is encoder-only"
         self.cfg = cfg
         self.params = params
@@ -69,40 +107,102 @@ class ServingEngine:
             lambda p, c, t, pos, live: tf.decode_step(cfg, p, c, t, pos,
                                                       live=live)
         )
+        self._resilience_init(
+            ladder=lm_fallback_ladder(),
+            max_queue=max_queue,
+            default_deadline_s=default_deadline_s,
+            retries=retries,
+            fallback=fallback,
+            probe_after=probe_after,
+            clock=clock,
+            faults=faults,
+        )
+        # The eager rung is built lazily on first failure; request-level
+        # failures raised mid-decode accumulate here (``_decode_one_step``
+        # keeps its no-argument signature for subclasses) and ``run``
+        # drains them into its results.
+        self._eager_decode = None
+        self._failures: Dict[int, Any] = {}
 
     # -- public api -----------------------------------------------------------
 
-    def submit(self, prompt: np.ndarray, max_new_tokens: int = 16) -> int:
-        prompt = np.asarray(prompt, np.int32)
-        if prompt.size == 0:
-            raise ValueError(
-                "empty prompt: decode needs at least one token to condition on"
-            )
+    def submit(self, prompt: np.ndarray, max_new_tokens: int = 16,
+               deadline_s: Optional[float] = None, priority: int = 0) -> int:
+        """Enqueue one prompt; returns its uid.
+
+        Raises ``Backpressure`` when the queue is at ``max_queue`` and
+        ``InvalidRequest`` (a ValueError) for empty/float/out-of-vocab
+        prompts — a bad token array must not corrupt the batched embedding
+        lookup for its co-batched neighbours.
+        """
+        self._check_admission(len(self.queue))
+        prompt = validate_prompt(prompt, self.cfg.vocab_size)
+        deadline = self._absolute_deadline(deadline_s)
         self._uid += 1
-        self.queue.append(Request(self._uid, prompt, max_new_tokens))
+        self.queue.append(
+            Request(self._uid, prompt, max_new_tokens, deadline=deadline,
+                    priority=int(priority))
+        )
         return self._uid
 
-    def run(self, max_steps: int = 10_000) -> Dict[int, List[int]]:
-        """Drive until all submitted requests finish.  Returns uid->tokens."""
-        results: Dict[int, List[int]] = {}
+    def run(self, max_steps: int = 10_000) -> Dict[int, Any]:
+        """Drive until all submitted requests finish.  Returns uid->tokens
+        (or a typed ``DeadlineExceeded``/``RequestFailed`` marker).
+
+        Raises ``QueueNotDrained`` (partial results + remaining uids
+        attached) when ``max_steps`` is exhausted with work still live.
+        """
+        results: Dict[int, Any] = {}
         for _ in range(max_steps):
+            self._evict_expired(results)
             self._admit()
+            if self._failures:
+                results.update(self._failures)
+                self._failures.clear()
             live = [i for i, r in enumerate(self.slot_req) if r is not None]
             if not live and not self.queue:
                 break
             self._decode_one_step()
+            if self._failures:
+                results.update(self._failures)
+                self._failures.clear()
             for i, r in enumerate(self.slot_req):
                 if r is not None and r.done:
                     results[r.uid] = r.out_tokens
                     self.slot_req[i] = None
+        else:
+            remaining = [r.uid for r in self.queue] + [
+                r.uid for r in self.slot_req if r is not None
+            ]
+            if remaining:
+                raise QueueNotDrained(results, remaining, max_steps)
         return results
 
     # -- internals --------------------------------------------------------
+
+    def _evict_expired(self, results: Dict[int, Any]) -> None:
+        """Evict expired requests — queued *and* mid-decode (a stale slot
+        frees immediately so waiting work can admit)."""
+        now = self._now()
+        live, evicted = self._split_expired(self.queue, now)
+        self.queue = live
+        results.update(evicted)
+        for i, r in enumerate(self.slot_req):
+            if r is not None and r.deadline is not None and now >= r.deadline:
+                results[r.uid] = DeadlineExceeded(
+                    uid=r.uid, deadline=r.deadline, now=now
+                )
+                self._res_stats["evictions"] += 1
+                self.slot_req[i] = None
 
     def _admit(self):
         """Prefill queued requests into free slots, one token at a time via
         the decode path (slot-local; the global-batch prefill path is used
         by launch/serve.py where all slots start together)."""
+        if self.queue:
+            # Priority order, FIFO within a class (identity permutation for
+            # all-default priority=0 — stable sort on (-priority, uid)).
+            self.queue.sort(key=lambda r: (-r.priority, r.uid))
         for i in range(self.batch):
             if self.slot_req[i] is None and self.queue:
                 req = self.queue.pop(0)
@@ -115,8 +215,17 @@ class ServingEngine:
                     self.cache, self._fresh_cache, i
                 )
                 # Feed the prompt through decode steps for this slot.
-                for t in req.prompt[:-1]:
-                    self._step_slot(i, int(t))
+                try:
+                    for t in req.prompt[:-1]:
+                        self._step_slot(i, int(t))
+                except FallbackExhausted as e:
+                    self._res_stats["request_failures"] += 1
+                    self._failures[req.uid] = RequestFailed(
+                        uid=req.uid, reason=str(e),
+                        rung=self._ladder[-1].name,
+                    )
+                    self.slot_req[i] = None
+                    continue
                 req._last_token = int(req.prompt[-1])
 
     def _step_slot(self, slot: int, token: int):
@@ -131,10 +240,14 @@ class ServingEngine:
         tokens[slot, 0] = token
         live = np.zeros(self.batch, bool)
         live[slot] = True
-        logits, self.cache = self._decode(
-            self.params, self.cache, jnp.asarray(tokens),
-            jnp.asarray(self.pos, jnp.int32), jnp.asarray(live),
+        self._step_index += 1
+        out, _rung, _bad = self._guarded_call(
+            "decode",
+            (self.params, self.cache, jnp.asarray(tokens),
+             jnp.asarray(self.pos, jnp.int32), jnp.asarray(live)),
+            live=live,
         )
+        logits, self.cache = out
         self.pos[slot] += 1
         return np.asarray(logits[slot])
 
@@ -159,13 +272,42 @@ class ServingEngine:
         # sequence's slot and skipped the intermediate positions).  The
         # live mask keeps empty slots' state frozen.
         live = np.array([r is not None for r in self.slot_req], bool)
-        logits, self.cache = self._decode(
-            self.params, self.cache, jnp.asarray(tokens),
-            jnp.asarray(self.pos, jnp.int32), jnp.asarray(live),
-        )
+        self._step_index += 1
+        try:
+            out, rung, bad = self._guarded_call(
+                "decode",
+                (self.params, self.cache, jnp.asarray(tokens),
+                 jnp.asarray(self.pos, jnp.int32), jnp.asarray(live)),
+                live=live,
+            )
+        except FallbackExhausted as e:
+            # Every live request fails at request level; the engine itself
+            # survives and the next dispatch starts a fresh probe.
+            for i, r in enumerate(self.slot_req):
+                if r is not None:
+                    self._res_stats["request_failures"] += 1
+                    self._failures[r.uid] = RequestFailed(
+                        uid=r.uid, reason=str(e),
+                        rung=self._ladder[-1].name,
+                    )
+                    self.slot_req[i] = None
+            return
+        logits, self.cache = out
         logits_np = np.asarray(logits)
+        rung_name = self._ladder[rung].name
         for i, r in enumerate(self.slot_req):
             if r is None:
+                continue
+            if bad is not None and bad[i]:
+                # Row-level poison with healthy neighbours: request-level
+                # failure — the rest of the batch keeps decoding.
+                self._res_stats["request_failures"] += 1
+                self._failures[r.uid] = RequestFailed(
+                    uid=r.uid,
+                    reason="non-finite logits row survived retries",
+                    rung=rung_name,
+                )
+                self.slot_req[i] = None
                 continue
             nxt = self._sample(logits_np[i])
             r.out_tokens.append(nxt)
@@ -173,3 +315,23 @@ class ServingEngine:
             self.pos[i] += 1
             if len(r.out_tokens) >= r.max_new_tokens:
                 r.done = True
+
+    # -- resilience hooks ---------------------------------------------------
+
+    def _rung_fn(self, key, rung_index: int):
+        """Rung 0 is the jitted decode untouched; rung 1 runs the same
+        ``decode_step`` eagerly (op by op) — the path that survives XLA
+        compilation bugs, built lazily on first failure."""
+        if rung_index == 0:
+            return self._decode
+        if self._eager_decode is None:
+            cfg = self.cfg
+            self._eager_decode = lambda p, c, t, pos, live: tf.decode_step(
+                cfg, p, c, t, pos, live=live
+            )
+        return self._eager_decode
+
+    def _rows_nonfinite(self, out, live):
+        logits = np.asarray(out[0])
+        flat = logits.reshape(logits.shape[0], -1)
+        return ~np.isfinite(flat).all(axis=1)

@@ -1,0 +1,521 @@
+"""Serving-layer resilience: deadlines, backpressure, and a fallback ladder.
+
+The paper's co-design premise is that the *selector* picks the best viable
+algorithm per layer; resilience is the same idea applied to failure.  When
+the fast path dies — a transient XLA OOM, a poisoned kernel, a non-finite
+batch — the serving layer must degrade to the next-best plan instead of
+dying with it.  This module is the shared machinery both serving engines
+(`serving/cnn_engine.py`, `serving/engine.py`) thread through:
+
+  admission     ``submit(deadline_s=, priority=)`` rejects with a typed
+                ``Backpressure`` error once the queue holds
+                ``ExecutionOptions.max_queue`` requests, and validates the
+                payload (shape, dtype, finiteness) *before* it can poison a
+                whole co-batched padded batch.
+  deadlines     every request may carry an absolute deadline (per-request
+                ``deadline_s`` or ``ExecutionOptions.default_deadline_s``);
+                ``step()`` evicts expired requests with a
+                ``DeadlineExceeded`` result instead of serving stale work.
+                The clock is injectable (``FakeClock`` in serving/faults.py)
+                so expiry is deterministic under test.
+  fallback      executor calls run through a per-bucket **ladder** of
+                degraded realizations (pallas → pallas-interpret → pure-XLA
+                reference forward; int8 → fp32).  On exception or a fully
+                non-finite output the call retries ``retries`` times, then
+                descends one rung; rows that stay non-finite while the rest
+                of the batch is healthy become *request-level*
+                ``RequestFailed`` results (one poisoned image must not take
+                its co-batched neighbours down).
+  breaker       each bucket owns a CLOSED/OPEN/HALF_OPEN circuit breaker
+                with deterministic probe-after-N-steps recovery: a trip
+                pins the bucket at the deeper rung, ``probe_after``
+                dispatches later one batch probes the rung above, and a
+                successful probe climbs back — one poisoned bucket degrades
+                alone while the rest of the ladder stays fast.
+  health        ``engine.health()`` reports per-bucket breaker state,
+                fallback depth, evictions, rejections, and retry counts.
+
+Resilience is zero-cost on the happy path: rung 0 is the engine's existing
+executor (bit-identical outputs, identical plan-cache contents), fallback
+rungs are built lazily on first failure, and the default options
+(``max_queue=None``, ``default_deadline_s=None``) disable every gate.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Typed errors and per-request failure results
+
+
+class ServingError(Exception):
+    """Base of every typed serving-layer error."""
+
+
+class Backpressure(ServingError, RuntimeError):
+    """``submit`` rejected: the admission queue is at ``max_queue``."""
+
+    def __init__(self, queue_len: int, max_queue: int):
+        self.queue_len = queue_len
+        self.max_queue = max_queue
+        super().__init__(
+            f"admission queue full ({queue_len}/{max_queue}); retry later "
+            f"or raise ExecutionOptions.max_queue"
+        )
+
+
+class InvalidRequest(ServingError, ValueError):
+    """``submit`` rejected the payload before it could poison a batch."""
+
+
+class QueueNotDrained(ServingError, RuntimeError):
+    """``run(max_steps)`` exhausted its step budget with work still queued.
+
+    Carries the partial results and the remaining uids so no request is
+    silently lost (callers used to KeyError on the missing uids instead).
+    """
+
+    def __init__(self, results: Dict[int, Any], remaining: Sequence[int],
+                 max_steps: int):
+        self.results = dict(results)
+        self.remaining = list(remaining)
+        super().__init__(
+            f"queue not drained after {max_steps} steps: "
+            f"{len(self.remaining)} request(s) remaining "
+            f"(uids {self.remaining[:8]}{'...' if len(self.remaining) > 8 else ''}); "
+            f"partial results for {len(self.results)} request(s) are on "
+            f".results"
+        )
+
+
+class FallbackExhausted(ServingError, RuntimeError):
+    """Every ladder rung failed for one batch (internal; surfaces to the
+    caller as per-request ``RequestFailed`` results, never an engine crash)."""
+
+
+class _NonFiniteOutput(Exception):
+    """Internal marker: an otherwise-successful rung produced a fully
+    non-finite output (treated exactly like an executor exception)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class DeadlineExceeded:
+    """Result marker: the request expired in the queue and was evicted."""
+
+    uid: int
+    deadline: float
+    now: float
+
+    @property
+    def ok(self) -> bool:
+        return False
+
+
+@dataclasses.dataclass(frozen=True)
+class RequestFailed:
+    """Result marker: this request failed at request level (non-finite
+    output row, or every ladder rung exhausted)."""
+
+    uid: int
+    reason: str
+    rung: Optional[str] = None
+
+    @property
+    def ok(self) -> bool:
+        return False
+
+
+def is_failure(result: Any) -> bool:
+    """True for the typed failure results (DeadlineExceeded/RequestFailed)."""
+    return isinstance(result, (DeadlineExceeded, RequestFailed))
+
+
+# ---------------------------------------------------------------------------
+# Fallback ladder
+
+
+@dataclasses.dataclass(frozen=True)
+class Rung:
+    """One realization on the fallback ladder.
+
+    ``impl``/``interpret``/``dtype`` describe how the rung executes; the
+    engine's ``_build_rung`` maps them to a concrete callable.  Rung 0 is
+    always the engine's configured fast path.
+    """
+
+    name: str
+    impl: str
+    interpret: Optional[bool] = None
+    dtype: str = "float32"
+
+
+def cnn_fallback_ladder(options) -> Tuple[Rung, ...]:
+    """The degradation ladder an option set implies, fast rung first.
+
+    pallas → pallas-interpret → pure-XLA reference forward; an int8 request
+    additionally ends at the fp32 reference (``int8 → fp32``).  The final
+    rung is always the per-layer pure-XLA fp32 reference — the one path
+    with no Pallas kernels, no plans, and no quantization to go wrong.
+    """
+    impl = options.impl
+    interpret = options.interpret
+    dtype = options.dtype
+    rungs = [Rung("primary", impl, interpret, dtype)]
+    if impl == "pallas" and interpret is not True:
+        rungs.append(Rung("pallas-interpret", "pallas", True, dtype))
+    rungs.append(Rung("xla-ref", "xla", None, "float32"))
+    return tuple(rungs)
+
+
+def lm_fallback_ladder() -> Tuple[Rung, ...]:
+    """LM decode ladder: the jitted decode step, then the same step run
+    eagerly (op-by-op) — the rung that survives XLA compilation bugs."""
+    return (
+        Rung("jit-decode", "jax", None, "float32"),
+        Rung("eager-decode", "jax", None, "float32"),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Per-bucket circuit breaker
+
+CLOSED = "CLOSED"
+OPEN = "OPEN"
+HALF_OPEN = "HALF_OPEN"
+
+DEFAULT_PROBE_AFTER = 4
+
+
+class CircuitBreaker:
+    """CLOSED/HALF_OPEN/OPEN state machine for one bucket's ladder position.
+
+    ``depth`` is the rung currently serving the bucket (0 = fast path).
+    CLOSED means healthy at depth 0.  A trip moves ``depth`` down the
+    ladder and opens the breaker; after ``probe_after`` dispatches the
+    breaker half-opens and the next batch probes the rung above.  A
+    successful probe climbs one rung (re-opening the countdown until the
+    bucket is back at depth 0); a failed probe re-opens at the current
+    depth.  Everything is counted in dispatches, never wall time, so
+    recovery is deterministic and provable under fault injection.
+    """
+
+    def __init__(self, n_rungs: int, probe_after: int = DEFAULT_PROBE_AFTER):
+        self.n_rungs = max(1, int(n_rungs))
+        self.probe_after = max(1, int(probe_after))
+        self.depth = 0
+        self.state = CLOSED
+        self.steps_until_probe = 0
+        self.trips = 0
+        self.recoveries = 0
+        self.probes = 0
+
+    def start_rung(self) -> int:
+        """The rung this dispatch should attempt first.  Advances the
+        OPEN→HALF_OPEN countdown; call exactly once per dispatched batch."""
+        if self.state == OPEN and self.depth > 0:
+            self.steps_until_probe -= 1
+            if self.steps_until_probe <= 0:
+                self.state = HALF_OPEN
+        if self.state == HALF_OPEN and self.depth > 0:
+            self.probes += 1
+            return self.depth - 1
+        return self.depth
+
+    def settle(self, rung: int) -> None:
+        """Record the rung that actually served the batch."""
+        if rung < self.depth:
+            # Successful probe: climb one rung; keep probing until depth 0.
+            self.depth = rung
+            self.recoveries += 1
+            if self.depth == 0:
+                self.state = CLOSED
+            else:
+                self.state = OPEN
+                self.steps_until_probe = self.probe_after
+        elif rung > self.depth:
+            # Trip: the active rung failed, a deeper one served the batch.
+            self.depth = rung
+            self.trips += 1
+            self.state = OPEN
+            self.steps_until_probe = self.probe_after
+        elif self.state == HALF_OPEN:
+            # Probe failed; the current depth served.  Re-arm the countdown.
+            self.state = OPEN
+            self.steps_until_probe = self.probe_after
+        # rung == depth while CLOSED/OPEN: steady state, nothing to record.
+
+    def exhaust(self) -> None:
+        """Every rung failed: pin at the deepest rung and re-arm a probe."""
+        self.depth = self.n_rungs - 1
+        self.trips += 1
+        if self.depth > 0:
+            self.state = OPEN
+            self.steps_until_probe = self.probe_after
+        else:
+            self.state = CLOSED
+
+    def snapshot(self) -> Dict[str, Any]:
+        return {
+            "state": self.state,
+            "depth": self.depth,
+            "trips": self.trips,
+            "recoveries": self.recoveries,
+            "probes": self.probes,
+            "steps_until_probe": self.steps_until_probe,
+        }
+
+
+# ---------------------------------------------------------------------------
+# The mixin both engines thread through
+
+
+class ResilientEngine:
+    """Deadline/backpressure/ladder/breaker machinery shared by the CNN
+    bucket-ladder engine and the LM prefill-decode engine.
+
+    The host engine calls ``_resilience_init`` once, implements
+    ``_rung_fn(bucket_key, rung_index) -> callable`` (rung 0 must be its
+    existing fast path; deeper rungs may build lazily), and routes every
+    executor call through ``_guarded_call``.
+    """
+
+    def _resilience_init(
+        self,
+        *,
+        ladder: Sequence[Rung],
+        max_queue: Optional[int] = None,
+        default_deadline_s: Optional[float] = None,
+        retries: int = 1,
+        fallback: str = "ladder",
+        probe_after: int = DEFAULT_PROBE_AFTER,
+        clock: Optional[Callable[[], float]] = None,
+        faults=None,
+    ) -> None:
+        ladder = tuple(ladder)
+        # fallback="off" keeps only the fast rung: failures surface as
+        # request-level results immediately instead of degrading.
+        self._ladder = ladder[:1] if fallback == "off" else ladder
+        self._max_queue = None if max_queue is None else int(max_queue)
+        self._default_deadline_s = (
+            None if default_deadline_s is None else float(default_deadline_s)
+        )
+        self._retries = max(0, int(retries))
+        self._probe_after = int(probe_after)
+        self._clock = clock if clock is not None else time.monotonic
+        self.faults = faults
+        self._breakers: Dict[Any, CircuitBreaker] = {}
+        self._step_index = 0
+        self._res_stats = {
+            "evictions": 0,
+            "rejections": 0,
+            "retries": 0,
+            "request_failures": 0,
+            "fallback_batches": 0,
+            "faults_injected": 0,
+        }
+
+    # -- admission / deadlines ------------------------------------------------
+
+    def _now(self) -> float:
+        return float(self._clock())
+
+    def _check_admission(self, queue_len: int) -> None:
+        if self._max_queue is not None and queue_len >= self._max_queue:
+            self._res_stats["rejections"] += 1
+            raise Backpressure(queue_len, self._max_queue)
+
+    def _absolute_deadline(
+        self, deadline_s: Optional[float]
+    ) -> Optional[float]:
+        d = deadline_s if deadline_s is not None else self._default_deadline_s
+        if d is None:
+            return None
+        if d <= 0:
+            raise InvalidRequest(f"deadline_s must be > 0, got {d}")
+        return self._now() + float(d)
+
+    def _split_expired(self, requests, now: float):
+        """(live, {uid: DeadlineExceeded}) partition of ``requests``."""
+        live, evicted = [], {}
+        for r in requests:
+            if r.deadline is not None and now >= r.deadline:
+                evicted[r.uid] = DeadlineExceeded(
+                    uid=r.uid, deadline=r.deadline, now=now
+                )
+                self._res_stats["evictions"] += 1
+            else:
+                live.append(r)
+        return live, evicted
+
+    # -- the guarded executor call -------------------------------------------
+
+    def _breaker(self, key) -> CircuitBreaker:
+        br = self._breakers.get(key)
+        if br is None:
+            br = CircuitBreaker(len(self._ladder), self._probe_after)
+            self._breakers[key] = br
+        return br
+
+    def _rung_fn(self, key, rung_index: int) -> Callable:
+        raise NotImplementedError       # engine-specific
+
+    def _rows_nonfinite(
+        self, out: Any, live: Optional[np.ndarray]
+    ) -> Optional[np.ndarray]:
+        """Per-row non-finite mask of an executor output (None = no check)."""
+        raise NotImplementedError       # engine-specific
+
+    def _invoke(self, key, rung_index: int, fn: Callable, args: Tuple):
+        """One executor call, with the fault-injection hook applied."""
+        if self.faults is not None:
+            from repro.serving.faults import apply_fault
+
+            fault = self.faults.draw(
+                step=self._step_index, bucket=key,
+                rung=self._ladder[rung_index].name,
+            )
+            if fault is not None:
+                self._res_stats["faults_injected"] += 1
+                return apply_fault(fault, fn, args, clock=self._clock)
+        return fn(*args)
+
+    def _guarded_call(
+        self, key, args: Tuple, live: Optional[np.ndarray] = None
+    ) -> Tuple[Any, int, Optional[np.ndarray]]:
+        """Run one batch through the ladder: ``(out, rung_index, bad_rows)``.
+
+        Attempts the breaker's rung, retrying ``retries`` times on exception
+        or fully-non-finite output, then descends.  Rows that stay
+        non-finite while the rest of the batch is healthy are returned as
+        ``bad_rows`` for request-level failure — they do not trip the
+        breaker.  Raises ``FallbackExhausted`` when every rung failed.
+        """
+        br = self._breaker(key)
+        start = br.start_rung()
+        last_err: Optional[BaseException] = None
+        for rung in range(start, len(self._ladder)):
+            fn = self._rung_fn(key, rung)
+            partial: Optional[Tuple[Any, np.ndarray]] = None
+            for attempt in range(self._retries + 1):
+                if attempt:
+                    self._res_stats["retries"] += 1
+                try:
+                    out = self._invoke(key, rung, fn, args)
+                    bad = self._rows_nonfinite(out, live)
+                except Exception as e:      # noqa: BLE001 - the whole point
+                    last_err = e
+                    continue
+                if bad is not None and live is not None:
+                    # Padded/dead rows hold garbage by design: only live
+                    # rows count as poisoned.
+                    bad = bad & np.asarray(live, bool)
+                if bad is not None and bad.any():
+                    live_bad = bad[live] if live is not None else bad
+                    if live_bad.size and live_bad.all():
+                        # The whole batch is poisoned: rung-level failure.
+                        last_err = _NonFiniteOutput(
+                            f"rung {self._ladder[rung].name!r} produced a "
+                            f"fully non-finite output"
+                        )
+                        continue
+                    # Some rows healthy: request-level, not batch-level.
+                    partial = (out, bad)
+                    continue
+                if rung > 0:
+                    self._res_stats["fallback_batches"] += 1
+                br.settle(rung)
+                return out, rung, None
+            if partial is not None:
+                # Retries exhausted but most of the batch is fine: serve the
+                # healthy rows, fail the poisoned ones at request level.
+                if rung > 0:
+                    self._res_stats["fallback_batches"] += 1
+                br.settle(rung)
+                return partial[0], rung, partial[1]
+        br.exhaust()
+        raise FallbackExhausted(
+            f"every fallback rung failed for bucket {key!r} "
+            f"(ladder {[r.name for r in self._ladder]}): {last_err!r}"
+        ) from last_err
+
+    # -- health ---------------------------------------------------------------
+
+    def health(self) -> Dict[str, Any]:
+        """Per-bucket breaker state + engine-wide resilience counters."""
+        buckets = {
+            str(key): {
+                **br.snapshot(),
+                "rung": self._ladder[
+                    min(br.depth, len(self._ladder) - 1)
+                ].name,
+            }
+            for key, br in sorted(self._breakers.items(), key=lambda kv: str(kv[0]))
+        }
+        depths = [br.depth for br in self._breakers.values()]
+        return {
+            "ladder": [r.name for r in self._ladder],
+            "buckets": buckets,
+            "fallback_depth": max(depths) if depths else 0,
+            "queue_len": len(getattr(self, "queue", ())),
+            "steps": self._step_index,
+            "max_queue": self._max_queue,
+            "default_deadline_s": self._default_deadline_s,
+            "retries_allowed": self._retries,
+            **self._res_stats,
+        }
+
+
+def validate_image(
+    image: np.ndarray, want_shape: Tuple[int, ...]
+) -> np.ndarray:
+    """Admission-time payload validation for image requests.
+
+    One NaN image used to poison every co-batched request's epilogue; the
+    cheap check runs once at submit, against the single image, instead of
+    per dispatched batch.
+    """
+    image = np.asarray(image)
+    if image.shape != tuple(want_shape):
+        raise InvalidRequest(
+            f"expected image shape {tuple(want_shape)}, got {image.shape}"
+        )
+    if image.dtype.kind not in "fiub":
+        raise InvalidRequest(
+            f"expected a real numeric image dtype, got {image.dtype}"
+        )
+    if image.dtype.kind == "f" and not np.isfinite(image).all():
+        raise InvalidRequest(
+            "image payload contains non-finite values (NaN/Inf) — rejected "
+            "at submit so it cannot poison a co-batched padded batch"
+        )
+    return image
+
+
+def validate_prompt(prompt: np.ndarray, vocab_size: int) -> np.ndarray:
+    """Admission-time payload validation for LM prompt requests."""
+    arr = np.asarray(prompt)
+    if arr.dtype.kind == "f":
+        raise InvalidRequest(
+            f"prompt must be an integer token array, got {arr.dtype} "
+            f"(non-finite or fractional values would corrupt the embedding "
+            f"lookup)"
+        )
+    if arr.dtype.kind not in "iu":
+        raise InvalidRequest(
+            f"prompt must be an integer token array, got {arr.dtype}"
+        )
+    if arr.size == 0:
+        raise InvalidRequest(
+            "empty prompt: decode needs at least one token to condition on"
+        )
+    arr = arr.astype(np.int32)
+    if (arr < 0).any() or (arr >= vocab_size).any():
+        raise InvalidRequest(
+            f"prompt tokens out of range [0, {vocab_size}): "
+            f"min={int(arr.min())} max={int(arr.max())}"
+        )
+    return arr
