@@ -42,6 +42,7 @@ from typing import Any, Dict, List, Optional, Tuple
 # baseline that silently serves from a fallback rung.
 DEFAULT_PATTERN = (
     r"^e2e_.*_L\d+$|^e2e_.*_predicted_total$|^e2e_.*_serving_resilience$"
+    r"|^e2e_.*_pipeline_s\d+$"
 )
 DEFAULT_TOLERANCE = 0.05
 # The committed baseline's generation recipe; regen must match it exactly
@@ -49,6 +50,7 @@ DEFAULT_TOLERANCE = 0.05
 BASELINE_MODELS = ("vgg16", "yolov3-tiny")
 BASELINE_HW = 64
 BASELINE_BATCH = 1
+BASELINE_PIPELINE_SWEEP = (2, 4)
 
 
 def load_rows(path: str) -> Dict[str, Dict[str, Any]]:
@@ -133,11 +135,13 @@ def regenerate(json_path: str, cache_path: Optional[str] = None) -> str:
             cache_path=cache_path,
             predict_only=True,
             json_path=None,       # one combined file below, not per model
+            pipeline_sweep=BASELINE_PIPELINE_SWEEP,
         )
     return write_bench_json(
         json_path,
         extra={"models": list(BASELINE_MODELS), "hw": BASELINE_HW,
-               "batch": BASELINE_BATCH, "predict_only": True},
+               "batch": BASELINE_BATCH, "predict_only": True,
+               "pipeline_sweep": list(BASELINE_PIPELINE_SWEEP)},
         rows=common.ROWS[start:],
     )
 

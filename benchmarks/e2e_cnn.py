@@ -54,6 +54,7 @@ def run(
     batch_sweep: Optional[Tuple[int, ...]] = None,
     json_path: Optional[str] = None,
     predict_only: bool = False,
+    pipeline_sweep: Optional[Tuple[int, ...]] = None,
 ) -> None:
     import jax
 
@@ -173,6 +174,35 @@ def run(
          f"ladder={'>'.join(health['ladder'])}",
          provenance=health)
 
+    # -- 1e. pipeline sweep: cost-balanced stage partitions, modeled ---------
+    # Deterministic rows (planner cost model only — no devices needed): the
+    # stage partitioner splits the NetworkPlan at legal cut points balancing
+    # planner-predicted seconds, and the row's ``seconds`` is the GPipe
+    # tick-synchronous modeled latency at the auto-chosen microbatch count.
+    # Committed to the baseline so a partitioner or cost-model regression
+    # (worse balance, lost cut legality, broken n_micro chooser) fails the
+    # regression gate.
+    if pipeline_sweep:
+        from repro.core.netplan import choose_n_micro, partition_network
+
+        netplan_p = compiled.network_plan(batch)
+        for n_stages in pipeline_sweep:
+            pipeplan = partition_network(netplan_p, n_stages)
+            n_micro = choose_n_micro(pipeplan.stage_seconds, batch)
+            emit(
+                f"e2e_{model}_pipeline_s{n_stages}",
+                pipeplan.modeled_latency_s(n_micro),
+                f"stages={'/'.join(f'{a}:{z}' for a, z in pipeplan.stage_bounds)} "
+                f"n_micro={n_micro} "
+                f"bubble={pipeplan.bubble_fraction(n_micro):.3f} "
+                f"max_stage_s={max(pipeplan.stage_seconds):.6g}",
+                provenance={
+                    "stage_bounds": [list(b) for b in pipeplan.stage_bounds],
+                    "stage_seconds": list(pipeplan.stage_seconds),
+                    "n_micro": n_micro,
+                },
+            )
+
     if predict_only:
         # Modeled rows only: skip the wall-clock sections (2, 2b, 2c) but
         # keep the warm-cache proof — everything emitted is deterministic,
@@ -280,6 +310,11 @@ def main() -> None:
                          "e2e_<model>_b<N>_executor row (compiled executor, "
                          "layout persistence) next to the per-layer planned "
                          "total for each N")
+    ap.add_argument("--pipeline-sweep", default=None,
+                    help="comma list of stage counts, e.g. 2,4: emit an "
+                         "e2e_<model>_pipeline_s<N> row (cost-balanced stage "
+                         "partition, modeled GPipe latency) for each N — "
+                         "deterministic, lands in the committed baseline")
     ap.add_argument("--json", default="BENCH_e2e.json",
                     help="machine-readable output path (empty to disable)")
     ap.add_argument("--predict-only", action="store_true",
@@ -300,6 +335,8 @@ def main() -> None:
                      if args.batch_sweep else None),
         json_path=args.json or None,
         predict_only=args.predict_only,
+        pipeline_sweep=(tuple(int(s) for s in args.pipeline_sweep.split(","))
+                        if args.pipeline_sweep else None),
     )
 
 

@@ -37,7 +37,7 @@ from repro.analysis.descriptors import (
     reference_netplan,
     step_descriptors,
 )
-from repro.analysis.verifier import LEVELS, verify_network
+from repro.analysis.verifier import LEVELS, verify_network, verify_pipeline
 
 __all__ = [
     "BOUNDARY_PRIMS",
@@ -60,4 +60,5 @@ __all__ = [
     "step_descriptors",
     "trace_forward",
     "verify_network",
+    "verify_pipeline",
 ]

@@ -14,8 +14,9 @@ import json
 from typing import Any, Dict, List, Optional, Tuple
 
 #: The four analysis passes plus the structural pre-pass that matches
-#: pallas_calls to plan steps (a mismatch there invalidates the others).
-PASSES = ("structure", "vmem", "traffic", "elision", "dtype")
+#: pallas_calls to plan steps (a mismatch there invalidates the others),
+#: and the pipeline pass (stage-partition legality, ``verify_pipeline``).
+PASSES = ("structure", "vmem", "traffic", "elision", "dtype", "pipeline")
 SEVERITIES = ("error", "warning")
 
 

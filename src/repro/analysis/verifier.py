@@ -119,3 +119,75 @@ def verify_network(
     dtype_pass(report, pairs, netplan, closed)
     report.kernels = kernel_metrics(byte_pairs, budget)
     return report
+
+
+def verify_pipeline(netplan, pipeplan, name: Optional[str] = None):
+    """Statically verify a stage partition against its NetworkPlan.
+
+    Plan-level only (no tracing): proves the stage bounds are a contiguous
+    cover, every cut lands on a legal boundary (trivial producer layout —
+    no elision chain crosses a chip edge — and no ``from_layers`` span
+    reaching back into an earlier stage), the recorded per-stage seconds
+    match the per-step ``predicted_s`` sums, and the microbatch count tiles
+    the batch.  Cheap enough to gate every pipeline-executor build.
+    """
+    from repro.core.netplan import legal_cut_points, step_seconds
+
+    report = VerifyReport(
+        level="plan",
+        network={
+            "name": name or f"{len(netplan.steps)}-layer network",
+            "batch": netplan.batch,
+            "input_hw": list(netplan.input_hw),
+            "dtype": netplan.dtype_name,
+            "impl": netplan.impl,
+            "n_stages": pipeplan.n_stages,
+            "n_micro": pipeplan.n_micro,
+        },
+    )
+    report.passes_run = ("pipeline",)
+
+    def err(message, **kw):
+        report.add(Finding(
+            pass_name="pipeline", severity="error", message=message, **kw
+        ))
+
+    n = len(netplan.steps)
+    bounds = pipeplan.stage_bounds
+    if not bounds or bounds[0][0] != 0 or bounds[-1][1] != n:
+        err(f"stage bounds {bounds} do not cover the {n}-step network")
+        return report
+    prev_end = 0
+    for a, z in bounds:
+        if a != prev_end or a >= z:
+            err(f"stage bounds {bounds} are not a contiguous cover")
+            return report
+        prev_end = z
+    legal = set(legal_cut_points(netplan))
+    for a, _ in bounds[1:]:
+        if a not in legal:
+            step = netplan.steps[a - 1]
+            why = (
+                "inside a layout-elision chain"
+                if not step.out_layout.trivial
+                else "crossing a route/shortcut dependency span"
+            )
+            err(f"cut at step {a} is illegal ({why})", step=a)
+    per_step = step_seconds(netplan)
+    for si, ((a, z), rec) in enumerate(zip(bounds, pipeplan.stage_seconds)):
+        want = float(sum(per_step[a:z]))
+        if abs(rec - want) > 1e-9 + 1e-6 * max(abs(want), 1.0):
+            report.add(Finding(
+                pass_name="pipeline", severity="error",
+                message=(
+                    f"stage {si} recorded seconds disagree with the plan's "
+                    f"per-step predicted_s sum"
+                ),
+                step=a, expected=want, actual=float(rec),
+            ))
+    if pipeplan.n_micro < 1 or netplan.batch % pipeplan.n_micro:
+        err(
+            f"n_micro={pipeplan.n_micro} does not tile batch "
+            f"{netplan.batch}"
+        )
+    return report

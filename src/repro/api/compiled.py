@@ -120,10 +120,12 @@ class CompiledCNN(CompiledModel):
         self._devices = devices
         self._netplans: Dict[int, Any] = {}
         self._executors: Dict[int, Any] = {}
+        self._pipeplans: Dict[int, Any] = {}
+        self._pipe_executors: Dict[int, Any] = {}
         # Eager by design: compile() means the default batch is planned and
         # its executor prepared (params folded/padded/pre-transformed) —
         # cold-start tunes land in the v4 cache now, not at first request.
-        self.executor(options.batch)
+        self._executor_for(options.batch)
         self.save_plans()
 
     # -- planning -------------------------------------------------------------
@@ -172,6 +174,72 @@ class CompiledCNN(CompiledModel):
                     del self._executors[b]
                     raise PlanVerificationError(report)
         return self._executors[b]
+
+    def pipeline_plan(self, batch: Optional[int] = None):
+        """The (cached) cost-balanced stage partition for one batch size.
+
+        Requires ``options.pipeline_stages >= 2``.  Warm-cached in the v6
+        plan cache keyed by (network digest, n_stages, chip, dtype) —
+        ``planner.pipeline_hits`` counts reconstructions that re-partitioned
+        nothing.
+        """
+        from repro.core.netplan import plan_pipeline
+
+        if self.options.pipeline_stages < 2:
+            raise ValueError(
+                "pipeline_plan() requires ExecutionOptions("
+                f"pipeline_stages=...) >= 2, got "
+                f"{self.options.pipeline_stages}"
+            )
+        b = int(batch) if batch is not None else self.options.batch
+        if b not in self._pipeplans:
+            self._pipeplans[b] = plan_pipeline(
+                self.model.layers, *self.model.input_hw, self.planner,
+                self.options.pipeline_stages,
+                in_channels=self.model.in_channels, batch=b,
+                dtype=self.options.dtype, netplan=self.network_plan(b),
+            )
+        return self._pipeplans[b]
+
+    def pipeline_executor(self, batch: Optional[int] = None):
+        """The (cached) jitted PipelineExecutor for one batch size."""
+        from repro.distributed.pipeline import PipelineExecutor
+
+        b = int(batch) if batch is not None else self.options.batch
+        if b not in self._pipe_executors:
+            pipeplan = self.pipeline_plan(b)
+            if self.options.validate != "off":
+                # The partition has its own static legality contract
+                # (verify_pipeline); the per-kernel passes still run
+                # through executor()/verify_report on the same NetworkPlan.
+                from repro.analysis import (
+                    PlanVerificationError,
+                    verify_pipeline,
+                )
+
+                report = verify_pipeline(
+                    self.network_plan(b), pipeplan, name=self.model.name
+                )
+                if not report.ok:
+                    raise PlanVerificationError(report)
+            n_micro = (
+                None if self.options.microbatch == "auto"
+                else int(self.options.microbatch)
+            )
+            self._pipe_executors[b] = PipelineExecutor(
+                self.network_plan(b), pipeplan, self.params,
+                interpret=self.options.interpret, devices=self._devices,
+                pretransform=self.options.pretransform,
+                calibration=self.calibration, n_micro=n_micro,
+            )
+        return self._pipe_executors[b]
+
+    def _executor_for(self, batch: Optional[int] = None):
+        """The executor ``run()``/serving dispatch to: the pipeline one when
+        ``pipeline_stages`` is set, the data-parallel one otherwise."""
+        if self.options.pipeline_stages >= 2:
+            return self.pipeline_executor(batch)
+        return self.executor(batch)
 
     def verify_report(self, batch: Optional[int] = None,
                       level: Optional[str] = None):
@@ -241,7 +309,7 @@ class CompiledCNN(CompiledModel):
             raise ValueError(
                 f"run() expects (B, H, W, C), got shape {tuple(x.shape)}"
             )
-        executor = self.executor(int(x.shape[0]))
+        executor = self._executor_for(int(x.shape[0]))
         self.save_plans()       # no-op unless this batch tuned new plans
         return executor(x)
 
@@ -267,13 +335,31 @@ class CompiledCNN(CompiledModel):
         output boundary was elided (padded channels flow to the next
         pallas_call).  Plus planner/network cache counters — a warm process
         reports ``tunes == 0``.
+
+        With ``pipeline_stages`` set, every layer row gains a ``stage``
+        column and the report a ``pipeline`` block: stage bounds,
+        per-stage predicted seconds, the resolved microbatch count, the
+        modeled bubble fraction and end-to-end latency.
         """
         netplan = self.network_plan(batch)
+        pipeplan = (
+            self.pipeline_plan(batch)
+            if self.options.pipeline_stages >= 2 else None
+        )
+
+        def stage_of(index: int):
+            if pipeplan is None:
+                return None
+            for si, (a, z) in enumerate(pipeplan.stage_bounds):
+                if a <= index < z:
+                    return si
+            return None
+
         rows = []
         for s in netplan.steps:
             if s.plan is None:
                 continue
-            rows.append({
+            row = {
                 "index": s.index,
                 "algorithm": s.plan.algorithm.value,
                 "impl": s.plan.impl,
@@ -286,8 +372,11 @@ class CompiledCNN(CompiledModel):
                 "source": s.plan.source,
                 "winograd_fused": s.plan.winograd_fused,
                 "elided": not s.out_layout.trivial,
-            })
-        return {
+            }
+            if pipeplan is not None:
+                row["stage"] = stage_of(s.index)
+            rows.append(row)
+        report = {
             "model": self.model.name,
             "kind": "cnn",
             "batch": netplan.batch,
@@ -299,7 +388,18 @@ class CompiledCNN(CompiledModel):
             "tunes": self.planner.stats["tunes"],
             "hits": self.planner.stats["hits"],
             "network_hits": self.planner.network_hits,
+            "pipeline_hits": self.planner.pipeline_hits,
         }
+        if pipeplan is not None:
+            report["pipeline"] = {
+                "n_stages": pipeplan.n_stages,
+                "stage_bounds": [list(b) for b in pipeplan.stage_bounds],
+                "stage_seconds": list(pipeplan.stage_seconds),
+                "n_micro": pipeplan.n_micro,
+                "bubble_fraction": pipeplan.bubble_fraction(),
+                "modeled_latency_s": pipeplan.modeled_latency_s(),
+            }
+        return report
 
     def save(self, path: Optional[str] = None) -> str:
         """Persist this compilation: plan cache (the tuning) + a small JSON

@@ -48,6 +48,22 @@ class ExecutionOptions:
       buckets         the serving bucket ladder (``CompiledModel.serve``).
       shard_batch     shard the batch over all visible devices when the
                       batch divides the device count (shard_map mesh).
+      pipeline_stages layer-pipelined multi-chip execution: split the
+                      network into this many contiguous stages (0 = off,
+                      the default).  The partition is cost-balanced from
+                      the planner's per-layer predicted seconds
+                      (core/netplan.partition_network), cached in the v6
+                      plan cache, and executed GPipe-style over a 1-D
+                      'stage' device mesh — each stage's devices hold only
+                      that stage's prepared params.  Needs at least
+                      ``pipeline_stages`` visible devices at executor build
+                      time.
+      microbatch      microbatch count for the pipeline schedule: 'auto'
+                      (default — the cost-model chooser minimizing modeled
+                      latency = per-tick max-stage time summed over the
+                      fill/steady/drain ticks plus per-tick overhead) or a
+                      fixed positive count that must divide the batch.
+                      Ignored while ``pipeline_stages`` is 0.
       dtype           execution dtype name ('float32', 'bfloat16', 'int8').
                       'int8' requests quantized inference: the planner
                       resolves it per layer (a layer where int8 does not
@@ -94,6 +110,8 @@ class ExecutionOptions:
     batch: int = 1
     buckets: Tuple[int, ...] = (1, 4, 8)
     shard_batch: bool = True
+    pipeline_stages: int = 0
+    microbatch: Any = "auto"            # 'auto' | positive int
     dtype: str = "float32"
     validate: str = "off"
     max_queue: Optional[int] = None
@@ -137,6 +155,17 @@ class ExecutionOptions:
             raise ValueError(
                 f"max_queue must be None or >= 1, got {self.max_queue}"
             )
+        if self.pipeline_stages < 0 or self.pipeline_stages == 1:
+            raise ValueError(
+                f"pipeline_stages must be 0 (off) or >= 2, got "
+                f"{self.pipeline_stages}"
+            )
+        if self.microbatch != "auto":
+            if not isinstance(self.microbatch, int) or self.microbatch < 1:
+                raise ValueError(
+                    f"microbatch must be 'auto' or a positive int, got "
+                    f"{self.microbatch!r}"
+                )
         if self.default_deadline_s is not None and self.default_deadline_s <= 0:
             raise ValueError(
                 f"default_deadline_s must be None or > 0, got "

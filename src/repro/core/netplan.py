@@ -507,6 +507,398 @@ def _netplan_from_entry(
 
 
 # ---------------------------------------------------------------------------
+# Pipeline partitioning (layer-pipelined multi-chip execution)
+#
+# The multi-chip analogue of the paper's per-layer co-design: the network
+# partition is *planned* from the same per-layer cost model that picked each
+# layer's algorithm and blocks (predict_conv_time totals per stage), not
+# guessed from layer counts.  A stage is a contiguous ``steps[start:stop]``
+# slice; cuts are restricted to boundaries where the PR-4 layout-elision
+# contract closes (trivial out_layout — padded channels never cross a chip
+# boundary; the crop/re-pad pair materializes at the stage edge via the
+# existing exit-crop/_align_channels machinery) and where no route/shortcut
+# ``from_layers`` reference would reach back into an earlier stage.
+
+#: Modeled per-tick schedule overhead (dispatch + ppermute launch), the term
+#: that keeps the auto-``n_micro`` chooser from degenerating to "as many
+#: microbatches as possible": more microbatches shrink the bubble but pay
+#: this fixed cost every tick.  Sized well below a typical stage's modeled
+#: seconds (~1e-5 for the paper's networks) so it breaks ties rather than
+#: dominating the decision.
+TICK_OVERHEAD_S = 2e-6
+
+
+@dataclasses.dataclass(frozen=True)
+class PipelinePlan:
+    """A NetworkPlan split into contiguous, cost-balanced pipeline stages.
+
+    ``stage_bounds[s] = (start, stop)`` — stage s runs ``steps[start:stop]``.
+    ``stage_seconds[s]`` is the planner-predicted seconds for the stage at
+    the plan's full batch (sum of its steps' ``predicted_s``).  ``n_micro``
+    is the microbatch count the auto-chooser resolved (the executor may
+    override it).
+    """
+
+    stage_bounds: Tuple[Tuple[int, int], ...]
+    stage_seconds: Tuple[float, ...]
+    n_micro: int
+
+    @property
+    def n_stages(self) -> int:
+        return len(self.stage_bounds)
+
+    def bubble_fraction(self, n_micro: Optional[int] = None) -> float:
+        """GPipe fill/drain bubble: (S-1)/(m+S-1) of the schedule's ticks
+        run fewer than S active stages."""
+        m = self.n_micro if n_micro is None else n_micro
+        s = self.n_stages
+        return (s - 1) / (m + s - 1)
+
+    def modeled_latency_s(self, n_micro: Optional[int] = None) -> float:
+        """Modeled end-to-end seconds for one full batch through the
+        pipeline: bubble + per-tick max-stage time (see
+        ``modeled_pipeline_latency``)."""
+        m = self.n_micro if n_micro is None else n_micro
+        return modeled_pipeline_latency(self.stage_seconds, m)
+
+    def to_json(self) -> Dict[str, Any]:
+        return {
+            "stage_bounds": [list(b) for b in self.stage_bounds],
+            "stage_seconds": list(self.stage_seconds),
+            "n_micro": self.n_micro,
+        }
+
+    @classmethod
+    def from_json(cls, d: Dict[str, Any]) -> "PipelinePlan":
+        return cls(
+            stage_bounds=tuple(
+                (int(b[0]), int(b[1])) for b in d["stage_bounds"]
+            ),
+            stage_seconds=tuple(float(t) for t in d["stage_seconds"]),
+            n_micro=int(d["n_micro"]),
+        )
+
+
+def step_seconds(netplan: NetworkPlan) -> Tuple[float, ...]:
+    """Per-step planner-predicted seconds (0.0 for unplanned/free layers —
+    pools, routes, fc: their cost is noise next to the convs the cost model
+    prices, exactly as in plan_report)."""
+    return tuple(
+        s.plan.predicted_s if s.plan is not None else 0.0
+        for s in netplan.steps
+    )
+
+
+def legal_cut_points(netplan: NetworkPlan) -> List[int]:
+    """Boundary indices b where the network may be cut into stages
+    (cut between ``steps[b-1]`` and ``steps[b]``).
+
+    A cut at b is legal iff (1) ``steps[b-1].out_layout`` is trivial — the
+    boundary activation is logically laid out, so no elision chain spans the
+    chip edge and the PR-4 padded-channel contract holds entirely within a
+    stage; and (2) no layer j >= b references a layer r < b via
+    ``from_layers`` (route concat / shortcut add need the producer's output
+    resident on the same stage).
+    """
+    from repro.models.cnn import layer_ref_spans
+
+    n = len(netplan.steps)
+    spans = layer_ref_spans([s.layer for s in netplan.steps])
+    legal = []
+    for b in range(1, n):
+        if not netplan.steps[b - 1].out_layout.trivial:
+            continue
+        if any(r < b <= j for r, j in spans):
+            continue
+        legal.append(b)
+    return legal
+
+
+def _bounds_seconds(
+    per_step: Sequence[float], bounds: Sequence[Tuple[int, int]]
+) -> Tuple[float, ...]:
+    return tuple(
+        float(sum(per_step[a:z])) for a, z in bounds
+    )
+
+
+#: Exact-search budget: partition candidates up to this count are scored
+#: directly on the modeled latency; past it the min-max DP approximation
+#: takes over.  comb(20, 3) = 1140 for VGG-16 at 4 stages — the paper's
+#: networks never leave the exact regime.
+_EXACT_SEARCH_LIMIT = 200_000
+
+
+def partition_network(
+    netplan: NetworkPlan, n_stages: int, n_micro: Optional[int] = None
+) -> PipelinePlan:
+    """Cost-balanced contiguous partition into ``n_stages`` stages.
+
+    Minimizes ``modeled_pipeline_latency`` — the tick-synchronous schedule
+    model over the planner's own ``predict_conv_time`` totals — over the
+    legal cut set.  At CNN depth the legal cut combinations number in the
+    thousands, so the search is exact (each candidate scored at its own
+    best microbatch count); a pathologically deep network falls back to
+    the classic min-max linear-partition DP, which optimizes the
+    steady-state term only.  Raises ValueError when fewer than
+    ``n_stages - 1`` legal cuts exist (e.g. an elision chain covering the
+    whole net).
+
+    ``n_micro=None`` runs the auto-chooser over divisors of the plan's
+    batch (``choose_n_micro``); a fixed ``n_micro`` scores candidates at
+    that count.
+    """
+    import itertools
+    import math
+
+    n = len(netplan.steps)
+    if not 1 <= n_stages <= n:
+        raise ValueError(f"n_stages={n_stages} for a {n}-step network")
+    per_step = step_seconds(netplan)
+    cuts = legal_cut_points(netplan)
+    if len(cuts) < n_stages - 1:
+        raise ValueError(
+            f"only {len(cuts)} legal cut points for n_stages={n_stages} "
+            f"(elision chains / route spans forbid the rest)"
+        )
+
+    def finish(bounds: Tuple[Tuple[int, int], ...]) -> PipelinePlan:
+        seconds = _bounds_seconds(per_step, bounds)
+        m = (choose_n_micro(seconds, netplan.batch) if n_micro is None
+             else n_micro)
+        return PipelinePlan(
+            stage_bounds=bounds, stage_seconds=seconds, n_micro=m
+        )
+
+    n_comb = math.comb(len(cuts), n_stages - 1)
+    if n_comb <= _EXACT_SEARCH_LIMIT:
+        best_plan: Optional[PipelinePlan] = None
+        best_key: Tuple[float, float] = (float("inf"), float("inf"))
+        for combo in itertools.combinations(cuts, n_stages - 1):
+            edges = (0,) + combo + (n,)
+            plan = finish(tuple(zip(edges[:-1], edges[1:])))
+            # Tie-break on the steady-state max stage: at n_micro=1 the
+            # tick sum is partition-independent (one active stage per
+            # tick), and the balanced profile is what a larger batch or a
+            # microbatch override will want.
+            key = (plan.modeled_latency_s(), max(plan.stage_seconds))
+            if key < best_key:
+                best_plan, best_key = plan, key
+        assert best_plan is not None
+        return best_plan
+
+    # DP fallback: minimize the max stage (the steady-state tick) over
+    # boundary candidates.  best[(k, e)] = (max stage seconds, prev end).
+    prefix = [0.0]
+    for t in per_step:
+        prefix.append(prefix[-1] + t)
+
+    def seg(a: int, z: int) -> float:
+        return prefix[z] - prefix[a]
+
+    ends = cuts + [n]
+    best: Dict[Tuple[int, int], Tuple[float, int]] = {(0, 0): (0.0, -1)}
+    for k in range(1, n_stages + 1):
+        allowed = ends if k < n_stages else [n]
+        for e in allowed:
+            cand: Optional[Tuple[float, int]] = None
+            for (pk, pe), (pmax, _) in best.items():
+                if pk != k - 1 or pe >= e:
+                    continue
+                m = max(pmax, seg(pe, e))
+                if cand is None or m < cand[0]:
+                    cand = (m, pe)
+            if cand is not None:
+                best[(k, e)] = cand
+    if (n_stages, n) not in best:
+        raise ValueError(
+            f"no legal {n_stages}-stage partition (cut set {cuts})"
+        )
+    bounds_rev = []
+    e = n
+    for k in range(n_stages, 0, -1):
+        _, pe = best[(k, e)]
+        bounds_rev.append((pe, e))
+        e = pe
+    return finish(tuple(reversed(bounds_rev)))
+
+
+def equal_count_partition(
+    netplan: NetworkPlan, n_stages: int, n_micro: Optional[int] = None
+) -> PipelinePlan:
+    """The naive strawman: equal *layer-count* stages, costs ignored.
+
+    Each cut targets ``round(s * n / n_stages)`` and snaps to the nearest
+    legal cut point (so the partition is executable — a hand-rolled
+    splitter still cannot cut through an elision chain or a route span),
+    but per-layer costs are never consulted.  This is the baseline the
+    cost-balanced partition must beat on modeled latency.
+    """
+    n = len(netplan.steps)
+    if not 1 <= n_stages <= n:
+        raise ValueError(f"n_stages={n_stages} for a {n}-step network")
+    legal = legal_cut_points(netplan)
+    if len(legal) < n_stages - 1:
+        raise ValueError(
+            f"only {len(legal)} legal cut points for n_stages={n_stages}"
+        )
+    cuts: List[int] = []
+    for s in range(1, n_stages):
+        target = round(s * n / n_stages)
+        avail = [b for b in legal if b not in cuts and b > (cuts[-1] if cuts
+                                                           else 0)]
+        # Keep enough headroom for the remaining cuts to stay increasing.
+        remaining = n_stages - 1 - s
+        avail = avail[: len(avail) - remaining] if remaining else avail
+        if not avail:
+            raise ValueError("cannot place equal-count cuts legally")
+        cuts.append(min(avail, key=lambda b: (abs(b - target), b)))
+    edges = [0] + cuts + [n]
+    bounds = tuple(zip(edges[:-1], edges[1:]))
+    seconds = _bounds_seconds(step_seconds(netplan), bounds)
+    if n_micro is None:
+        n_micro = choose_n_micro(seconds, netplan.batch)
+    return PipelinePlan(
+        stage_bounds=bounds, stage_seconds=seconds, n_micro=n_micro
+    )
+
+
+def modeled_pipeline_latency(
+    stage_seconds: Sequence[float],
+    n_micro: int,
+    tick_overhead_s: float = TICK_OVERHEAD_S,
+) -> float:
+    """Modeled seconds for one batch through the GPipe schedule.
+
+    The executor's schedule is tick-synchronous — each of the
+    ``n_micro + n_stages - 1`` ticks ends in a collective (ppermute), so a
+    tick lasts as long as the slowest *active* stage's per-microbatch
+    compute (stage seconds are predicted at full batch and scale down
+    linearly with the microbatch split):
+
+        latency(m) = sum_t max{T_s / m : stage s active at tick t}
+                     + (m + S - 1) * overhead
+
+    In steady state every tick is gated by the global max stage (the
+    classic bubble identity); during fill/drain only a prefix/suffix of
+    stages is active, which is why balancing the *whole* stage profile —
+    not just its max — shows up in the model.  The fixed per-tick overhead
+    penalizes over-splitting.
+    """
+    s = len(stage_seconds)
+    per_mb = [t / n_micro for t in stage_seconds]
+    total = 0.0
+    for t in range(n_micro + s - 1):
+        active = [per_mb[i] for i in range(s) if t >= i and t - i < n_micro]
+        if active:
+            total += max(active)
+    return total + (n_micro + s - 1) * tick_overhead_s
+
+
+def choose_n_micro(
+    stage_seconds: Sequence[float],
+    batch: int,
+    tick_overhead_s: float = TICK_OVERHEAD_S,
+) -> int:
+    """The microbatch count minimizing modeled latency.
+
+    Candidates are the divisors of ``batch`` (microbatches must tile the
+    batch exactly — the executor reshapes to (m, batch//m, ...)); ties break
+    to the smaller count (less overhead exposure for the same model).
+    """
+    if batch < 1:
+        raise ValueError(f"batch={batch}")
+    best_m, best_t = 1, float("inf")
+    for m in range(1, batch + 1):
+        if batch % m:
+            continue
+        t = modeled_pipeline_latency(stage_seconds, m, tick_overhead_s)
+        if t < best_t:
+            best_m, best_t = m, t
+    return best_m
+
+
+def pipeline_key(
+    layers: Sequence[Any],
+    h: int,
+    w: int,
+    in_channels: int,
+    batch: int,
+    n_stages: int,
+    planner: Planner,
+    dtype: Any = "float32",
+) -> str:
+    """Cache key for a stage-partition entry: the network digest key (which
+    already folds in chip/dtype/impl/policies/batch) plus the stage count."""
+    return (
+        network_key(layers, h, w, in_channels, batch, planner, dtype)
+        + f"|stages{n_stages}"
+    )
+
+
+def plan_pipeline(
+    layers: Sequence[Any],
+    h: int,
+    w: int,
+    planner: Planner,
+    n_stages: int,
+    in_channels: int = 3,
+    batch: int = 1,
+    dtype: Any = "float32",
+    netplan: Optional[NetworkPlan] = None,
+) -> PipelinePlan:
+    """Resolve a PipelinePlan through a Planner, warm-cached at v6 scope.
+
+    Cold: partitions the (possibly freshly planned) NetworkPlan and stores
+    the record as a "pipelines" cache entry keyed by (network digest,
+    n_stages, chip, dtype).  Warm: reconstructs the PipelinePlan straight
+    from the entry — zero re-partitions (``planner.pipeline_hits``).
+    """
+    layers = tuple(layers)
+    if netplan is None:
+        netplan = plan_network(
+            layers, h, w, planner, in_channels=in_channels, batch=batch,
+            dtype=dtype,
+        )
+    key = pipeline_key(
+        layers, h, w, in_channels, batch, n_stages, planner, dtype
+    )
+    entry = planner.pipeline_entry(key)
+    if entry is not None:
+        try:
+            pipeplan = PipelinePlan.from_json(entry)
+            _validate_pipeline_bounds(pipeplan, len(netplan.steps), n_stages)
+        except (KeyError, ValueError, TypeError, IndexError):
+            pass                            # corrupt entry -> repartition
+        else:
+            planner.pipeline_hits += 1      # counted only once validated
+            return pipeplan
+    pipeplan = partition_network(netplan, n_stages)
+    planner.put_pipeline_entry(key, pipeplan.to_json())
+    return pipeplan
+
+
+def _validate_pipeline_bounds(
+    pipeplan: PipelinePlan, n_steps: int, n_stages: int
+) -> None:
+    """Raise unless the bounds are a contiguous cover of [0, n_steps)."""
+    bounds = pipeplan.stage_bounds
+    if len(bounds) != n_stages:
+        raise ValueError(f"{len(bounds)} stages, wanted {n_stages}")
+    if bounds[0][0] != 0 or bounds[-1][1] != n_steps:
+        raise ValueError(f"bounds {bounds} do not cover [0, {n_steps})")
+    for (a0, z0), (a1, _) in zip(bounds, bounds[1:]):
+        if z0 != a1 or a0 >= z0:
+            raise ValueError(f"non-contiguous bounds {bounds}")
+    if bounds[-1][0] >= bounds[-1][1]:
+        raise ValueError(f"empty final stage in {bounds}")
+    if pipeplan.n_micro < 1:
+        raise ValueError(f"n_micro={pipeplan.n_micro}")
+    if len(pipeplan.stage_seconds) != n_stages:
+        raise ValueError("stage_seconds length mismatch")
+
+
+# ---------------------------------------------------------------------------
 # Parameter preparation (offline: folding, padding, weight pre-transform)
 
 
@@ -639,6 +1031,8 @@ def run_network(
     x: jnp.ndarray,
     interpret: Optional[bool] = None,
     pretransformed: Optional[Sequence[bool]] = None,
+    start: int = 0,
+    stop: Optional[int] = None,
 ) -> jnp.ndarray:
     """The planned whole-network forward on prepared params.
 
@@ -653,15 +1047,29 @@ def run_network(
     and falls back to a *guarded* shape check (8x8 leading dims AND a 3x3
     spec — a raw kh == 8 kernel is never misread as transformed); new code
     should always pass the explicit flags.
+
+    ``start``/``stop`` run the ``steps[start:stop]`` slice only — one
+    pipeline stage.  ``params`` is then the slice-aligned parameter list
+    (``params[j - start]`` for layer j) while ``pretransformed`` stays
+    full-network length (flag lookup is by absolute index).  Legal slices
+    begin at a stage boundary from ``legal_cut_points``: the incoming
+    activation is logically laid out (trivial layout — the partitioner
+    forbids cuts inside an elision chain) and no ``from_layers`` reference
+    reaches back before ``start``.  The exit crop runs only when the slice
+    includes the final step; interior stages hand their boundary activation
+    off as produced.
     """
     from repro.core.conv2d import conv2d
 
+    n_steps = len(netplan.steps)
+    stop = n_steps if stop is None else stop
+    assert 0 <= start <= stop <= n_steps, (start, stop, n_steps)
     outputs: List[jnp.ndarray] = []
     cur = x
-    for s in netplan.steps:
+    for s in netplan.steps[start:stop]:
         l = s.layer
         if l.kind == "conv":
-            p = params[s.index]
+            p = params[s.index - start]
             cur = _align_channels(cur, s.in_layout.phys_c)
             quantized = "w_scale" in p
             if quantized:
@@ -722,19 +1130,19 @@ def run_network(
         elif l.kind == "upsample":
             cur = jnp.repeat(jnp.repeat(cur, l.size, axis=1), l.size, axis=2)
         elif l.kind == "shortcut":
-            cur = cur + outputs[l.from_layers[0]]
+            cur = cur + outputs[l.from_layers[0] - start]
         elif l.kind == "route":
             cur = jnp.concatenate(
-                [outputs[j] for j in l.from_layers], axis=-1
+                [outputs[j - start] for j in l.from_layers], axis=-1
             )
         elif l.kind == "fc":
-            p = params[s.index]
+            p = params[s.index - start]
             if cur.ndim == 4:
                 cur = cur.mean(axis=(1, 2))
             cur = apply_activation(cur @ p["w"] + p["b"], l.activation)
         outputs.append(cur)
     exit_layout = netplan.exit_layout
-    if exit_layout.pad_c:
+    if stop == n_steps and exit_layout.pad_c:
         cur = cur[..., :exit_layout.c]      # the single crop at network exit
     return cur
 

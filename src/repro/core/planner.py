@@ -42,6 +42,11 @@ from repro.core.vmem_model import BlockConfig, GemmShape, autotune_gemm
 from repro.hw import V5E, ChipSpec
 from repro.util import ceil_to
 
+# v6 adds the "pipelines" section — stage partitions for layer-pipelined
+# multi-chip execution (written by core/netplan.plan_pipeline), keyed by
+# (network digest, n_stages, chip, dtype) so a warm process re-partitions
+# nothing.  The "plans"/"networks" schemas are unchanged from v5, but the
+# version gates the whole file, so v5 caches re-tune once.
 # v5: plans carry a per-layer ``dtype`` — the *execution* precision the
 # tuner resolved, which under an int8 request can legitimately be float32
 # (the quantization policy keeps a layer fp32 when the modeled traffic win
@@ -52,7 +57,7 @@ from repro.util import ceil_to
 # core/netplan.plan_network) recording per-layer plans after network-level
 # adjustment plus the inter-layer layout-elision decisions, so a warm
 # process rebuilds a NetworkPlan with zero re-tunes.
-PLAN_CACHE_VERSION = 5
+PLAN_CACHE_VERSION = 6
 
 # Default on-disk location (overridable per Planner and via environment).
 DEFAULT_CACHE_PATH = os.environ.get(
@@ -136,6 +141,7 @@ def salvage_cache_text(text: str) -> Dict[str, Any]:
             data[scalar] = sec
     data["plans"] = _salvage_section(text, "plans")
     data["networks"] = _salvage_section(text, "networks")
+    data["pipelines"] = _salvage_section(text, "pipelines")
     return data
 
 
@@ -170,14 +176,20 @@ def _quarantine_cache(path: str, text: Optional[str]) -> Dict[str, Any]:
     except OSError:
         dest = None     # the file vanished or is unmovable; still salvage
     salvaged = salvage_cache_text(text) if text else {}
-    if salvaged.get("plans") or salvaged.get("networks"):
+    if (
+        salvaged.get("plans")
+        or salvaged.get("networks")
+        or salvaged.get("pipelines")
+    ):
         # sort_keys writes "version" last, so truncation usually eats it.
         # Entries still go through per-entry validation on load
         # (ConvPlan.from_json try/except; network records validate in
         # netplan) — a wrong-version survivor is dropped there, not here.
         salvaged.setdefault("version", PLAN_CACHE_VERSION)
-    n_entries = len(salvaged.get("plans", {})) + len(
-        salvaged.get("networks", {})
+    n_entries = (
+        len(salvaged.get("plans", {}))
+        + len(salvaged.get("networks", {}))
+        + len(salvaged.get("pipelines", {}))
     )
     if path not in _QUARANTINE_WARNED:
         _QUARANTINE_WARNED.add(path)
@@ -361,7 +373,12 @@ class Planner:
         # records keyed by the caller's network key.  Persisted alongside
         # the per-layer plans in the same versioned cache file.
         self._networks: Dict[str, Any] = {}
+        # Stage-partition entries (core/netplan.plan_pipeline): opaque JSON
+        # records keyed by (network digest, n_stages, chip, dtype) — a warm
+        # load re-partitions nothing.
+        self._pipelines: Dict[str, Any] = {}
         self.network_hits = 0
+        self.pipeline_hits = 0
         self.stats = {"hits": 0, "tunes": 0}
         if cache_path and os.path.exists(cache_path):
             self._load()
@@ -395,6 +412,9 @@ class Planner:
         nets = data.get("networks", {})
         if isinstance(nets, dict):
             self._networks.update(nets)
+        pipes = data.get("pipelines", {})
+        if isinstance(pipes, dict):
+            self._pipelines.update(pipes)
 
     def save(self) -> None:
         """Atomically write the cache (tmp file + rename).
@@ -418,6 +438,7 @@ class Planner:
                 pass
             plans: Dict[str, Any] = {}
             networks: Dict[str, Any] = {}
+            pipelines: Dict[str, Any] = {}
             if os.path.exists(self.cache_path):
                 disk: Dict[str, Any] = {}
                 try:
@@ -440,17 +461,22 @@ class Planner:
                 if disk.get("version") == PLAN_CACHE_VERSION:
                     p = disk.get("plans", {})
                     nw = disk.get("networks", {})
+                    pp = disk.get("pipelines", {})
                     if isinstance(p, dict):
                         plans.update(p)
                     if isinstance(nw, dict):
                         networks.update(nw)
+                    if isinstance(pp, dict):
+                        pipelines.update(pp)
             plans.update({k: p.to_json() for k, p in self._plans.items()})
             networks.update(self._networks)
+            pipelines.update(self._pipelines)
             payload = {
                 "version": PLAN_CACHE_VERSION,
                 "chip": self.hw.name,
                 "plans": plans,
                 "networks": networks,
+                "pipelines": pipelines,
             }
             fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp")
             try:
@@ -483,6 +509,26 @@ class Planner:
     def put_network_entry(self, key: str, entry: Dict[str, Any]) -> None:
         """Store a whole-network record (must be plain JSON-able data)."""
         self._networks[key] = entry
+        if self.autosave:
+            self.save()
+        else:
+            self._dirty = True
+
+    # -- pipeline-partition entries (consumed by core/netplan) ---------------
+
+    def pipeline_entry(self, key: str) -> Optional[Dict[str, Any]]:
+        """The stored stage-partition record for ``key``, or None (cold).
+
+        Like ``network_entry``, ``pipeline_hits`` is incremented by the
+        consumer (core/netplan.plan_pipeline) only after the entry validates
+        — a corrupt record that falls back to re-partitioning must not
+        report warm persistence.
+        """
+        return self._pipelines.get(key)
+
+    def put_pipeline_entry(self, key: str, entry: Dict[str, Any]) -> None:
+        """Store a stage-partition record (must be plain JSON-able data)."""
+        self._pipelines[key] = entry
         if self.autosave:
             self.save()
         else:

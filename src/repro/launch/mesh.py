@@ -23,3 +23,22 @@ def make_mesh_for(devices: int, model_parallel: int = 1):
         ("data", "model"),
         axis_types=(jax.sharding.AxisType.Auto,) * 2,
     )
+
+
+def make_stage_mesh(n_stages: int, devices=None):
+    """A 1-D ('stage',) mesh for layer-pipelined execution.
+
+    Takes the first ``n_stages`` of ``devices`` (default: all visible).
+    Built from an explicit device array — no ``axis_types`` — so it works
+    on jax versions without ``jax.sharding.AxisType``.
+    """
+    import numpy as np
+
+    if devices is None:
+        devices = jax.devices()
+    devices = list(devices)
+    if len(devices) < n_stages:
+        raise ValueError(
+            f"pipeline needs {n_stages} devices, only {len(devices)} visible"
+        )
+    return jax.sharding.Mesh(np.array(devices[:n_stages]), ("stage",))

@@ -129,10 +129,15 @@ class CNNServingEngine(ResilientEngine):
         # One executor per bucket, all from the same compilation — plans
         # are batch-keyed, so each bucket resolves its own NetworkPlan and
         # network entry; a warm cache file makes a fresh engine re-tune
-        # nothing.  Persistence is the compilation's concern: it saves when
-        # (and only when) new tunes land and it owns the planner, so the
-        # trailing save is a no-op on a warm cache or a shared planner.
-        self._executors = {b: _compiled.executor(b) for b in self.buckets}
+        # nothing.  With ``pipeline_stages`` set the buckets are
+        # pipeline-backed (each bucket gets its own cost-balanced stage
+        # partition from the v6 cache).  Persistence is the compilation's
+        # concern: it saves when (and only when) new tunes land and it owns
+        # the planner, so the trailing save is a no-op on a warm cache or a
+        # shared planner.
+        self._executors = {
+            b: _compiled._executor_for(b) for b in self.buckets
+        }
         self.compiled.save_plans()
         self.queue: List[ImageRequest] = []
         self._uid = 0

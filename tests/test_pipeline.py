@@ -1,0 +1,441 @@
+"""Pipeline execution: cost-balanced stage partitioner + GPipe executor.
+
+Three layers under test:
+
+  * the partitioner (core/netplan): legal cut points (layout-elision chains
+    and route/shortcut spans forbid cuts), cost-balanced exact search over
+    the tick-synchronous latency model, the naive equal-layer-count
+    strawman it must beat, and the auto microbatch chooser;
+  * the v6 plan-cache "pipelines" section: warm loads reconstruct the
+    partition with zero re-partitions;
+  * the executor (distributed/pipeline): GPipe schedule over forced host
+    devices must match the single-device ``run_network`` bit-for-bit-close
+    (fp32 allclose; int8 SQNR-gated), exercised in subprocesses so the
+    main test process keeps its single-device view (see conftest).
+"""
+import jax
+import pytest
+
+from repro.configs import vgg16, yolov3
+from repro.core.netplan import (
+    choose_n_micro,
+    equal_count_partition,
+    legal_cut_points,
+    modeled_pipeline_latency,
+    partition_network,
+    plan_network,
+    plan_pipeline,
+    PipelinePlan,
+)
+from repro.core.planner import Planner
+from repro.models.cnn import layer_ref_spans
+
+
+def _plan(layers, hw=32, batch=4, impl="jax", dtype="float32"):
+    planner = Planner(impl=impl, cache_path=None)
+    return plan_network(layers, hw, hw, planner, batch=batch, dtype=dtype)
+
+
+# ---------------------------------------------------------------------------
+# Legal cut points
+
+
+def test_legal_cut_points_vgg16_all_boundaries():
+    # VGG-16 is a pure chain (no routes/shortcuts) and the jax impl keeps
+    # every boundary logically laid out — every internal boundary is legal.
+    netplan = _plan(vgg16.LAYERS)
+    n = len(netplan.steps)
+    assert legal_cut_points(netplan) == list(range(1, n))
+
+
+def test_legal_cut_points_yolo_route_spans_forbidden():
+    # yolov3-tiny's route layers reach back (16 <- 13, 19 <- {18, 8}): any
+    # cut strictly inside a (producer, consumer] span would strand the
+    # producer's activation on an earlier chip.
+    netplan = _plan(yolov3.TINY_LAYERS)
+    cuts = legal_cut_points(netplan)
+    spans = layer_ref_spans([s.layer for s in netplan.steps])
+    assert any(r + 1 < j for r, j in spans), "expected real route spans"
+    for b in cuts:
+        assert not any(r < b <= j for r, j in spans), b
+    # The widest span (8 -> 19) forbids boundaries 9..19 specifically.
+    assert all(not (9 <= b <= 19) for b in cuts)
+    assert 8 in cuts and 20 in cuts
+
+
+def test_legal_cut_points_respect_elision_chains():
+    # Under the pallas impl the planner elides channel crop/re-pad pairs,
+    # leaving physically-padded (non-trivial) boundary layouts; a cut there
+    # would ship a physically-laid-out activation across the chip edge.
+    netplan = _plan(vgg16.LAYERS, impl="pallas")
+    nontrivial = [b for b in range(1, len(netplan.steps))
+                  if not netplan.steps[b - 1].out_layout.trivial]
+    assert nontrivial, "expected elided boundaries under the pallas impl"
+    cuts = set(legal_cut_points(netplan))
+    assert not cuts & set(nontrivial)
+
+
+# ---------------------------------------------------------------------------
+# Cost-balanced partitioning
+
+
+@pytest.mark.parametrize("layers,name", [(vgg16.LAYERS, "vgg16"),
+                                         (yolov3.TINY_LAYERS, "yolo")])
+@pytest.mark.parametrize("batch", [4, 8])
+def test_partition_balanced_beats_equal_count(layers, name, batch):
+    """Acceptance: at 4 stages the cost-balanced partition's modeled
+    latency strictly beats naive equal-layer-count splitting, scored by
+    the planner's own predict_conv_time totals."""
+    netplan = _plan(layers, batch=batch)
+    balanced = partition_network(netplan, 4)
+    naive = equal_count_partition(netplan, 4)
+    assert balanced.modeled_latency_s() < naive.modeled_latency_s(), (
+        name, balanced.stage_bounds, naive.stage_bounds)
+
+
+def test_partition_structure_and_balance():
+    netplan = _plan(vgg16.LAYERS)
+    pp = partition_network(netplan, 4)
+    n = len(netplan.steps)
+    # Contiguous cover.
+    assert pp.stage_bounds[0][0] == 0 and pp.stage_bounds[-1][1] == n
+    for (a0, z0), (a1, _) in zip(pp.stage_bounds, pp.stage_bounds[1:]):
+        assert z0 == a1 and a0 < z0
+    # Every cut legal.
+    legal = set(legal_cut_points(netplan))
+    assert all(a in legal for a, _ in pp.stage_bounds[1:])
+    # The balanced max stage is no worse than the naive strawman's.
+    naive = equal_count_partition(netplan, 4)
+    assert max(pp.stage_seconds) <= max(naive.stage_seconds) + 1e-12
+    # n_micro tiles the batch.
+    assert netplan.batch % pp.n_micro == 0
+
+
+def test_partition_rejects_impossible_stage_counts():
+    netplan = _plan(yolov3.TINY_LAYERS)
+    with pytest.raises(ValueError):
+        partition_network(netplan, len(legal_cut_points(netplan)) + 2)
+    with pytest.raises(ValueError):
+        partition_network(netplan, 0)
+
+
+def test_equal_count_partition_cuts_are_legal():
+    netplan = _plan(yolov3.TINY_LAYERS)
+    naive = equal_count_partition(netplan, 4)
+    legal = set(legal_cut_points(netplan))
+    assert all(a in legal for a, _ in naive.stage_bounds[1:])
+
+
+def test_pipeline_plan_json_roundtrip():
+    pp = PipelinePlan(stage_bounds=((0, 3), (3, 7)),
+                      stage_seconds=(1e-4, 2e-4), n_micro=2)
+    assert PipelinePlan.from_json(pp.to_json()) == pp
+    assert pp.n_stages == 2
+    assert pp.bubble_fraction() == pytest.approx(1 / 3)
+
+
+# ---------------------------------------------------------------------------
+# Microbatch chooser + latency model
+
+
+def test_choose_n_micro_monotone_then_saturating():
+    # More batch -> more (or equal) microbatches, until the per-tick
+    # overhead outweighs the bubble shrink and the chooser saturates.
+    stage_seconds = (1e-3, 1e-3)
+    ms = [choose_n_micro(stage_seconds, b) for b in (1, 2, 4, 8, 16, 32)]
+    assert all(a <= b for a, b in zip(ms, ms[1:])), ms
+    assert ms[0] == 1
+    assert ms[-1] == ms[-2], f"expected saturation, got {ms}"
+
+
+def test_choose_n_micro_divides_batch():
+    for batch in (1, 3, 6, 8):
+        m = choose_n_micro((1e-3, 5e-4, 2e-4), batch)
+        assert batch % m == 0
+
+
+def test_modeled_latency_tick_sum():
+    # 2 stages, 2 microbatches, zero overhead: ticks are (s0), (max(s0,s1)),
+    # (s1) at half the full-batch stage seconds each.
+    t = modeled_pipeline_latency((2.0, 4.0), 2, tick_overhead_s=0.0)
+    assert t == pytest.approx(1.0 + 2.0 + 2.0)
+    # n_micro=1 degenerates to the sequential sum.
+    assert modeled_pipeline_latency((2.0, 4.0), 1, 0.0) == pytest.approx(6.0)
+
+
+# ---------------------------------------------------------------------------
+# v6 cache: pipelines section
+
+
+def test_pipeline_cache_warm_load_zero_repartition(tmp_path):
+    cache = str(tmp_path / "plans.json")
+    cold = Planner(impl="jax", cache_path=cache)
+    pp_cold = plan_pipeline(vgg16.LAYERS, 32, 32, cold, 4, batch=4)
+    cold.save()
+
+    warm = Planner(impl="jax", cache_path=cache)
+    pp_warm = plan_pipeline(vgg16.LAYERS, 32, 32, warm, 4, batch=4)
+    assert pp_warm == pp_cold
+    assert warm.pipeline_hits == 1
+    assert warm.network_hits == 1      # the netplan warm-loads too
+    assert warm.stats["tunes"] == 0
+
+
+def test_pipeline_cache_scoped_by_stage_count(tmp_path):
+    cache = str(tmp_path / "plans.json")
+    planner = Planner(impl="jax", cache_path=cache)
+    pp2 = plan_pipeline(vgg16.LAYERS, 32, 32, planner, 2, batch=4)
+    pp4 = plan_pipeline(vgg16.LAYERS, 32, 32, planner, 4, batch=4)
+    assert pp2.n_stages == 2 and pp4.n_stages == 4
+    assert planner.pipeline_hits == 0  # distinct keys: both were cold
+
+
+# ---------------------------------------------------------------------------
+# verify_pipeline
+
+
+def test_verify_pipeline_clean_on_partitioner_output():
+    from repro.analysis import verify_pipeline
+
+    netplan = _plan(yolov3.TINY_LAYERS)
+    pp = partition_network(netplan, 4)
+    report = verify_pipeline(netplan, pp, name="yolo-tiny")
+    assert report.ok and report.clean, report.summary()
+    assert report.passes_run == ("pipeline",)
+
+
+def test_verify_pipeline_flags_illegal_cut_and_bad_seconds():
+    from repro.analysis import verify_pipeline
+
+    netplan = _plan(yolov3.TINY_LAYERS)
+    n = len(netplan.steps)
+    # Cut at 12 lands inside the (8 -> 19) route span.
+    bad = PipelinePlan(stage_bounds=((0, 12), (12, n)),
+                       stage_seconds=(1.0, 2.0), n_micro=3)
+    report = verify_pipeline(netplan, bad)
+    msgs = [f.message for f in report.findings]
+    assert not report.ok
+    assert any("illegal" in m for m in msgs), msgs
+    assert any("disagree" in m for m in msgs), msgs          # fake seconds
+    assert any("does not tile" in m for m in msgs), msgs     # 4 % 3 != 0
+
+
+def test_verify_pipeline_flags_non_cover():
+    from repro.analysis import verify_pipeline
+
+    netplan = _plan(vgg16.LAYERS)
+    bad = PipelinePlan(stage_bounds=((0, 5), (7, len(netplan.steps))),
+                       stage_seconds=(1.0, 1.0), n_micro=1)
+    report = verify_pipeline(netplan, bad)
+    assert not report.ok
+
+
+# ---------------------------------------------------------------------------
+# GPipe executor vs single device (subprocess: forced host devices)
+
+
+PARITY_CODE = """
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.configs import vgg16, yolov3
+    from repro.core.netplan import (partition_network, plan_network,
+                                    prepare_net_params, run_network)
+    from repro.core.planner import Planner
+    from repro.distributed.pipeline import PipelineExecutor
+    from repro.models.cnn import init_cnn
+
+    assert jax.device_count() == 4, jax.device_count()
+    layers = {layers}
+    hw = 32
+    for batch in (4, 8):
+        planner = Planner(impl="jax", cache_path=None)
+        netplan = plan_network(layers, hw, hw, planner, batch=batch)
+        params = init_cnn(jax.random.PRNGKey(0), layers)
+        x = jax.random.normal(jax.random.PRNGKey(1), (batch, hw, hw, 3))
+        ref = run_network(netplan, prepare_net_params(netplan, params), x)
+        pp = partition_network(netplan, 4)
+        ex = PipelineExecutor(netplan, pp, params)
+        assert ex.n_micro >= 1 and batch % ex.n_micro == 0
+        got = ex(x)
+        assert got.shape == ref.shape, (got.shape, ref.shape)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   rtol=1e-5, atol=1e-5)
+        print("PARITY_OK", batch, pp.stage_bounds)
+"""
+
+
+def test_pipeline_parity_vgg16_batch_4_8():
+    from conftest import run_with_devices
+
+    out = run_with_devices(4, PARITY_CODE.format(layers="vgg16.LAYERS"))
+    assert out.count("PARITY_OK") == 2
+
+
+def test_pipeline_parity_yolov3_tiny_batch_4_8():
+    from conftest import run_with_devices
+
+    out = run_with_devices(
+        4, PARITY_CODE.format(layers="yolov3.TINY_LAYERS"))
+    assert out.count("PARITY_OK") == 2
+
+
+def test_ci_smoke_pipeline_interpret_parity():
+    """A small planned net through the Pallas kernels in interpret mode,
+    pipelined over 2 stages x 2 microbatches — the CI smoke subset."""
+    from conftest import run_with_devices
+
+    out = run_with_devices(2, """
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core.netplan import (partition_network, plan_network,
+                                        prepare_net_params, run_network)
+        from repro.core.planner import Planner
+        from repro.distributed.pipeline import PipelineExecutor
+        from repro.models.cnn import CNNLayer, init_cnn
+
+        C = CNNLayer
+        # 128-lane-aligned channels keep the boundary layouts trivial
+        # (physical == logical) so the partitioner has legal cut points.
+        layers = (
+            C("conv", out_channels=128, kernel=3, activation="relu"),
+            C("maxpool", size=2, stride=2),
+            C("conv", out_channels=64, kernel=1, pad=0, batch_norm=False,
+              activation="linear"),
+        )
+        planner = Planner(impl="pallas", cache_path=None)
+        netplan = plan_network(layers, 8, 8, planner, batch=4)
+        params = init_cnn(jax.random.PRNGKey(0), layers)
+        x = jax.random.normal(jax.random.PRNGKey(1), (4, 8, 8, 3))
+        prepared = prepare_net_params(netplan, params)
+        ref = run_network(netplan, prepared, x, interpret=True)
+        pp = partition_network(netplan, 2, n_micro=2)
+        ex = PipelineExecutor(netplan, pp, params, interpret=True)
+        got = ex(x)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   rtol=1e-5, atol=1e-5)
+        print("SMOKE_OK", pp.stage_bounds)
+    """)
+    assert "SMOKE_OK" in out
+
+
+def test_ci_smoke_pipeline_forward_int8_roundtrip():
+    """The generic schedule must carry int8 activations without upcasting:
+    the last-stage psum broadcast uses zeros_like, so an int8 stage_fn's
+    output survives the collective bit-exact (the jnp.where(..., 0.0)
+    regression this pins would upcast to float32)."""
+    from conftest import run_with_devices
+
+    out = run_with_devices(2, """
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.distributed.pipeline import pipeline_forward
+        from repro.launch.mesh import make_stage_mesh
+
+        mesh = make_stage_mesh(2)
+        # Per-stage int8 offsets, stacked over the stage axis.
+        stacked = jnp.asarray([[1], [2]], jnp.int8)
+
+        def stage_fn(p, x):
+            return x + p[0]
+
+        x = jnp.arange(4 * 3, dtype=jnp.int8).reshape(4, 3)
+        out = pipeline_forward(mesh, stage_fn, stacked, x, n_micro=2)
+        assert out.dtype == jnp.int8, out.dtype
+        np.testing.assert_array_equal(np.asarray(out),
+                                      np.asarray(x) + 3)
+        print("INT8_OK", out.dtype)
+    """)
+    assert "INT8_OK" in out
+
+
+def test_pipeline_parity_int8_network():
+    """int8 network through the pipeline: stages run the quantized kernels
+    (fp32 activations between layers, per-layer quantization inside the
+    stage body) and must match the single-device int8 executor at SQNR
+    levels far above the quantization floor."""
+    from conftest import run_with_devices
+
+    out = run_with_devices(4, """
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.configs import vgg16
+        from repro.core.netplan import (partition_network, plan_network,
+                                        prepare_net_params,
+                                        pretransform_flags, run_network)
+        from repro.core.planner import Planner
+        from repro.core.quant import sqnr_db
+        from repro.distributed.pipeline import PipelineExecutor
+        from repro.models.cnn import init_cnn
+
+        layers, hw, batch = vgg16.LAYERS, 32, 4
+        planner = Planner(impl="jax", cache_path=None)
+        netplan = plan_network(layers, hw, hw, planner, batch=batch,
+                               dtype="int8")
+        params = init_cnn(jax.random.PRNGKey(0), layers)
+        x = jax.random.normal(jax.random.PRNGKey(1), (batch, hw, hw, 3))
+        prepared = prepare_net_params(netplan, params, pretransform=True,
+                                      calibration=x)
+        flags = pretransform_flags(netplan, True)
+        ref = run_network(netplan, prepared, x, pretransformed=flags)
+        pp = partition_network(netplan, 4)
+        ex = PipelineExecutor(netplan, pp, params, calibration=x)
+        got = ex(x)
+        q = sqnr_db(np.asarray(ref), np.asarray(got))
+        assert q > 40.0, q
+        print("INT8_NET_OK", q)
+    """)
+    assert "INT8_NET_OK" in out
+
+
+def test_stage_mesh_requires_enough_devices():
+    from repro.launch.mesh import make_stage_mesh
+
+    with pytest.raises(ValueError):
+        make_stage_mesh(jax.device_count() + 1)
+
+
+# ---------------------------------------------------------------------------
+# Facade integration (single forced-device-count subprocess)
+
+
+def test_facade_pipeline_options_and_report():
+    from conftest import run_with_devices
+
+    out = run_with_devices(4, """
+        import jax, numpy as np
+        import repro
+        from repro.models.cnn import init_cnn
+        from repro.configs import vgg16
+
+        desc = vgg16.MODEL.with_input_hw((32, 32))
+        params = init_cnn(jax.random.PRNGKey(0), desc.layers)
+        opts = repro.ExecutionOptions(impl="jax", batch=4, cache_path=None,
+                                      pipeline_stages=4, validate="plan")
+        compiled = repro.compile(desc, params, opts)
+        report = compiled.plan_report()
+        pipe = report["pipeline"]
+        assert pipe["n_stages"] == 4
+        assert 0.0 < pipe["bubble_fraction"] < 1.0
+        assert len(pipe["stage_bounds"]) == 4
+        assert all("stage" in row for row in report["layers"])
+
+        x = np.random.default_rng(0).normal(
+            size=(4, 32, 32, 3)).astype(np.float32)
+        got = compiled.run(x)
+        single = repro.compile(
+            desc, params, opts.replace(pipeline_stages=0))
+        np.testing.assert_allclose(np.asarray(got),
+                                   np.asarray(single.run(x)),
+                                   rtol=1e-5, atol=1e-5)
+        print("FACADE_OK", pipe["stage_bounds"])
+    """)
+    assert "FACADE_OK" in out
+
+
+def test_execution_options_pipeline_validation():
+    import repro
+
+    with pytest.raises(ValueError):
+        repro.ExecutionOptions(pipeline_stages=1)
+    with pytest.raises(ValueError):
+        repro.ExecutionOptions(microbatch=0)
+    with pytest.raises(ValueError):
+        repro.ExecutionOptions(microbatch="bogus")
+    o = repro.ExecutionOptions(pipeline_stages=4, microbatch="auto")
+    assert o.pipeline_stages == 4 and o.microbatch == "auto"

@@ -189,11 +189,11 @@ def test_planner_measure_mode_delegates_int8_to_cost_model():
 
 
 def test_plan_dtype_cache_round_trip(tmp_path):
-    """v5 cache: the resolved per-layer dtype rides the plan entry, and a
+    """The resolved per-layer dtype rides the plan entry (since v5), and a
     warm planner re-tunes nothing for the same int8 request."""
     from repro.core.planner import PLAN_CACHE_VERSION, Planner
 
-    assert PLAN_CACHE_VERSION == 5
+    assert PLAN_CACHE_VERSION >= 5
     cache = str(tmp_path / "plans.json")
     spec = ConvSpec(128, 256, (3, 3), (1, 1), (1, 1))
     p1 = Planner(impl="pallas", cache_path=cache)

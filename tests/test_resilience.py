@@ -22,7 +22,11 @@ import pytest
 import repro
 from repro import configs
 from repro.api import CNNModel, ExecutionOptions
-from repro.core.planner import Planner, salvage_cache_text
+from repro.core.planner import (
+    PLAN_CACHE_VERSION,
+    Planner,
+    salvage_cache_text,
+)
 from repro.models import transformer as tf
 from repro.models.cnn import CNNLayer, init_cnn
 from repro.serving import (
@@ -578,7 +582,7 @@ def test_flock_merge_quarantines_corrupt_disk_state(tmp_path):
     with pytest.warns(RuntimeWarning, match="corrupt"):
         planner_b.save()
     merged = json.loads(open(cache).read())
-    assert merged["version"] == 5
+    assert merged["version"] == PLAN_CACHE_VERSION
     assert set(merged["plans"]) >= set(planner_b._plans)
     quarantines = [
         f for f in os.listdir(tmp_path) if ".corrupt-" in f
