@@ -39,10 +39,14 @@ from typing import Any, Dict, List, Optional, Tuple
 # Deterministic modeled rows only — see module docstring.  The
 # serving_resilience row is a zero-cost proof (seconds = sum of the
 # engine's degradation counters, 0.0 healthy): gating it catches a
-# baseline that silently serves from a fallback rung.
+# baseline that silently serves from a fallback rung.  The verify_kernel
+# row is the same shape for the kernel-interior static analyzer (seconds =
+# error-finding count over the Pallas compilation, fp32 + int8): any new
+# race/bounds/accumulator/overflow finding flips it non-zero and fails
+# the exact-equality rule.
 DEFAULT_PATTERN = (
     r"^e2e_.*_L\d+$|^e2e_.*_predicted_total$|^e2e_.*_serving_resilience$"
-    r"|^e2e_.*_pipeline_s\d+$"
+    r"|^e2e_.*_pipeline_s\d+$|^e2e_.*_verify_kernel$"
 )
 DEFAULT_TOLERANCE = 0.05
 # The committed baseline's generation recipe; regen must match it exactly

@@ -203,6 +203,38 @@ def run(
                 },
             )
 
+    # -- 1f. kernel-interior proofs: zero-cost verification row --------------
+    # The kernel-level static analyzer runs over the *Pallas* compilation of
+    # the same network (interpret mode, trace-only — nothing executes), fp32
+    # and int8, and ``seconds`` is the total error-finding count: 0.0 while
+    # every pallas_call's write-disjointness, block-bounds, accumulator-guard
+    # and int8-overflow proof holds.  The regression gate's exact-equality
+    # rule for zero-second rows turns any new finding into a build failure.
+    import time
+
+    n_err = n_kernels = 0
+    prov = {}
+    t0 = time.monotonic()
+    for tag, opts_v in (("fp32", options), ("int8", options8)):
+        compiled_v = repro.compile(
+            desc, params, opts_v.replace(impl="pallas", interpret=True))
+        rep = compiled_v.verify_report(level="kernel")
+        errs = sum(1 for f in rep.findings if f.severity == "error")
+        n_err += errs
+        n_kernels += len(rep.kernels)
+        prov[tag] = {
+            "kernels": len(rep.kernels),
+            "errors": errs,
+            "warnings": sum(
+                1 for f in rep.findings if f.severity == "warning"),
+            "passes_run": list(rep.passes_run),
+        }
+    prov["wall_s"] = round(time.monotonic() - t0, 3)
+    emit(f"e2e_{model}_verify_kernel", float(n_err),
+         f"kernels={n_kernels} errors={n_err} (fp32+int8, pallas interpret, "
+         f"level=kernel, {prov['wall_s']:.1f}s)",
+         provenance=prov)
+
     if predict_only:
         # Modeled rows only: skip the wall-clock sections (2, 2b, 2c) but
         # keep the warm-cache proof — everything emitted is deterministic,

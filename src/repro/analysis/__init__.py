@@ -5,6 +5,12 @@ promises: every kernel's true VMEM footprint fits the planner's budget and
 tracks the cost model, the grid x block HBM traffic matches the plan's
 accounting, the inter-layer layout-elision contract holds (no unplanned
 channel pads/crops between kernels), and int8 layers accumulate legally.
+The kernel-interior rung (``level="kernel"``, ``analysis.grid``) goes
+inside each pallas_call: output index maps are injective over non-reduction
+grid axes (no write races), every block window stays inside its operand's
+padded bounds at all grid corners, accumulator scratch is initialized
+before it is read with the reduction axis innermost, and int8 accumulators
+are interval-certified against int32 overflow.
 
     from repro.analysis import verify_network
     report = verify_network(netplan, prepared_params)
@@ -37,28 +43,56 @@ from repro.analysis.descriptors import (
     reference_netplan,
     step_descriptors,
 )
-from repro.analysis.verifier import LEVELS, verify_network, verify_pipeline
+from repro.analysis.grid import (
+    AffineMap,
+    Guard,
+    RefAccess,
+    WindowViolation,
+    affine_index_map,
+    grid_corners,
+    injectivity_witness,
+    ref_accesses,
+    reduction_axes,
+    window_violations,
+)
+from repro.analysis.verifier import (
+    KERNEL_PASSES,
+    LEVELS,
+    verify_network,
+    verify_pipeline,
+)
 
 __all__ = [
+    "AffineMap",
     "BOUNDARY_PRIMS",
     "ChannelOp",
     "Finding",
+    "Guard",
+    "KERNEL_PASSES",
     "LEVELS",
     "OperandInfo",
     "PASSES",
     "PallasCallRecord",
     "PlanVerificationError",
+    "RefAccess",
     "ScratchInfo",
     "VerifyReport",
+    "WindowViolation",
+    "affine_index_map",
     "boundary_ops",
     "channel_boundary_ops",
     "dump_json",
+    "grid_corners",
+    "injectivity_witness",
     "iter_eqns",
     "network_descriptors",
     "pallas_calls",
+    "ref_accesses",
+    "reduction_axes",
     "reference_netplan",
     "step_descriptors",
     "trace_forward",
     "verify_network",
+    "window_violations",
     "verify_pipeline",
 ]

@@ -43,7 +43,11 @@ def main(argv=None) -> int:
     ap.add_argument("--input-hw", type=int, nargs=2, metavar=("H", "W"),
                     help="override the model's input geometry "
                          "(e.g. a reduced size for quick CI runs)")
-    ap.add_argument("--level", default="full", choices=("plan", "full"))
+    ap.add_argument("--level", default="full",
+                    choices=("plan", "kernel", "full"),
+                    help="'plan' = layout/footprint checks only (no trace); "
+                         "'kernel' = kernel-interior proofs (race, bounds, "
+                         "accum, int8 overflow); 'full' = everything")
     ap.add_argument("--json", action="store_true",
                     help="emit the full machine-readable report")
     ap.add_argument("--cache-path", default=None,

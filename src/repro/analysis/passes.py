@@ -228,6 +228,352 @@ def _kernel_eqns(jaxpr):
     return iter_eqns(jaxpr, into_pallas=True)
 
 
+# ---------------------------------------------------------------------------
+# Kernel-interior passes (the ``kernel`` rung): race, bounds, accum, overflow.
+# The facts come from analysis.grid — affine index-map recovery, guard
+# resolution from the kernel jaxpr's pl.when conds, exact rational rank.
+
+#: Symmetric int8 quantization magnitude (core/quant.py clips both
+#: activations and weights to [-127, 127]).
+Q8_MAX = 127
+INT32_MAX = 2**31 - 1
+
+
+def _output_flush_ok(accesses, ref: int, axis: int, last: int) -> bool:
+    """Is every write to output ``ref`` guarded on ``pid(axis) == last``?"""
+    writes = [a for a in accesses if a.ref == ref and a.kind == "write"]
+    return bool(writes) and all(
+        any(
+            g.axis == axis and g.step == last and not g.negated
+            for g in a.guards
+        )
+        for a in writes
+    )
+
+
+def race_pass(
+    report: VerifyReport,
+    pairs: List[Tuple[PallasCallRecord, Dict[str, Any]]],
+) -> None:
+    """Write-disjointness: no two grid programs write the same output block.
+
+    Two obligations per output operand: (a) the index map restricted to the
+    grid axes it *does* use is injective (exact rational-rank certificate,
+    with a concrete two-program collision witness on failure); (b) every
+    grid axis *absent* from the map is a genuine reduction axis — declared
+    sequential ('arbitrary') to Mosaic, backed by an accumulator scratch,
+    and flushed to the output only under the recovered last-step
+    ``pl.program_id`` guard.  The planned reduction axes from the kernel
+    descriptor must agree with what the trace shows.
+    """
+    from repro.analysis import grid as G
+
+    for rec, desc in pairs:
+        n_in = len(rec.inputs)
+        accesses = G.ref_accesses(rec)
+        declared = desc.get("reduction_axes")
+        for oi, op in enumerate(rec.outputs):
+            red = G.reduction_axes(rec, op)
+            if declared is not None and set(red) - set(declared):
+                extra = sorted(set(red) - set(declared))
+                report.add(Finding(
+                    pass_name="race", severity="error",
+                    message=(
+                        f"grid axes {extra} are absent from the output index "
+                        "map but the plan does not declare them reduction "
+                        "axes"
+                    ),
+                    step=desc.get("step"), kernel=rec.name,
+                ))
+            amap = G.affine_index_map(op.index_map_jaxpr, rec.grid)
+            if amap is None:
+                if op.index_map_jaxpr is not None:
+                    report.add(Finding(
+                        pass_name="race", severity="warning",
+                        message=(
+                            "output index map is not affine; injectivity "
+                            "unproved"
+                        ),
+                        step=desc.get("step"), kernel=rec.name,
+                    ))
+            else:
+                status, witness = G.injectivity_witness(
+                    amap, rec.grid, op.dep_axes
+                )
+                if status == "collision":
+                    p, q = witness
+                    report.add(Finding(
+                        pass_name="race", severity="error",
+                        message=(
+                            "output index map is not injective: grid "
+                            f"programs {p} and {q} write the same output "
+                            "block"
+                        ),
+                        step=desc.get("step"), kernel=rec.name,
+                    ))
+                elif status == "unknown":
+                    report.add(Finding(
+                        pass_name="race", severity="warning",
+                        message=(
+                            "output index map rank-deficient but no "
+                            "collision witness found in the search window"
+                        ),
+                        step=desc.get("step"), kernel=rec.name,
+                    ))
+            for r in red:
+                sem = rec.dimension_semantics
+                if sem is not None and sem[r] != "arbitrary":
+                    report.add(Finding(
+                        pass_name="race", severity="error",
+                        message=(
+                            f"reduction axis {r} is declared "
+                            f"{sem[r]!r} to Mosaic; a parallelized "
+                            "reduction races on the shared output block"
+                        ),
+                        step=desc.get("step"), kernel=rec.name,
+                    ))
+                if not rec.scratch:
+                    report.add(Finding(
+                        pass_name="race", severity="error",
+                        message=(
+                            f"grid axis {r} is absent from the output index "
+                            "map but the kernel has no accumulator scratch"
+                        ),
+                        step=desc.get("step"), kernel=rec.name,
+                    ))
+                    continue
+                if not _output_flush_ok(
+                    accesses, n_in + oi, r, rec.grid[r] - 1
+                ):
+                    report.add(Finding(
+                        pass_name="race", severity="error",
+                        message=(
+                            "output is written outside the last-step guard "
+                            f"of reduction axis {r}; intermediate partial "
+                            "sums would reach HBM"
+                        ),
+                        step=desc.get("step"), kernel=rec.name,
+                    ))
+
+
+def bounds_pass(
+    report: VerifyReport,
+    pairs: List[Tuple[PallasCallRecord, Dict[str, Any]]],
+) -> None:
+    """Every ``index_map x block_shape`` window stays inside the (padded)
+    operand bounds at all grid corners — affine maps make the corner check
+    exact (see analysis.grid)."""
+    from repro.analysis import grid as G
+
+    for rec, desc in pairs:
+        for kind, ops in (("input", rec.inputs), ("output", rec.outputs)):
+            for pos, op in enumerate(ops):
+                if op.index_map_jaxpr is None:
+                    continue
+                violations, proved = G.window_violations(op, rec.grid)
+                if violations:
+                    v = violations[0]
+                    report.add(Finding(
+                        pass_name="bounds", severity="error",
+                        message=(
+                            f"{kind} operand {pos} block window escapes the "
+                            f"operand bounds: at grid point {v.point}, dim "
+                            f"{v.dim} covers [{v.start}, {v.stop}) of "
+                            f"extent {v.extent} "
+                            f"({len(violations)} offending grid point(s))"
+                        ),
+                        step=desc.get("step"), kernel=rec.name,
+                        expected=v.extent, actual=v.stop,
+                    ))
+                elif not proved:
+                    report.add(Finding(
+                        pass_name="bounds", severity="warning",
+                        message=(
+                            f"{kind} operand {pos} index map is not affine "
+                            "and the grid is too large to enumerate; "
+                            "bounds unproved"
+                        ),
+                        step=desc.get("step"), kernel=rec.name,
+                    ))
+
+
+def accum_pass(
+    report: VerifyReport,
+    pairs: List[Tuple[PallasCallRecord, Dict[str, Any]]],
+) -> None:
+    """Accumulator hazards: scratch must be initialized on the first
+    reduction step before any read, and reduction axes must be innermost.
+
+    The initializing write's guard is recovered from the kernel body's
+    ``pl.program_id`` predicate — a flipped guard (init on the *last* step)
+    means every earlier reduction step reads garbage from the previous
+    output block's accumulation.  Reduction axes must trail every
+    multi-step parallel axis: Pallas revisits an output block consecutively
+    only when the axes its index map ignores iterate innermost.
+    """
+    from repro.analysis import grid as G
+
+    for rec, desc in pairs:
+        red = sorted({
+            a for op in rec.outputs for a in G.reduction_axes(rec, op)
+        })
+        for r in red:
+            after = [
+                a for a in range(r + 1, len(rec.grid))
+                if rec.grid[a] > 1 and a not in red
+            ]
+            if after:
+                report.add(Finding(
+                    pass_name="accum", severity="error",
+                    message=(
+                        f"reduction axis {r} is not innermost: parallel "
+                        f"axes {after} iterate inside it, so the scratch "
+                        "accumulator is clobbered between partial sums"
+                    ),
+                    step=desc.get("step"), kernel=rec.name,
+                ))
+        if not rec.scratch:
+            continue
+        accesses = G.ref_accesses(rec)
+        base = len(rec.inputs) + len(rec.outputs)
+        for si in range(len(rec.scratch)):
+            acc = [a for a in accesses if a.ref == base + si]
+            if not acc:
+                continue
+            first = acc[0]
+            if first.kind == "read":
+                report.add(Finding(
+                    pass_name="accum", severity="error",
+                    message=(
+                        f"scratch {si} is read before any initializing "
+                        "write"
+                    ),
+                    step=desc.get("step"), kernel=rec.name,
+                ))
+                continue
+            bad = [
+                g for g in first.guards
+                if (g.step != 0 and not g.negated)
+                or (g.step == 0 and g.negated)
+            ]
+            if bad:
+                g = bad[0]
+                report.add(Finding(
+                    pass_name="accum", severity="error",
+                    message=(
+                        f"scratch {si} initializing write is guarded on "
+                        f"step {g.step} of grid axis {g.axis}"
+                        f"{' (negated)' if g.negated else ''}; reads on "
+                        "the first reduction step see stale data"
+                    ),
+                    step=desc.get("step"), kernel=rec.name,
+                ))
+            elif first.opaque:
+                report.add(Finding(
+                    pass_name="accum", severity="warning",
+                    message=(
+                        f"scratch {si} initializing write sits under a "
+                        "predicate the analyzer could not resolve"
+                    ),
+                    step=desc.get("step"), kernel=rec.name,
+                ))
+
+
+def _traced_k_elems(rec: PallasCallRecord, desc: Dict[str, Any]):
+    """Reduction depth K from the traced operand shapes, per family."""
+    family = desc.get("family")
+    if family == "gemm" and rec.inputs:
+        return rec.inputs[0].array_shape[1]          # A is (Mp, Kp)
+    if family == "im2col" and len(rec.inputs) >= 2:
+        kh, kw, cp = rec.inputs[1].array_shape[:3]   # w is (kh, kw, Cp, Op)
+        return kh * kw * cp
+    return None
+
+
+def overflow_pass(
+    report: VerifyReport,
+    pairs: List[Tuple[PallasCallRecord, Dict[str, Any]]],
+) -> None:
+    """int8 overflow certification by interval arithmetic.
+
+    A q8 kernel accumulates ``K`` products of values in [-127, 127] into
+    int32, so ``|acc| <= K * 127^2``; the pass proves that bound stays
+    under ``2^31 - 1`` for the *traced* reduction depth (kh*kw*Cin at the
+    padded channel count — padding lanes are zero, so the physical K is the
+    worst case and also the sound one).  The descriptor's declared
+    ``k_elems`` must match the traced shapes, pinning plan/trace drift.
+    The fused dequant epilogue is fp32-safe a fortiori: the certified
+    int32 bound times any representable calibration scale is far below
+    fp32 max.
+    """
+    for rec, desc in pairs:
+        if "_q8" not in rec.name:
+            continue
+        k = _traced_k_elems(rec, desc)
+        declared = desc.get("k_elems")
+        if declared is not None and k is not None and int(declared) != int(k):
+            report.add(Finding(
+                pass_name="overflow", severity="error",
+                message=(
+                    "plan-declared reduction depth disagrees with the "
+                    "traced operand shapes"
+                ),
+                step=desc.get("step"), kernel=rec.name,
+                expected=int(declared), actual=int(k),
+            ))
+        k = k if k is not None else declared
+        if k is None:
+            report.add(Finding(
+                pass_name="overflow", severity="warning",
+                message=(
+                    "reduction depth unrecoverable from plan or trace; "
+                    "int32 accumulator bound unproved"
+                ),
+                step=desc.get("step"), kernel=rec.name,
+            ))
+            continue
+        bound = int(k) * Q8_MAX * Q8_MAX
+        if bound > INT32_MAX:
+            report.add(Finding(
+                pass_name="overflow", severity="error",
+                message=(
+                    f"int32 accumulator can overflow: K*127^2 = {bound} "
+                    f"exceeds {INT32_MAX} at reduction depth K={k}"
+                ),
+                step=desc.get("step"), kernel=rec.name,
+                expected=INT32_MAX, actual=bound,
+            ))
+
+
+def interior_metrics(
+    pairs: List[Tuple[PallasCallRecord, Dict[str, Any]]],
+) -> List[Dict[str, Any]]:
+    """Per-kernel rows of the kernel-interior facts (always recorded)."""
+    from repro.analysis import grid as G
+
+    rows = []
+    for rec, desc in pairs:
+        red = sorted({
+            a for op in rec.outputs for a in G.reduction_axes(rec, op)
+        })
+        row: Dict[str, Any] = {
+            "reduction_axes": red,
+            "dimension_semantics": (
+                list(rec.dimension_semantics)
+                if rec.dimension_semantics is not None else None
+            ),
+            "bounds_points_checked": len(G.grid_corners(rec.grid)),
+        }
+        if "_q8" in rec.name:
+            k = _traced_k_elems(rec, desc) or desc.get("k_elems")
+            if k is not None:
+                bound = int(k) * Q8_MAX * Q8_MAX
+                row["acc_bound"] = bound
+                row["acc_headroom"] = round(INT32_MAX / bound, 3)
+        rows.append(row)
+    return rows
+
+
 def dtype_pass(
     report: VerifyReport,
     pairs: List[Tuple[PallasCallRecord, Dict[str, Any]]],

@@ -13,10 +13,18 @@ import dataclasses
 import json
 from typing import Any, Dict, List, Optional, Tuple
 
-#: The four analysis passes plus the structural pre-pass that matches
-#: pallas_calls to plan steps (a mismatch there invalidates the others),
-#: and the pipeline pass (stage-partition legality, ``verify_pipeline``).
-PASSES = ("structure", "vmem", "traffic", "elision", "dtype", "pipeline")
+#: The plan-level passes (vmem/traffic/elision/dtype) plus the structural
+#: pre-pass that matches pallas_calls to plan steps (a mismatch there
+#: invalidates the others), the pipeline pass (stage-partition legality,
+#: ``verify_pipeline``), and the kernel-interior passes of the ``kernel``
+#: rung: race (write-disjointness of output index maps), bounds (block
+#: windows inside operand bounds at all grid corners), accum (scratch
+#: initialized before read, reduction innermost) and overflow (int8
+#: accumulator interval certification).
+PASSES = (
+    "structure", "vmem", "traffic", "elision", "dtype", "pipeline",
+    "race", "bounds", "accum", "overflow",
+)
 SEVERITIES = ("error", "warning")
 
 

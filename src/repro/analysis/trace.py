@@ -99,6 +99,12 @@ class OperandInfo:
     dtype: str
     itemsize: int
     dep_axes: Tuple[int, ...]     # grid axes the index map depends on
+    #: The operand's index-map ClosedJaxpr, kept so the kernel-interior
+    #: passes (analysis.grid) can evaluate the map at concrete grid points.
+    #: None for hand-built records in tests; excluded from equality.
+    index_map_jaxpr: Any = dataclasses.field(
+        default=None, compare=False, repr=False
+    )
 
     @property
     def block_bytes(self) -> int:
@@ -145,6 +151,11 @@ class PallasCallRecord:
     outputs: Tuple[OperandInfo, ...]
     scratch: Tuple[ScratchInfo, ...]
     kernel_jaxpr: Any             # the kernel-interior jaxpr (dtype lint)
+    #: Mosaic's per-grid-axis schedule declaration ('parallel' |
+    #: 'arbitrary'), recovered from compiler_params — the kernel-interior
+    #: race pass checks reduction axes are declared sequential.  None when
+    #: the pallas_call carried no dimension_semantics.
+    dimension_semantics: Any = dataclasses.field(default=None, compare=False)
 
     @property
     def operands(self) -> Tuple[OperandInfo, ...]:
@@ -194,9 +205,14 @@ def _record_from_eqn(eqn) -> PallasCallRecord:
                 dtype=str(asd.dtype),
                 itemsize=int(np.dtype(asd.dtype).itemsize),
                 dep_axes=_index_map_deps(bm.index_map_jaxpr, n_axes),
+                index_map_jaxpr=bm.index_map_jaxpr,
             )
         )
     kernel_jaxpr = eqn.params["jaxpr"]
+    mosaic = (eqn.params.get("compiler_params") or {}).get("mosaic") or {}
+    semantics = mosaic.get("dimension_semantics")
+    if semantics is not None:
+        semantics = tuple(str(s) for s in semantics)
     n_scratch = int(gm.num_scratch_operands)
     scratch: List[ScratchInfo] = []
     if n_scratch:
@@ -214,6 +230,7 @@ def _record_from_eqn(eqn) -> PallasCallRecord:
         outputs=tuple(op for op in ops if op.kind == "out"),
         scratch=tuple(scratch),
         kernel_jaxpr=kernel_jaxpr,
+        dimension_semantics=semantics,
     )
 
 
@@ -275,17 +292,27 @@ def _census_walk(jaxpr, tainted: set, out: List[ChannelOp]) -> None:
             continue                        # interior movement is the kernel's
         # Descend into call-like sub-jaxprs whose invars mirror the eqn's
         # (pjit, closed_call, custom_jvp/vjp call params) so channel ops
-        # inside nested fusions are still counted.
+        # inside nested fusions are still counted.  ``cond`` — which also
+        # carries ``lax.switch``, jax lowers both to cond_p — leads with the
+        # branch-selector operand, so its branch jaxprs mirror
+        # ``eqn.invars[1:]``; the old exact-length match silently skipped
+        # them, hiding e.g. pipeline stage bodies (switch branches) from the
+        # elision census.
         for sub in _subjaxprs(eqn.params):
             if len(sub.invars) == len(eqn.invars):
-                inner = {
-                    id(sv)
-                    for sv, ev in zip(sub.invars, eqn.invars)
-                    if not _is_literal(ev) and id(ev) in tainted
-                }
-                _census_walk(sub, inner, out)
-                # conservative: sub-jaxpr outvars already handled above via
-                # tainted_in -> outvars
+                operands = eqn.invars
+            elif len(sub.invars) == len(eqn.invars) - 1:
+                operands = eqn.invars[1:]   # cond/switch: drop the selector
+            else:
+                continue
+            inner = {
+                id(sv)
+                for sv, ev in zip(sub.invars, operands)
+                if not _is_literal(ev) and id(ev) in tainted
+            }
+            _census_walk(sub, inner, out)
+            # conservative: sub-jaxpr outvars already handled above via
+            # tainted_in -> outvars
     return
 
 

@@ -14,10 +14,15 @@ from typing import Any, Dict, Optional, Sequence
 
 from repro.analysis.descriptors import network_descriptors, reference_netplan
 from repro.analysis.passes import (
+    accum_pass,
+    bounds_pass,
     dtype_consistent_pairs,
     dtype_pass,
     elision_pass,
+    interior_metrics,
     kernel_metrics,
+    overflow_pass,
+    race_pass,
     structure_pass,
     traffic_pass,
     vmem_pass,
@@ -26,7 +31,24 @@ from repro.analysis.report import Finding, VerifyReport
 from repro.analysis.trace import trace_forward
 from repro.hw import V5E
 
-LEVELS = ("off", "plan", "full")
+LEVELS = ("off", "plan", "kernel", "full")
+
+#: The kernel-interior pass suite (the ``kernel`` rung's additions).
+KERNEL_PASSES = ("race", "bounds", "accum", "overflow")
+
+
+def _run_kernel_passes(report, pairs) -> None:
+    race_pass(report, pairs)
+    bounds_pass(report, pairs)
+    accum_pass(report, pairs)
+    overflow_pass(report, pairs)
+
+
+def _merged_metrics(pairs, budget):
+    rows = kernel_metrics(pairs, budget)
+    for row, extra in zip(rows, interior_metrics(pairs)):
+        row.update(extra)
+    return rows
 
 
 def verify_network(
@@ -37,8 +59,16 @@ def verify_network(
     vmem_budget: Optional[int] = None,
     name: Optional[str] = None,
 ) -> VerifyReport:
-    """Statically verify a NetworkPlan (and, at ``level='full'``, the traced
-    forward it compiles to).
+    """Statically verify a NetworkPlan (and, beyond ``level='plan'``, the
+    traced forward it compiles to).
+
+    The rungs, cheapest first: ``"plan"`` checks what the plan alone can
+    prove (layout decisions + modeled footprints under budget, no trace);
+    ``"kernel"`` traces the forward and proves the kernel-interior
+    properties (write-disjointness/race, block-window bounds, accumulator
+    hazards, int8 overflow certification) on every recovered pallas_call;
+    ``"full"`` runs everything — the plan-vs-trace byte passes (structure /
+    vmem / traffic / elision / dtype) *and* the kernel-interior suite.
 
     ``params`` must be the *prepared* parameter list
     (``prepare_net_params`` output: block-padded, int8-quantized, optionally
@@ -47,7 +77,7 @@ def verify_network(
     standard flags from the plan.  ``vmem_budget`` defaults to the v5e VMEM
     size, matching the planner's default.
     """
-    assert level in ("plan", "full"), level
+    assert level in ("plan", "kernel", "full"), level
     budget = vmem_budget if vmem_budget is not None else V5E.vmem_bytes
     reference = reference_netplan(netplan)
     descs = network_descriptors(netplan, reference)
@@ -81,7 +111,9 @@ def verify_network(
         return report
 
     if params is None:
-        raise ValueError("level='full' requires the prepared parameter list")
+        raise ValueError(
+            f"level={level!r} requires the prepared parameter list"
+        )
 
     import jax.numpy as jnp
 
@@ -107,29 +139,53 @@ def verify_network(
 
     closed, records = trace_forward(fwd, list(params), x)
 
-    report.passes_run = ("structure", "vmem", "traffic", "elision", "dtype")
     pairs = structure_pass(report, records, descs)
-    # Byte-level passes only run where the declared precision matches the
-    # compiled kernel — a dtype defect must surface as a dtype finding, not
-    # as cascading itemsize noise in the VMEM/traffic comparisons.
+    # Byte-level and kernel-interior passes only run where the declared
+    # precision matches the compiled kernel — a dtype defect must surface as
+    # a dtype finding, not as cascading noise in the other passes.
     byte_pairs = dtype_consistent_pairs(pairs)
+
+    if level == "kernel":
+        report.passes_run = ("structure",) + KERNEL_PASSES
+        _run_kernel_passes(report, byte_pairs)
+        report.kernels = _merged_metrics(byte_pairs, budget)
+        return report
+
+    report.passes_run = (
+        ("structure", "vmem", "traffic", "elision", "dtype") + KERNEL_PASSES
+    )
     vmem_pass(report, byte_pairs, budget)
     traffic_pass(report, byte_pairs)
     elision_pass(report, netplan, reference, closed)
     dtype_pass(report, pairs, netplan, closed)
-    report.kernels = kernel_metrics(byte_pairs, budget)
+    _run_kernel_passes(report, byte_pairs)
+    report.kernels = _merged_metrics(byte_pairs, budget)
     return report
 
 
-def verify_pipeline(netplan, pipeplan, name: Optional[str] = None):
+def verify_pipeline(
+    netplan,
+    pipeplan,
+    name: Optional[str] = None,
+    params: Optional[Sequence[Dict[str, Any]]] = None,
+    pretransformed: Optional[Sequence[bool]] = None,
+    level: str = "plan",
+):
     """Statically verify a stage partition against its NetworkPlan.
 
-    Plan-level only (no tracing): proves the stage bounds are a contiguous
-    cover, every cut lands on a legal boundary (trivial producer layout —
-    no elision chain crosses a chip edge — and no ``from_layers`` span
-    reaching back into an earlier stage), the recorded per-stage seconds
-    match the per-step ``predicted_s`` sums, and the microbatch count tiles
-    the batch.  Cheap enough to gate every pipeline-executor build.
+    At ``level="plan"`` (no tracing): proves the stage bounds are a
+    contiguous cover, every cut lands on a legal boundary (trivial producer
+    layout — no elision chain crosses a chip edge — and no ``from_layers``
+    span reaching back into an earlier stage), the recorded per-stage
+    seconds match the per-step ``predicted_s`` sums, and the microbatch
+    count tiles the batch.  Cheap enough to gate every pipeline-executor
+    build.
+
+    At ``level="kernel"`` (requires the prepared ``params``): additionally
+    traces every stage's ``run_network(start=, stop=)`` slice at microbatch
+    size — the exact bodies the GPipe switch dispatches — and runs the
+    kernel-interior passes (race / bounds / accum / overflow) over each
+    stage's recovered pallas_calls.
     """
     from repro.core.netplan import legal_cut_points, step_seconds
 
@@ -190,4 +246,62 @@ def verify_pipeline(netplan, pipeplan, name: Optional[str] = None):
             f"n_micro={pipeplan.n_micro} does not tile batch "
             f"{netplan.batch}"
         )
+
+    assert level in ("plan", "kernel"), level
+    if level == "kernel":
+        if params is None:
+            raise ValueError(
+                "level='kernel' requires the prepared parameter list"
+            )
+        if report.ok:
+            _verify_pipeline_kernels(
+                report, netplan, pipeplan, params, pretransformed
+            )
     return report
+
+
+def _verify_pipeline_kernels(
+    report, netplan, pipeplan, params, pretransformed
+) -> None:
+    """Trace every stage slice at microbatch size and run the
+    kernel-interior passes over each stage's pallas_calls."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.analysis.descriptors import step_descriptors
+    from repro.core.netplan import pretransform_flags, run_network
+
+    if pretransformed is None:
+        pretransformed = pretransform_flags(netplan, True)
+    flags = tuple(bool(f) for f in pretransformed)
+    mb = netplan.batch // pipeplan.n_micro
+    act_dtype = (
+        "float32" if netplan.dtype_name == "int8" else netplan.dtype_name
+    )
+    cur = jax.ShapeDtypeStruct(
+        (mb, *netplan.input_hw, netplan.in_channels), act_dtype
+    )
+    all_pairs = []
+    for a, z in pipeplan.stage_bounds:
+        stage_params = list(params[a:z])
+
+        def stage_fwd(p, xx, a=a, z=z):
+            return run_network(
+                netplan, p, xx, interpret=True, pretransformed=flags,
+                start=a, stop=z,
+            )
+
+        x = jnp.zeros(cur.shape, cur.dtype)
+        closed, records = trace_forward(stage_fwd, stage_params, x)
+        descs = [
+            d
+            for s in netplan.steps[a:z]
+            for d in step_descriptors(netplan, s, batch=mb)
+        ]
+        pairs = structure_pass(report, records, descs)
+        all_pairs.extend(dtype_consistent_pairs(pairs))
+        cur = jax.eval_shape(stage_fwd, stage_params, cur)
+    _run_kernel_passes(report, all_pairs)
+    report.kernels = _merged_metrics(all_pairs, V5E.vmem_bytes)
+    report.level = "kernel"
+    report.passes_run = ("pipeline", "structure") + KERNEL_PASSES

@@ -11,7 +11,8 @@
 
 See docs/api.md for the lifecycle and the migration table from the legacy
 entry points (``cnn_infer`` / ``plan_layers`` / the configs' plan helpers /
-direct ``CNNServingEngine`` construction — all now deprecation shims).
+direct ``CNNServingEngine`` construction — all removed after their
+one-release deprecation window; the facade is the only entry point).
 """
 from repro.api.compiled import (
     SAVE_FORMAT,

@@ -210,15 +210,36 @@ class CompiledCNN(CompiledModel):
             pipeplan = self.pipeline_plan(b)
             if self.options.validate != "off":
                 # The partition has its own static legality contract
-                # (verify_pipeline); the per-kernel passes still run
-                # through executor()/verify_report on the same NetworkPlan.
+                # (verify_pipeline).  At validate='kernel'/'full' the
+                # per-stage forwards are also traced at microbatch size and
+                # the kernel-interior passes run over every stage's
+                # pallas_calls — the prepared params come from an interpret
+                # NetworkExecutor, the same subject verify_report() uses.
                 from repro.analysis import (
                     PlanVerificationError,
                     verify_pipeline,
                 )
 
+                lvl = (
+                    "kernel" if self.options.validate in ("kernel", "full")
+                    else "plan"
+                )
+                kw = {}
+                if lvl == "kernel":
+                    from repro.core.netplan import NetworkExecutor
+
+                    ex = self._executors.get(b) or NetworkExecutor(
+                        self.network_plan(b), self.params, interpret=True,
+                        devices=self._devices,
+                        pretransform=self.options.pretransform,
+                        calibration=self.calibration,
+                    )
+                    kw = dict(
+                        params=ex.params, pretransformed=ex.pretransformed
+                    )
                 report = verify_pipeline(
-                    self.network_plan(b), pipeplan, name=self.model.name
+                    self.network_plan(b), pipeplan, name=self.model.name,
+                    level=lvl, **kw,
                 )
                 if not report.ok:
                     raise PlanVerificationError(report)
@@ -249,8 +270,10 @@ class CompiledCNN(CompiledModel):
         exact params and pretransform flags the jitted forward consumes —
         and returns the structured ``VerifyReport`` (findings + per-kernel
         footprint/traffic metrics).  ``level`` defaults to 'full' (trace
-        the forward); pass 'plan' for the trace-free subset.  Independent
-        of ``options.validate``: that option makes compilation *gate* on
+        the forward and run every pass); pass 'plan' for the trace-free
+        subset or 'kernel' for the kernel-interior proofs only (race /
+        bounds / accum / int8 overflow).  Independent of
+        ``options.validate``: that option makes compilation *gate* on
         this report, this method just produces it.
         """
         from repro.analysis import verify_network
@@ -279,7 +302,7 @@ class CompiledCNN(CompiledModel):
             )
         return verify_network(
             netplan, ex.params, pretransformed=ex.pretransformed,
-            level="full", vmem_budget=self.options.vmem_budget,
+            level=lvl, vmem_budget=self.options.vmem_budget,
             name=self.model.name,
         )
 
@@ -563,10 +586,9 @@ def load(
                 f"{path}: saved with in_channels={saved['in_channels']}, "
                 f"provided model has {m.in_channels}"
             )
-    elif data.get("kind") == "lm":
-        if getattr(m, "name", None) != saved.get("name"):
-            raise ValueError(
-                f"{path}: saved LM config {saved.get('name')!r} does not "
-                f"match the provided {getattr(m, 'name', None)!r}"
-            )
+    elif data.get("kind") == "lm" and getattr(m, "name", None) != saved.get("name"):
+        raise ValueError(
+            f"{path}: saved LM config {saved.get('name')!r} does not "
+            f"match the provided {getattr(m, 'name', None)!r}"
+        )
     return compile(m, params, opts, planner=planner, devices=devices)

@@ -49,7 +49,7 @@ class CNNModel:
         if len(self.input_hw) != 2:
             raise ValueError(f"input_hw must be (H, W), got {self.input_hw!r}")
 
-    def with_input_hw(self, hw: Tuple[int, int]) -> "CNNModel":
+    def with_input_hw(self, hw: Tuple[int, int]) -> CNNModel:
         return dataclasses.replace(self, input_hw=tuple(hw))
 
     def init_params(self, rng, dtype: Any = None):

@@ -19,7 +19,7 @@ from repro.core.planner import DEFAULT_CACHE_PATH, _dtype_name
 _IMPLS = ("jax", "pallas")
 _MODES = ("cost", "measure")
 _DTYPES = ("float32", "bfloat16", "float16", "int8")
-_VALIDATE = ("off", "plan", "full")
+_VALIDATE = ("off", "plan", "kernel", "full")
 _FALLBACK = ("ladder", "off")
 
 
@@ -73,9 +73,14 @@ class ExecutionOptions:
                       each int8 layer's entry.
       validate        compile-time plan verification (repro.analysis):
                       'off' (default), 'plan' (layout decisions + modeled
-                      VMEM footprints under budget, no tracing), or 'full'
-                      (trace the jitted forward and run the structure /
-                      VMEM / traffic / elision / dtype passes).  Any error
+                      VMEM footprints under budget, no tracing), 'kernel'
+                      (trace the forward and prove the kernel-interior
+                      properties of every pallas_call — write-disjoint
+                      output index maps, block windows inside operand
+                      bounds, accumulator init/flush guards, int8 overflow
+                      certification), or 'full' (everything: the plan
+                      byte passes — structure / VMEM / traffic / elision /
+                      dtype — plus the kernel-interior suite).  Any error
                       finding raises ``PlanVerificationError`` before the
                       executor can run.
 
@@ -160,12 +165,13 @@ class ExecutionOptions:
                 f"pipeline_stages must be 0 (off) or >= 2, got "
                 f"{self.pipeline_stages}"
             )
-        if self.microbatch != "auto":
-            if not isinstance(self.microbatch, int) or self.microbatch < 1:
-                raise ValueError(
-                    f"microbatch must be 'auto' or a positive int, got "
-                    f"{self.microbatch!r}"
-                )
+        if self.microbatch != "auto" and (
+            not isinstance(self.microbatch, int) or self.microbatch < 1
+        ):
+            raise ValueError(
+                f"microbatch must be 'auto' or a positive int, got "
+                f"{self.microbatch!r}"
+            )
         if self.default_deadline_s is not None and self.default_deadline_s <= 0:
             raise ValueError(
                 f"default_deadline_s must be None or > 0, got "
@@ -183,7 +189,7 @@ class ExecutionOptions:
         """
         return "float32" if self.dtype == "int8" else self.dtype
 
-    def replace(self, **changes: Any) -> "ExecutionOptions":
+    def replace(self, **changes: Any) -> ExecutionOptions:
         return dataclasses.replace(self, **changes)
 
     # -- persistence (CompiledModel.save()/load() ride this) -----------------
@@ -194,7 +200,7 @@ class ExecutionOptions:
         return d
 
     @classmethod
-    def from_json(cls, d: Dict[str, Any]) -> "ExecutionOptions":
+    def from_json(cls, d: Dict[str, Any]) -> ExecutionOptions:
         known = {f.name for f in dataclasses.fields(cls)}
         kwargs = {k: v for k, v in d.items() if k in known}
         if "buckets" in kwargs:

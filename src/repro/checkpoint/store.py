@@ -10,6 +10,7 @@ verifies the manifest before loading — a torn write can never be loaded.
 """
 from __future__ import annotations
 
+import contextlib
 import json
 import os
 import shutil
@@ -113,20 +114,19 @@ class CheckpointStore:
     def all_steps(self):
         out = []
         for name in os.listdir(self.dir):
-            if name.startswith("step_"):
-                if os.path.exists(os.path.join(self.dir, name, MANIFEST)):
-                    out.append(int(name.split("_", 1)[1]))
+            if name.startswith("step_") and os.path.exists(
+                os.path.join(self.dir, name, MANIFEST)
+            ):
+                out.append(int(name.split("_", 1)[1]))
         return sorted(out)
 
     def latest_step(self) -> Optional[int]:
         path = os.path.join(self.dir, "LATEST")
         if os.path.exists(path):
-            try:
+            with contextlib.suppress(ValueError):
                 step = int(open(path).read().strip())
                 if os.path.exists(os.path.join(self.dir, f"step_{step}", MANIFEST)):
                     return step
-            except ValueError:
-                pass
         steps = self.all_steps()
         return steps[-1] if steps else None
 

@@ -28,31 +28,3 @@ NAME = "vgg16"
 from repro.api.model import CNNModel as _CNNModel  # noqa: E402
 
 MODEL = _CNNModel(LAYERS, INPUT_HW, in_channels=3, name=NAME)
-
-
-def plan_network(planner, input_hw=INPUT_HW, batch=1, in_channels=3,
-                 dtype="float32"):
-    """Deprecated shim: compile the network through the facade instead
-    (``repro.compile(vgg16.MODEL, params, options)``); per-layer plans are
-    in ``.network_plan().steps``.  Delegates unchanged for one release."""
-    from repro._deprecation import warn_once
-    from repro.models.cnn import _plan_layers
-
-    warn_once("configs.vgg16.plan_network",
-              "repro.compile(vgg16.MODEL, params, options)")
-    return _plan_layers(LAYERS, *input_hw, planner, in_channels=in_channels,
-                        batch=batch, dtype=dtype)
-
-
-def network_plan(planner, input_hw=INPUT_HW, batch=1, in_channels=3,
-                 dtype="float32"):
-    """Deprecated shim: ``repro.compile(vgg16.MODEL, params, options)``
-    resolves the same NetworkPlan (``.network_plan()``).  Delegates
-    unchanged for one release."""
-    from repro._deprecation import warn_once
-    from repro.core.netplan import plan_network as _plan_network
-
-    warn_once("configs.vgg16.network_plan",
-              "repro.compile(vgg16.MODEL, params, options).network_plan()")
-    return _plan_network(LAYERS, *input_hw, planner, in_channels=in_channels,
-                         batch=batch, dtype=dtype)

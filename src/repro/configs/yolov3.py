@@ -75,35 +75,6 @@ TINY_MODEL = _CNNModel(TINY_LAYERS, TINY_INPUT_HW, in_channels=3,
                        name="yolov3-tiny")
 
 
-def plan_network(planner, layers=LAYERS_20, input_hw=INPUT_HW, batch=1,
-                 in_channels=3, dtype="float32"):
-    """Deprecated shim: compile through the facade instead
-    (``repro.compile(yolov3.MODEL_20 | yolov3.TINY_MODEL, params,
-    options)``); per-layer plans are in ``.network_plan().steps``.
-    Delegates unchanged for one release."""
-    from repro._deprecation import warn_once
-    from repro.models.cnn import _plan_layers
-
-    warn_once("configs.yolov3.plan_network",
-              "repro.compile(yolov3.MODEL_20 / yolov3.TINY_MODEL, params, "
-              "options)")
-    return _plan_layers(layers, *input_hw, planner, in_channels=in_channels,
-                        batch=batch, dtype=dtype)
-
-
-def network_plan(planner, layers=LAYERS_20, input_hw=INPUT_HW, batch=1,
-                 in_channels=3, dtype="float32"):
-    """Deprecated shim: ``repro.compile(...)`` resolves the same NetworkPlan
-    (``.network_plan()``).  Delegates unchanged for one release."""
-    from repro._deprecation import warn_once
-    from repro.core.netplan import plan_network as _plan_network
-
-    warn_once("configs.yolov3.network_plan",
-              "repro.compile(yolov3.MODEL_20 / yolov3.TINY_MODEL, params, "
-              "options).network_plan()")
-    return _plan_network(layers, *input_hw, planner, in_channels=in_channels,
-                         batch=batch, dtype=dtype)
-
 # Paper Table IV: the 14 discrete YOLOv3 conv-layer GEMMs (M, N, K) with the
 # paper's measured AI and % of A64FX single-core peak.
 TABLE_IV = (

@@ -90,7 +90,7 @@ class Layout:
         return [self.c, self.pad_c]
 
     @classmethod
-    def from_json(cls, d: Sequence[int]) -> "Layout":
+    def from_json(cls, d: Sequence[int]) -> Layout:
         return cls(int(d[0]), int(d[1]))
 
 
@@ -569,7 +569,7 @@ class PipelinePlan:
         }
 
     @classmethod
-    def from_json(cls, d: Dict[str, Any]) -> "PipelinePlan":
+    def from_json(cls, d: Dict[str, Any]) -> PipelinePlan:
         return cls(
             stage_bounds=tuple(
                 (int(b[0]), int(b[1])) for b in d["stage_bounds"]

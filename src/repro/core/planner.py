@@ -30,6 +30,7 @@ resolves whole networks ahead of time (see benchmarks/e2e_cnn.py).
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import json
 import os
@@ -243,7 +244,7 @@ class ConvPlan:
         }
 
     @classmethod
-    def from_json(cls, d: Dict[str, Any]) -> "ConvPlan":
+    def from_json(cls, d: Dict[str, Any]) -> ConvPlan:
         return cls(
             algorithm=ConvAlgorithm(d["algorithm"]),
             impl=d["impl"],
@@ -428,20 +429,19 @@ class Planner:
             return
         d = os.path.dirname(self.cache_path) or "."
         os.makedirs(d, exist_ok=True)
-        lock = open(self.cache_path + ".lock", "w")
+        lock = open(self.cache_path + ".lock", "w")  # noqa: SIM115  (closed in finally)
         try:
-            try:
+            with contextlib.suppress(ImportError):
+                # non-POSIX: best-effort, merge still helps
                 import fcntl
 
                 fcntl.flock(lock, fcntl.LOCK_EX)
-            except ImportError:  # non-POSIX: best-effort, merge still helps
-                pass
             plans: Dict[str, Any] = {}
             networks: Dict[str, Any] = {}
             pipelines: Dict[str, Any] = {}
             if os.path.exists(self.cache_path):
                 disk: Dict[str, Any] = {}
-                try:
+                with contextlib.suppress(OSError):
                     with open(self.cache_path, errors="replace") as f:
                         disk_text = f.read()
                     try:
@@ -456,8 +456,6 @@ class Planner:
                         # the merge keeps every entry that still parses
                         # instead of silently discarding the disk state.
                         disk = _quarantine_cache(self.cache_path, disk_text)
-                except OSError:
-                    pass
                 if disk.get("version") == PLAN_CACHE_VERSION:
                     p = disk.get("plans", {})
                     nw = disk.get("networks", {})

@@ -8,6 +8,7 @@ instance of the same state machine.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import json
 import os
@@ -44,10 +45,8 @@ class FailureDetector:
         beats = {}
         for r in range(self.world_size):
             path = os.path.join(self.dir, f"rank_{r}.json")
-            try:
+            with contextlib.suppress(FileNotFoundError, json.JSONDecodeError):
                 beats[r] = json.load(open(path))
-            except (FileNotFoundError, json.JSONDecodeError):
-                pass
         return beats
 
     def dead_ranks(self, now: Optional[float] = None) -> List[int]:

@@ -196,7 +196,7 @@ def _pack_stage_params(
     for dt in dtypes:
         pmax = max(sz.get(dt, 0) for sz in sizes)
         rows = []
-        for sp, sz in zip(per_stage, sizes):
+        for sp, _sz in zip(per_stage, sizes):
             leaves, _ = jax.tree_util.tree_flatten(list(sp))
             flat = [
                 jnp.asarray(leaf).reshape(-1)

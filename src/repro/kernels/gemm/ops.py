@@ -177,4 +177,11 @@ def gemm_call_descriptor(
         ),
         "traffic_bytes": traffic,
         "vmem_one_sided": False,
+        # Kernel-interior contract (the verifier's `kernel` rung): the
+        # 6-loop variant reduces over the K grid axis into VMEM scratch;
+        # the 3-loop variant streams the full K panel (no reduction axis).
+        # ``k_elems`` is the reduction depth the int8 overflow pass
+        # certifies against the traced operand shapes.
+        "reduction_axes": () if variant == "3loop" else (2,),
+        "k_elems": kp,
     }

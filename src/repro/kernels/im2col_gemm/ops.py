@@ -228,4 +228,10 @@ def im2col_call_descriptor(
         ),
         "traffic_bytes": traffic,
         "vmem_one_sided": False,
+        # Kernel-interior contract: the in-channel grid axis (innermost) is
+        # the K reduction, accumulated in VMEM scratch; the full reduction
+        # depth spans every tap of every padded in-channel — the quantity
+        # the int8 overflow pass certifies.
+        "reduction_axes": (3,),
+        "k_elems": spec.kh * spec.kw * cp,
     }

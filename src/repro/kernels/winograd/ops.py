@@ -225,6 +225,11 @@ def winograd_call_descriptors(
             "model_vmem_bytes": model,
             "traffic_bytes": traffic,
             "vmem_one_sided": False,
+            # Kernel-interior contract: the Cin grid axis (innermost) is the
+            # reduction, accumulated in the (8, 8, bt, bo) fp32 M scratch.
+            # Winograd never runs int8 (quantization policy), so no k_elems.
+            "reduction_axes": (2,),
+            "k_elems": None,
         }]
     input_tf = {
         "family": "winograd",
@@ -233,6 +238,8 @@ def winograd_call_descriptors(
         "model_vmem_bytes": model,
         "traffic_bytes": dtype_bytes * (2 * nt * nc * 64 * bt * bc + 64),
         "vmem_one_sided": True,
+        "reduction_axes": (),
+        "k_elems": None,
     }
     tuple_mul = {
         "family": "winograd",
@@ -242,6 +249,10 @@ def winograd_call_descriptors(
         "traffic_bytes": dtype_bytes * 64 * nt * no * nc * bc * (bt + bo)
         + dtype_bytes * 64 * nt * no * bt * bo,
         "vmem_one_sided": True,
+        # The per-position GEMM reduces over the in-channel grid axis
+        # (innermost) into the (bt, bo) fp32 scratch.
+        "reduction_axes": (3,),
+        "k_elems": None,
     }
     output_tf = {
         "family": "winograd",
@@ -255,5 +266,7 @@ def winograd_call_descriptors(
         + (ACC_BYTES * nt * no * bo if bias else 0)
         + dtype_bytes * 48,
         "vmem_one_sided": True,
+        "reduction_axes": (),
+        "k_elems": None,
     }
     return [input_tf, tuple_mul, output_tf]

@@ -15,7 +15,6 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro._deprecation import warn_once
 from repro.core.conv_spec import ConvSpec, Epilogue, apply_activation
 from repro.core.conv2d import conv2d
 from repro.models.layers import normal_init
@@ -94,7 +93,7 @@ def fold_batchnorm(params: Sequence[Dict], layers: Sequence[CNNLayer],
     conv + bias (+ activation) — the precondition for fusing the whole
     epilogue into the conv kernel's output stage.  Layers without bn pass
     through unchanged; the returned params drop the ``bn`` dict in favor of
-    a plain ``b`` bias and plug into ``cnn_forward`` /  ``cnn_infer``.
+    a plain ``b`` bias and plug into ``cnn_forward`` / ``_cnn_infer``.
     """
     folded: List[Dict] = []
     for p, l in zip(params, layers):
@@ -146,33 +145,6 @@ def init_cnn(rng, layers: Sequence[CNNLayer], in_channels: int = 3,
         params.append(p)
         ch.append(cur)
     return params
-
-
-def plan_layers(
-    layers: Sequence[CNNLayer],
-    h: int,
-    w: int,
-    planner,
-    in_channels: int = 3,
-    batch: int = 1,
-    dtype="float32",
-) -> List[Optional[object]]:
-    """Deprecated shim: per-layer plans are a facade by-product now.
-
-    ``repro.compile(model, params, options)`` plans the whole network (and
-    exposes the per-layer plans via ``.network_plan().steps`` /
-    ``.plan_report()``); this standalone walker stays one release for
-    callers of ``cnn_forward(plans=...)``.
-    """
-    warn_once(
-        "models.cnn.plan_layers",
-        "repro.compile(model, params, options) (plans are in "
-        ".network_plan().steps / .plan_report())",
-    )
-    return _plan_layers(
-        layers, h, w, planner, in_channels=in_channels, batch=batch,
-        dtype=dtype,
-    )
 
 
 def _plan_layers(
@@ -290,33 +262,6 @@ def cnn_forward(
             cur = activate_array(cur @ p["w"] + p["b"], l.activation)
         outputs.append(cur)
     return cur
-
-
-def cnn_infer(
-    params,
-    layers: Tuple[CNNLayer, ...],
-    x: jnp.ndarray,
-    impl: str = "jax",
-    interpret: Optional[bool] = None,
-    plans: Optional[Tuple[Optional[object], ...]] = None,
-    fuse_epilogue: bool = True,
-    fold_bn: bool = True,
-) -> jnp.ndarray:
-    """Deprecated shim: the deployment entry point is the api facade now.
-
-    ``repro.compile(model, params, options).run(x)`` runs the same
-    plan→prepare→jit pipeline (and additionally prepares params offline and
-    shards the batch).  This shim delegates unchanged — identical outputs —
-    and fires one DeprecationWarning per process.
-    """
-    warn_once(
-        "models.cnn.cnn_infer",
-        "repro.compile(model, params, options).run(x)",
-    )
-    return _cnn_infer(
-        params, layers, x, impl=impl, interpret=interpret, plans=plans,
-        fuse_epilogue=fuse_epilogue, fold_bn=fold_bn,
-    )
 
 
 @functools.partial(

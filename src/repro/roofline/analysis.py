@@ -19,6 +19,7 @@ Notes on sources (see EXPERIMENTS.md §Roofline):
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import re
 from typing import Dict, List, Optional
@@ -112,7 +113,7 @@ class CellStats:
     temp_bytes: float = 0.0
     out_bytes: float = 0.0
 
-    def __add__(self, other: "CellStats") -> "CellStats":
+    def __add__(self, other: CellStats) -> CellStats:
         counts = dict(self.collective_counts or {})
         for k, v in (other.collective_counts or {}).items():
             counts[k] = counts.get(k, 0) + v
@@ -126,7 +127,7 @@ class CellStats:
             max(self.out_bytes, other.out_bytes),
         )
 
-    def scale(self, k: float) -> "CellStats":
+    def scale(self, k: float) -> CellStats:
         return CellStats(
             self.flops_per_device * k,
             self.bytes_per_device * k,
@@ -150,13 +151,11 @@ def extract_stats(compiled) -> CellStats:
         collective_wire_bytes=wire,
         collective_counts=counts,
     )
-    try:
+    with contextlib.suppress(Exception):
         mem = compiled.memory_analysis()
         stats.arg_bytes = float(mem.argument_size_in_bytes)
         stats.temp_bytes = float(mem.temp_size_in_bytes)
         stats.out_bytes = float(mem.output_size_in_bytes)
-    except Exception:
-        pass
     return stats
 
 

@@ -94,25 +94,13 @@ class CNNServingEngine(ResilientEngine):
             raise ValueError(f"buckets must be positive, got {buckets!r}")
         buckets = tuple(sorted({int(b) for b in buckets}))
         if _compiled is None:
-            # Legacy direct construction: compile on the caller's behalf.
-            from repro._deprecation import warn_once
-            from repro.api import CNNModel, ExecutionOptions
-            from repro.api import compile as api_compile
-            from repro.core.planner import _dtype_name
-
-            warn_once(
-                "serving.CNNServingEngine(layers, params, ...)",
-                "repro.compile(model, params, options).serve()",
+            # Direct construction was a deprecated shim for one release
+            # (PR 5) and is gone: the engine always consumes a compilation.
+            raise TypeError(
+                "CNNServingEngine is constructed from a compilation: use "
+                "repro.compile(model, params, options).serve() or "
+                "CNNServingEngine.from_compiled(compiled)"
             )
-            model = CNNModel(tuple(layers), tuple(input_hw),
-                             in_channels=in_channels, name="cnn-serving")
-            options = ExecutionOptions(
-                impl=impl, mode=mode, cache_path=cache_path,
-                interpret=interpret, dtype=_dtype_name(dtype),
-                batch=buckets[0], buckets=buckets,
-            )
-            _compiled = api_compile(model, params, options, planner=planner,
-                                    devices=devices)
         self.compiled = _compiled
         self.planner = _compiled.planner
         self.layers = _compiled.model.layers
@@ -164,7 +152,7 @@ class CNNServingEngine(ResilientEngine):
 
     @classmethod
     def from_compiled(cls, compiled, buckets: Optional[Sequence[int]] = None,
-                      **kw) -> "CNNServingEngine":
+                      **kw) -> CNNServingEngine:
         """The facade path (``CompiledModel.serve()``): consume an existing
         compilation — its planner, cache, options, and device mesh.
         Resilience test hooks (``clock=``, ``faults=``, ``probe_after=``)

@@ -51,7 +51,7 @@ class Request:
 class ServingEngine(ResilientEngine):
     @classmethod
     def from_compiled(cls, compiled, batch_size: Optional[int] = None,
-                      capacity: int = 256, **kw) -> "ServingEngine":
+                      capacity: int = 256, **kw) -> ServingEngine:
         """Consume a facade compilation (``repro.compile(cfg, params,
         options).serve()`` routes here): model config, params, the default
         batch (the largest option bucket), and the resilience policy

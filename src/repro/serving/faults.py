@@ -114,7 +114,7 @@ class FaultPlan:
         kinds: Sequence[str] = ("exception", "nan", "inf", "latency"),
         buckets: Sequence[Any] = (None,),
         rung: Optional[str] = "primary",
-    ) -> "FaultPlan":
+    ) -> FaultPlan:
         """A reproducible random plan: same seed → same fault script.
 
         Faults land only on the named ``rung`` (default the fast path) so a

@@ -67,7 +67,8 @@ def train(
         donate_argnums=(0, 1) if donate else (),
     )
 
-    metrics_log = open(os.path.join(run.out_dir, "metrics.jsonl"), "a")
+    metrics_log = open(  # noqa: SIM115  (long-lived handle, closed at loop exit)
+        os.path.join(run.out_dir, "metrics.jsonl"), "a")
     last: Dict[str, float] = {}
     for step in range(start_step, run.steps):
         t0 = time.monotonic()

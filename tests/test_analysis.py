@@ -119,15 +119,44 @@ def _algo(step):
 @pytest.mark.parametrize("dtype", ["float32", "int8"])
 def test_clean_plan_zero_findings(model, dtype):
     """Acceptance: full-level verification of a cleanly planned network is
-    green — all five passes run, no findings, per-kernel metrics present."""
+    green — the five byte passes plus the four kernel-interior passes all
+    run, no findings, per-kernel metrics present."""
     report = _verify(_plan(model, dtype=dtype))
     assert report.ok and not report.findings, report.findings
     assert set(report.passes_run) == {
-        "structure", "vmem", "traffic", "elision", "dtype"
+        "structure", "vmem", "traffic", "elision", "dtype",
+        "race", "bounds", "accum", "overflow",
     }
     assert report.kernels
     for row in report.kernels:
         assert row["vmem_bytes"] <= row["vmem_budget"]
+
+
+@pytest.mark.parametrize("model", list(CASES))
+@pytest.mark.parametrize("dtype", ["float32", "int8"])
+def test_clean_plan_kernel_level_zero_findings(model, dtype):
+    """The kernel rung alone (structure + race/bounds/accum/overflow) also
+    certifies the zoo clean, and its metric rows carry the interior facts
+    (recovered reduction axes, Mosaic schedule, corner count; the int8
+    accumulator bound on q8 kernels)."""
+    layers = tuple(_layers(model))
+    netplan = _plan(model, dtype=dtype)
+    params = init_cnn(jax.random.PRNGKey(0), layers)
+    prepared = prepare_net_params(netplan, params, pretransform=True)
+    report = verify_network(netplan, prepared, level="kernel")
+    assert report.ok and not report.findings, report.findings
+    assert set(report.passes_run) == {
+        "structure", "race", "bounds", "accum", "overflow"
+    }
+    for row in report.kernels:
+        assert "reduction_axes" in row and "bounds_points_checked" in row
+        assert row["dimension_semantics"] is not None
+    if dtype == "int8":
+        q8 = [r for r in report.kernels if "_q8" in r["kernel"]]
+        assert q8 and all(
+            0 < r["acc_bound"] <= 2**31 - 1 and r["acc_headroom"] >= 1.0
+            for r in q8
+        )
 
 
 def test_plan_level_zero_findings():
@@ -235,6 +264,213 @@ def test_bogus_layout_flags_traffic_only(model):
 
 
 # ---------------------------------------------------------------------------
+# Kernel-interior mutation coverage: each injected kernel defect is caught
+# by exactly one of the four interior passes (race / bounds / accum /
+# overflow), so a red report names the defect class.
+
+
+def _interior_report(pairs):
+    from repro.analysis.passes import (
+        accum_pass,
+        bounds_pass,
+        overflow_pass,
+        race_pass,
+    )
+    from repro.analysis.report import VerifyReport
+
+    report = VerifyReport(
+        level="kernel", passes_run=("race", "bounds", "accum", "overflow")
+    )
+    race_pass(report, pairs)
+    bounds_pass(report, pairs)
+    accum_pass(report, pairs)
+    overflow_pass(report, pairs)
+    return report
+
+
+def _records(fn, *args):
+    from repro.analysis import pallas_calls
+
+    recs = pallas_calls(jax.make_jaxpr(fn)(*args))
+    assert recs, "no pallas_call recovered from the trace"
+    return recs
+
+
+def test_noninjective_index_map_flags_race_only():
+    """Two grid programs mapped to the same output block: (i, j) -> (i+j,)
+    collides at (0,1)/(1,0).  The race pass produces the concrete witness;
+    bounds stays green (the map's range fits the operand), accum/overflow
+    have nothing to say (no scratch, no q8)."""
+    from jax.experimental import pallas as pl
+
+    def kernel(x_ref, o_ref):
+        o_ref[...] = x_ref[...] * 2.0
+
+    def fn(x):
+        return pl.pallas_call(
+            kernel,
+            grid=(2, 2),
+            in_specs=[pl.BlockSpec((8, 128), lambda i, j: (i + j, j))],
+            out_specs=pl.BlockSpec((8, 128), lambda i, j: (i + j, 0)),
+            out_shape=jax.ShapeDtypeStruct((24, 128), jnp.float32),
+            interpret=True,
+        )(x)
+
+    (rec,) = _records(fn, jnp.ones((24, 256), jnp.float32))
+    report = _interior_report([(rec, {"step": 0, "reduction_axes": ()})])
+    _only_pass(report, "race")
+    assert any("not injective" in f.message for f in report.by_pass("race"))
+
+
+def test_oob_block_window_flags_bounds_only():
+    """An index map shifted by one block ((i, j) -> (i+1, j)) drives the
+    last grid row's window past the operand extent.  Bounds flags it with
+    the offending corner; the shifted map is still injective, so race stays
+    green."""
+    from jax.experimental import pallas as pl
+
+    def kernel(x_ref, o_ref):
+        o_ref[...] = x_ref[...] * 2.0
+
+    def fn(x):
+        return pl.pallas_call(
+            kernel,
+            grid=(2, 2),
+            in_specs=[pl.BlockSpec((8, 128), lambda i, j: (i, j))],
+            out_specs=pl.BlockSpec((8, 128), lambda i, j: (i + 1, j)),
+            out_shape=jax.ShapeDtypeStruct((16, 256), jnp.float32),
+            interpret=True,
+        )(x)
+
+    (rec,) = _records(fn, jnp.ones((16, 256), jnp.float32))
+    report = _interior_report([(rec, {"step": 0, "reduction_axes": ()})])
+    _only_pass(report, "bounds")
+    f = report.by_pass("bounds")[0]
+    assert "escapes" in f.message and f.actual > f.expected
+
+
+def test_flipped_init_guard_flags_accum_only():
+    """An accumulator initialized under the *last*-step guard instead of the
+    first: every earlier reduction step reads stale VMEM.  The accum pass
+    pins the flipped predicate; the flush guard is still correct, so the
+    race pass (which owns the flush obligation) stays green."""
+    from jax.experimental import pallas as pl
+
+    def kernel(a_ref, b_ref, o_ref, acc_ref):
+        @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
+        def _init():                                    # wrong step!
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+
+        acc_ref[...] += a_ref[...] @ b_ref[...]
+
+        @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
+        def _flush():
+            o_ref[...] = acc_ref[...]
+
+    def fn(a, b):
+        from jax.experimental.pallas import tpu as pltpu
+
+        return pl.pallas_call(
+            kernel,
+            grid=(1, 1, 2),
+            in_specs=[
+                pl.BlockSpec((8, 128), lambda i, j, k: (i, k)),
+                pl.BlockSpec((128, 128), lambda i, j, k: (k, j)),
+            ],
+            out_specs=pl.BlockSpec((8, 128), lambda i, j, k: (i, j)),
+            out_shape=jax.ShapeDtypeStruct((8, 128), jnp.float32),
+            scratch_shapes=[pltpu.VMEM((8, 128), jnp.float32)],
+            interpret=True,
+        )(a, b)
+
+    (rec,) = _records(
+        fn, jnp.ones((8, 256), jnp.float32), jnp.ones((256, 128), jnp.float32)
+    )
+    report = _interior_report([(rec, {"step": 0, "reduction_axes": (2,)})])
+    _only_pass(report, "accum")
+    assert any(
+        "initializing write is guarded on step 1" in f.message
+        for f in report.by_pass("accum")
+    )
+
+
+def test_overflow_shape_flags_overflow_only():
+    """A q8 GEMM deep enough that K*127^2 exceeds int32: the real kernel
+    (structurally sound — race/bounds/accum all green) is rejected purely
+    by the interval certificate.  K = 133248 > floor((2^31-1)/127^2)."""
+    from repro.kernels.gemm.ops import gemm_call_descriptor, matmul_padded_call
+
+    kp = 133248                                     # 1041 K-blocks of 128
+    block = (8, 128, 128)
+
+    def fn(a, b, scale):
+        return matmul_padded_call(
+            a, b, block, variant="6loop", interpret=True, scale_p=scale,
+        )
+
+    (rec,) = _records(
+        fn,
+        jnp.ones((8, kp), jnp.int8),
+        jnp.ones((kp, 128), jnp.int8),
+        jnp.ones((1, 128), jnp.float32),
+    )
+    desc = gemm_call_descriptor(8, 128, kp, block, dtype_bytes=1, scale=True)
+    desc["step"] = 0
+    report = _interior_report([(rec, desc)])
+    _only_pass(report, "overflow")
+    f = report.by_pass("overflow")[0]
+    assert f.actual == kp * 127 * 127 and f.actual > f.expected
+
+
+def test_declared_k_drift_flags_overflow():
+    """The descriptor's declared reduction depth must match the traced
+    operand shapes — plan/trace drift is an overflow-pass error even when
+    both depths are individually safe."""
+    from repro.kernels.gemm.ops import gemm_call_descriptor, matmul_padded_call
+
+    def fn(a, b, scale):
+        return matmul_padded_call(
+            a, b, (8, 128, 128), variant="6loop", interpret=True,
+            scale_p=scale,
+        )
+
+    (rec,) = _records(
+        fn,
+        jnp.ones((8, 256), jnp.int8),
+        jnp.ones((256, 128), jnp.int8),
+        jnp.ones((1, 128), jnp.float32),
+    )
+    desc = gemm_call_descriptor(8, 128, 512, (8, 128, 128), dtype_bytes=1,
+                                scale=True)        # lies: traced K is 256
+    desc["step"] = 0
+    report = _interior_report([(rec, desc)])
+    _only_pass(report, "overflow")
+    assert report.by_pass("overflow")[0].expected == 512
+
+
+def test_three_pass_winograd_kernels_analyze_clean():
+    """The non-fused Winograd path (input transform / tuple multiply /
+    output transform) — three pallas_calls the zoo's planner rarely picks —
+    still certifies clean under all four interior passes."""
+    from repro.core.conv_spec import ConvSpec
+    from repro.kernels.winograd.ops import conv2d_winograd_pallas
+
+    spec = ConvSpec(64, 64)
+    recs = _records(
+        lambda x, w, b: conv2d_winograd_pallas(
+            x, w, spec, fused=False, interpret=True, bias=b
+        ),
+        jnp.zeros((1, 32, 32, 64), jnp.float32),
+        jnp.zeros((3, 3, 64, 64), jnp.float32),
+        jnp.zeros((64,), jnp.float32),
+    )
+    assert len(recs) == 3
+    pairs = [(r, {"step": i}) for i, r in enumerate(recs)]
+    report = _interior_report(pairs)
+    assert report.clean, report.findings
+
+
+# ---------------------------------------------------------------------------
 # Boundary walker recursion (the promoted tests/test_netplan.py walker)
 
 
@@ -263,6 +499,62 @@ def test_boundary_walker_descends_into_cond_branches():
 
     ops = boundary_ops(fn, jnp.ones((4, 4)))
     assert "pad" in ops
+
+
+def test_channel_census_descends_switch_branches():
+    """Regression (PR-7 gap): the channel-boundary census skipped cond_p
+    sub-jaxprs because their invars omit the branch selector, so a pad on
+    the tainted activation *inside* a ``lax.switch`` branch — exactly how
+    PR-9 pipeline stage bodies appear in the traced jaxpr — was invisible
+    to full-level verification."""
+    from repro.analysis import channel_boundary_ops
+
+    def fn(idx, x):
+        return jax.lax.switch(
+            idx,
+            [
+                lambda v: jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, 8))),
+                lambda v: jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, 8))) * 2.0,
+            ],
+            x,
+        )
+
+    jaxpr = jax.make_jaxpr(fn)(0, jnp.ones((1, 4, 4, 8)))
+    ops = channel_boundary_ops(jaxpr, taint_invar=-1)
+    assert ops and all(op.kind == "pad" for op in ops), ops
+
+
+def test_verify_pipeline_kernel_level():
+    """verify_pipeline's kernel rung traces every stage slice at microbatch
+    size and runs the interior passes over each stage's pallas_calls —
+    requiring prepared params, and covering all plan steps exactly once."""
+    from repro.analysis import verify_pipeline
+    from repro.core.netplan import NetworkExecutor, plan_pipeline
+
+    netplan = _plan("vgg16", batch=4)
+    planner = Planner(impl="pallas", cache_path=None)
+    pipeplan = plan_pipeline(
+        _layers("vgg16"), *CASES["vgg16"]["hw"], planner, 2,
+        in_channels=3, batch=4, netplan=netplan,
+    )
+    with pytest.raises(ValueError, match="parameter"):
+        verify_pipeline(netplan, pipeplan, level="kernel")
+    ex = NetworkExecutor(netplan, init_cnn(
+        jax.random.PRNGKey(0), tuple(_layers("vgg16"))
+    ), interpret=True, pretransform=True)
+    report = verify_pipeline(
+        netplan, pipeplan, name="vgg16", params=ex.params,
+        pretransformed=ex.pretransformed, level="kernel",
+    )
+    assert report.ok and not report.findings, report.findings
+    assert set(report.passes_run) == {
+        "pipeline", "structure", "race", "bounds", "accum", "overflow"
+    }
+    planned = {
+        s.index for s in netplan.steps
+        if s.layer.kind == "conv" and s.plan is not None
+    }
+    assert {row["step"] for row in report.kernels} == planned
 
 
 # ---------------------------------------------------------------------------

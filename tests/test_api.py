@@ -1,14 +1,16 @@
 """The `repro.api` facade: compile() -> CompiledModel acceptance surface.
 
-Pins the PR-5 contract:
+Pins the PR-5 contract (and, post-deprecation, its PR-10 tightening):
   - ``repro.compile(model, params, options).run(x)`` is the single entry
-    point and reproduces ``cnn_infer``'s outputs **bit-exactly** (and the
-    XLA oracle within fp32 tolerance) for VGG-16 / YOLOv3-tiny;
+    point and reproduces the pre-facade jitted path (``_cnn_infer``)
+    **bit-exactly** (and the XLA oracle within fp32 tolerance) for
+    VGG-16 / YOLOv3-tiny;
   - ``ExecutionOptions`` round-trips through ``save()``/``load()`` with
     zero re-tunes (the v4 plan cache carries the tuning);
   - ``.serve()`` rides the bucket ladder without re-plumbing planner/cache;
-  - every deprecation shim fires exactly one DeprecationWarning and returns
-    output identical to the facade path;
+  - the PR-5 deprecation shims (``cnn_infer`` / ``plan_layers`` / configs'
+    plan helpers / direct ``CNNServingEngine`` construction) are gone after
+    their one-release window;
   - LM configs compile through the same entry point (run + serve).
 """
 import json
@@ -23,7 +25,6 @@ import numpy as np
 import pytest
 
 import repro
-from repro import _deprecation
 from repro.models.cnn import CNNLayer, cnn_forward, init_cnn
 
 C = CNNLayer
@@ -65,12 +66,12 @@ def test_public_surface():
     assert repro.CNNServingEngine is not None
     assert repro.ServingEngine is not None
     with pytest.raises(AttributeError):
-        repro.not_a_thing
+        _ = repro.not_a_thing
 
 
 def test_import_repro_clean_under_deprecation_errors():
-    """CI contract: importing the public package fires no DeprecationWarning
-    (the shims only warn when *called*)."""
+    """CI contract: importing the public package fires no
+    DeprecationWarning."""
     env = dict(os.environ)
     src = os.path.join(os.path.dirname(os.path.dirname(
         os.path.abspath(__file__))), "src")
@@ -127,7 +128,8 @@ def test_compile_rejects_bare_layers_without_input_hw():
 
 
 # ---------------------------------------------------------------------------
-# compile().run(): bit-exact vs cnn_infer, fp32-close vs the XLA oracle
+# compile().run(): bit-exact vs the pre-facade jitted path, fp32-close vs
+# the XLA oracle
 
 
 @pytest.mark.parametrize("model_name", ["vgg16", "yolov3-tiny"])
@@ -147,13 +149,11 @@ def test_compile_run_bit_exact_vs_cnn_infer_and_oracle(model_name):
     got = compiled.run(x)
 
     plans = tuple(s.plan for s in compiled.network_plan(2).steps)
-    with warnings.catch_warnings():
-        warnings.simplefilter("ignore", DeprecationWarning)
-        from repro.models.cnn import cnn_infer
+    from repro.models.cnn import _cnn_infer
 
-        ref = cnn_infer(params, desc.layers, x, impl="jax", plans=plans)
+    ref = _cnn_infer(params, desc.layers, x, impl="jax", plans=plans)
     assert jnp.array_equal(got, ref), (
-        f"facade diverged from cnn_infer by "
+        f"facade diverged from _cnn_infer by "
         f"{float(jnp.abs(got - ref).max())}"
     )
     oracle = cnn_forward(params, desc.layers, x, impl="xla")
@@ -275,86 +275,46 @@ def test_serve_rides_compilation_without_warning(tmp_path):
 
 
 # ---------------------------------------------------------------------------
-# Deprecation shims: one warning, identical outputs
+# The PR-5 deprecation shims are gone after their one-release window
 
 
-def _one_deprecation(calls):
-    """Run ``calls`` (callables) twice each; return the DeprecationWarnings
-    raised the first time around."""
-    _deprecation.reset()
-    with warnings.catch_warnings(record=True) as ws:
-        warnings.simplefilter("always")
-        outs = [fn() for fn in calls for _ in (0, 1)]
-    return [w for w in ws if issubclass(w.category, DeprecationWarning)], outs
-
-
-def test_cnn_infer_shim_warns_once_and_matches():
-    model, params = _tiny_net()
-    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, 8, 3))
-    compiled = repro.compile(model, params, repro.ExecutionOptions(
-        impl="jax", cache_path=None, batch=2, pretransform=False,
-    ))
-    from repro.models.cnn import cnn_infer
-
-    deps, outs = _one_deprecation(
-        [lambda: cnn_infer(params, model.layers, x, impl="jax")]
-    )
-    assert len(deps) == 1, [str(w.message) for w in deps]
-    assert "repro.compile" in str(deps[0].message)
-    assert jnp.array_equal(outs[0], outs[1])
-    # The shim's output is what the facade reproduces bit-exactly when both
-    # run the same plans; unplanned cnn_infer stays within fp32 tolerance.
-    np.testing.assert_allclose(outs[0], compiled.run(x), rtol=1e-5, atol=1e-5)
-
-
-def test_plan_layers_and_config_helpers_warn_once():
+def test_legacy_shims_removed():
+    """The facade is the only entry point: the one-release shims
+    (``cnn_infer`` / ``plan_layers`` / configs' plan helpers / the
+    ``_deprecation`` module itself) no longer exist, while the internals
+    the facade rides (``_cnn_infer`` / ``_plan_layers``) remain."""
+    import repro.models.cnn as cnn
     from repro.configs import vgg16, yolov3
-    from repro.core.planner import Planner
-    from repro.models.cnn import _plan_layers, plan_layers
 
-    model, _ = _tiny_net()
-    planner = Planner(impl="jax", cache_path=None)
-    deps, outs = _one_deprecation([
-        lambda: plan_layers(model.layers, 8, 8, planner),
-        lambda: vgg16.plan_network(planner, input_hw=(16, 16)),
-        lambda: yolov3.network_plan(planner, layers=yolov3.TINY_LAYERS,
-                                    input_hw=(16, 16)),
-    ])
-    assert len(deps) == 3, [str(w.message) for w in deps]
-    # Identical outputs to the non-deprecated internals.
-    assert outs[0] == _plan_layers(model.layers, 8, 8, planner)
-    from repro.core.netplan import plan_network
-
-    assert outs[4] == plan_network(yolov3.TINY_LAYERS, 16, 16, planner)
+    for mod, gone in ((cnn, ("cnn_infer", "plan_layers")),
+                      (vgg16, ("plan_network", "network_plan")),
+                      (yolov3, ("plan_network", "network_plan"))):
+        for name in gone:
+            assert not hasattr(mod, name), f"{mod.__name__}.{name}"
+    assert hasattr(cnn, "_cnn_infer") and hasattr(cnn, "_plan_layers")
+    with pytest.raises(ImportError):
+        from repro import _deprecation  # noqa: F401
 
 
-def test_cnn_engine_direct_construction_warns_once_and_matches(tmp_path):
+def test_cnn_engine_requires_compilation():
+    """Direct ``CNNServingEngine(layers, params, ...)`` construction was a
+    deprecated shim; it now raises, pointing at the facade path — which
+    still works."""
     model, params = _tiny_net()
     from repro.serving import CNNServingEngine
 
-    imgs = np.asarray(
-        jax.random.normal(jax.random.PRNGKey(1), (2, 8, 8, 3))
-    )
-    _deprecation.reset()
-    with warnings.catch_warnings(record=True) as ws:
-        warnings.simplefilter("always")
-        eng1 = CNNServingEngine(model.layers, params, (8, 8), buckets=(2,),
-                                impl="jax",
-                                cache_path=os.path.join(tmp_path, "p.json"))
-        eng2 = CNNServingEngine(model.layers, params, (8, 8), buckets=(2,),
-                                impl="jax",
-                                cache_path=os.path.join(tmp_path, "p.json"))
-    deps = [w for w in ws if issubclass(w.category, DeprecationWarning)]
-    assert len(deps) == 1, [str(w.message) for w in deps]
-    # The legacy engine is now a thin layer over the facade — same outputs.
+    with pytest.raises(TypeError, match="from_compiled"):
+        CNNServingEngine(model.layers, params, (8, 8), buckets=(2,),
+                         impl="jax", cache_path=None)
     compiled = repro.compile(model, params, repro.ExecutionOptions(
         impl="jax", cache_path=None, buckets=(2,),
     ))
-    facade_eng = compiled.serve()
-    np.testing.assert_allclose(
-        eng1.infer(imgs), facade_eng.infer(imgs), rtol=1e-5, atol=1e-5
+    eng = compiled.serve()
+    imgs = np.asarray(
+        jax.random.normal(jax.random.PRNGKey(1), (2, 8, 8, 3))
     )
-    assert eng2.warm                               # bucket plans persisted
+    ref = np.asarray(compiled.run(jnp.asarray(imgs)))
+    np.testing.assert_allclose(eng.infer(imgs), ref, rtol=1e-5, atol=1e-5)
 
 
 # ---------------------------------------------------------------------------

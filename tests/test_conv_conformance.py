@@ -402,13 +402,13 @@ def test_cnn_infer_matches_unfused_forward(model):
     """Whole-network acceptance: the jitted fused entry point (batchnorm
     folded, epilogues in-kernel) matches the unfused XLA-conv forward."""
     from repro.configs import vgg16, yolov3
-    from repro.models.cnn import cnn_forward, cnn_infer, init_cnn
+    from repro.models.cnn import _cnn_infer, cnn_forward, init_cnn
 
     layers = vgg16.LAYERS if model == "vgg16" else yolov3.TINY_LAYERS
     params = init_cnn(jax.random.PRNGKey(0), layers)
     x = jax.random.normal(jax.random.PRNGKey(1), (1, 32, 32, 3))
     ref = cnn_forward(params, layers, x, impl="xla")
-    got = cnn_infer(params, layers, x)
+    got = _cnn_infer(params, layers, x)
     scale = float(jnp.max(jnp.abs(ref)))
     np.testing.assert_allclose(got, ref, rtol=1e-4, atol=1e-4 * scale)
 

@@ -263,13 +263,23 @@ def _tiny_net():
     return layers, params
 
 
-def test_cnn_engine_bucket_dispatch_and_results(tmp_path):
-    from repro.serving import CNNServingEngine
+def _facade_engine(layers, params, buckets, cache_path, **kw):
+    """Engine over the tiny net via the facade (direct construction of
+    ``CNNServingEngine`` was a one-release shim and is gone)."""
+    import repro
 
+    compiled = repro.compile(
+        repro.CNNModel(layers, (8, 8), name="tiny-netplan"), params,
+        repro.ExecutionOptions(impl="jax", cache_path=cache_path,
+                               buckets=tuple(buckets)),
+    )
+    return compiled.serve(**kw)
+
+
+def test_cnn_engine_bucket_dispatch_and_results(tmp_path):
     layers, params = _tiny_net()
     cache = os.path.join(tmp_path, "plans.json")
-    eng = CNNServingEngine(layers, params, (8, 8), buckets=(1, 2, 4),
-                           impl="jax", cache_path=cache)
+    eng = _facade_engine(layers, params, (1, 2, 4), cache)
     rng = np.random.default_rng(0)
     imgs = rng.normal(size=(5, 8, 8, 3)).astype(np.float32)
     uids = [eng.submit(im) for im in imgs]
@@ -288,11 +298,9 @@ def test_cnn_engine_bucket_dispatch_and_results(tmp_path):
 
 
 def test_cnn_engine_pads_tail_bucket(tmp_path):
-    from repro.serving import CNNServingEngine
-
     layers, params = _tiny_net()
-    eng = CNNServingEngine(layers, params, (8, 8), buckets=(4,), impl="jax",
-                           cache_path=os.path.join(tmp_path, "p.json"))
+    eng = _facade_engine(layers, params, (4,),
+                         os.path.join(tmp_path, "p.json"))
     rng = np.random.default_rng(1)
     imgs = rng.normal(size=(3, 8, 8, 3)).astype(np.float32)
     out = eng.infer(imgs)
@@ -305,25 +313,22 @@ def test_cnn_engine_rejects_bad_shapes_and_buckets(tmp_path):
     from repro.serving import CNNServingEngine
 
     layers, params = _tiny_net()
+    # Bucket validation still fires before the constructed-from-compilation
+    # check, so an empty ladder is a ValueError, not the shim TypeError.
     with pytest.raises(ValueError):
         CNNServingEngine(layers, params, (8, 8), buckets=(),
                          cache_path=None)
-    eng = CNNServingEngine(layers, params, (8, 8), buckets=(1,), impl="jax",
-                           cache_path=None)
+    eng = _facade_engine(layers, params, (1,), None)
     with pytest.raises(ValueError):
         eng.submit(np.zeros((4, 4, 3), np.float32))
 
 
 def test_cnn_engine_warm_cache_per_bucket(tmp_path):
-    from repro.serving import CNNServingEngine
-
     layers, params = _tiny_net()
     cache = os.path.join(tmp_path, "plans.json")
-    cold = CNNServingEngine(layers, params, (8, 8), buckets=(1, 2),
-                            impl="jax", cache_path=cache)
+    cold = _facade_engine(layers, params, (1, 2), cache)
     assert cold.planner.stats["tunes"] > 0
-    warm = CNNServingEngine(layers, params, (8, 8), buckets=(1, 2),
-                            impl="jax", cache_path=cache)
+    warm = _facade_engine(layers, params, (1, 2), cache)
     assert warm.warm and warm.planner.network_hits == 2
 
 
@@ -350,11 +355,9 @@ def test_ci_smoke_two_layer_chain_interpret():
 
 def test_ci_smoke_engine_bucket_roundtrip(tmp_path):
     """CI serving smoke: one bucket round-trip through the engine."""
-    from repro.serving import CNNServingEngine
-
     layers, params = _tiny_net()
-    eng = CNNServingEngine(layers, params, (8, 8), buckets=(2,), impl="jax",
-                           cache_path=os.path.join(tmp_path, "p.json"))
+    eng = _facade_engine(layers, params, (2,),
+                         os.path.join(tmp_path, "p.json"))
     imgs = np.random.default_rng(2).normal(size=(2, 8, 8, 3)).astype(
         np.float32
     )

@@ -140,11 +140,11 @@ def test_measure_mode_smoke():
 
 
 def test_planner_threads_through_cnn_forward(tmp_path):
-    """plan_layers + cnn_forward(plans=...) == unplanned forward, and the
+    """_plan_layers + cnn_forward(plans=...) == unplanned forward, and the
     whole network's plans persist."""
     import jax
 
-    from repro.models.cnn import CNNLayer, cnn_forward, init_cnn, plan_layers
+    from repro.models.cnn import CNNLayer, _plan_layers, cnn_forward, init_cnn
 
     layers = (
         CNNLayer("conv", out_channels=8, kernel=3, stride=1),
@@ -154,7 +154,7 @@ def test_planner_threads_through_cnn_forward(tmp_path):
     )
     cache = os.path.join(tmp_path, "net.json")
     planner = Planner(cache_path=cache)
-    plans = plan_layers(layers, 16, 16, planner, in_channels=3)
+    plans = _plan_layers(layers, 16, 16, planner, in_channels=3)
     assert [p is not None for p in plans] == [True, False, True, True]
 
     params = init_cnn(jax.random.PRNGKey(0), layers)
@@ -164,7 +164,7 @@ def test_planner_threads_through_cnn_forward(tmp_path):
     np.testing.assert_allclose(planned, unplanned, rtol=2e-4, atol=2e-4)
 
     warm = Planner(cache_path=cache)
-    plan_layers(layers, 16, 16, warm, in_channels=3)
+    _plan_layers(layers, 16, 16, warm, in_channels=3)
     assert warm.stats["tunes"] == 0
 
 
@@ -258,7 +258,7 @@ def test_fused_plan_drives_cnn_forward_fusion():
     import jax
 
     from repro.models.cnn import (
-        CNNLayer, cnn_forward, fold_batchnorm, init_cnn, plan_layers,
+        CNNLayer, _plan_layers, cnn_forward, fold_batchnorm, init_cnn,
     )
 
     layers = (
@@ -267,7 +267,7 @@ def test_fused_plan_drives_cnn_forward_fusion():
                  batch_norm=False),
     )
     planner = Planner(cache_path=None, fuse_epilogue=True)
-    plans = plan_layers(layers, 16, 16, planner, in_channels=3)
+    plans = _plan_layers(layers, 16, 16, planner, in_channels=3)
     assert all(p.fused_epilogue for p in plans)
 
     params = fold_batchnorm(init_cnn(jax.random.PRNGKey(0), layers), layers)

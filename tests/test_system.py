@@ -66,7 +66,7 @@ def test_cell_matrix_counts():
     runnable = [c for c in cells if c[2]]
     skipped = [c for c in cells if not c[2]]
     assert len(runnable) == 31 and len(skipped) == 9
-    for _, shape, _, reason in skipped:
+    for _, _shape, _, reason in skipped:
         assert reason  # every skip carries a recorded reason
 
 
